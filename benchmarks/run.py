@@ -1,0 +1,227 @@
+"""Benchmark harness — one function per claim/table (CSV to stdout).
+
+The paper is theory-only (no experiment tables), so the benches validate
+its RESULT statements empirically and measure the systems layers built
+on them:
+
+  result1_worst_case_steps   — O(1) allocate/free (Result 1.2)
+  result1_vs_baselines       — worst-case steps vs lock / Treiber
+  result1_space_overhead     — Theta(p^2) metadata (Result 1.4)
+  result1_memory_blowup      — vs Hoard-style Theta(p*S) (section 3.1)
+  result2_shared_op_cost     — O(p) shared stack ops (Result 2.1)
+  jax_block_pool_o1          — device pool: cost independent of m
+  jax_paged_kv_append        — paged KV append throughput
+  serving_throughput         — continuous-batching engine tok/s
+
+Output: ``name,us_per_call,derived`` CSV rows.
+"""
+
+import random
+import statistics
+import time
+
+
+def _time_us(fn, n=5):
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
+
+
+def result1_worst_case_steps():
+    from repro.core import SimContext, WaitFreeAllocator, Scheduler
+    worst = {}
+    us = 0.0
+    for p in (2, 4, 8, 16, 32):
+        ctx = SimContext(p, seed=0)
+        alloc = WaitFreeAllocator(ctx, shared_batches=4 * p)
+        sched = Scheduler(seed=0)
+
+        def phased(pid, alloc=alloc):
+            # alloc/free bursts sized to force shared-pool transfers
+            held = []
+            for ph in range(4):
+                if ph % 2 == 0:
+                    for _ in range(alloc.ell * 3):
+                        held.append((yield from alloc.allocate(pid)))
+                else:
+                    while held:
+                        yield from alloc.free(pid, held.pop())
+
+        for pid in range(p):
+            sched.add(pid, phased(pid))
+        t0 = time.perf_counter()
+        sched.run("random")
+        us = (time.perf_counter() - t0) * 1e6 / max(len(ctx.history), 1)
+        worst[p] = max(op.steps for op in ctx.history if op.completed)
+    derived = "worst_steps_by_p=" + "/".join(
+        f"{p}:{w}" for p, w in worst.items())
+    print(f"result1_worst_case_steps,{us:.2f},{derived}")
+    return worst
+
+
+def result1_vs_baselines():
+    from repro.core import SimContext, Scheduler
+    from repro.core.baselines import LockFreeListAllocator, TreiberAllocator
+    p = 8
+    rows = {}
+    for name, cls in (("lock", LockFreeListAllocator),
+                      ("treiber", TreiberAllocator)):
+        ctx = SimContext(p, seed=0)
+        alloc = cls(ctx, m=4096)
+        sched = Scheduler(seed=0)
+
+        def workload(pid, alloc=alloc):
+            held = []
+            rng = random.Random(pid)
+            for _ in range(150):
+                if not held or (len(held) < 16 and rng.random() < 0.6):
+                    b = yield from alloc.allocate(pid)
+                    if b >= 0:
+                        held.append(b)
+                else:
+                    yield from alloc.free(pid, held.pop())
+
+        for pid in range(p):
+            sched.add(pid, workload(pid))
+        sched.run("bursty")
+        rows[name] = max(op.steps for op in ctx.history if op.completed)
+    from repro.core import WaitFreeAllocator, closed_loop
+    ctx = SimContext(p, seed=0)
+    ours = WaitFreeAllocator(ctx, shared_batches=4 * p)
+    sched = Scheduler(seed=0)
+    for pid in range(p):
+        sched.add(pid, closed_loop(pid, ours, 150, random.Random(pid),
+                                   scribble=False))
+    sched.run("bursty")
+    rows["ours"] = max(op.steps for op in ctx.history if op.completed)
+    print(f"result1_vs_baselines,0,"
+          f"worst_steps ours={rows['ours']} lock={rows['lock']} "
+          f"treiber={rows['treiber']}")
+    return rows
+
+
+def result1_space_overhead():
+    from repro.core import SimContext, WaitFreeAllocator
+    words = {}
+    for p in (2, 4, 8, 16, 32, 64):
+        ctx = SimContext(p, seed=0)
+        alloc = WaitFreeAllocator(ctx, shared_batches=4 * p)
+        words[p] = alloc.metadata_words()
+    # quadratic fit sanity: words(2p)/words(p) -> 4 as p grows
+    ratio = words[64] / words[32]
+    derived = ("words_by_p=" + "/".join(f"{p}:{w}" for p, w in words.items())
+               + f" growth_ratio_64v32={ratio:.2f}")
+    print(f"result1_space_overhead,0,{derived}")
+    return words
+
+
+def result1_memory_blowup():
+    from repro.core.baselines import HoardSpaceModel
+    rows = []
+    for p in (8, 64, 256):
+        hoard = HoardSpaceModel(p, superblock_blocks=1024)  # 4KB/4-word blk
+        ours = HoardSpaceModel.paper_blowup_blocks(p)
+        rows.append(f"p{p}:ours={ours},hoard={hoard.additive_blowup_blocks()}")
+    print(f"result1_memory_blowup,0,additive_blocks {' '.join(rows)}")
+
+
+def result2_shared_op_cost():
+    from repro.core import SimContext, Scheduler
+    from tests.test_core_psim import make_stack
+    costs = {}
+    for p in (2, 4, 8, 16):
+        ctx = SimContext(p, seed=0)
+        stack, _, _ = make_stack(ctx, nodes_per_proc=8 * p + 16)
+        sched = Scheduler(seed=0)
+        worst = [0]
+
+        def worker(pid, worst=worst, stack=stack, ctx=ctx):
+            for i in range(5):
+                rec = ctx.begin_op(pid, "push")
+                yield from stack.push(pid, pid * 100 + i)
+                ctx.end_op(rec)
+                worst[0] = max(worst[0], rec.steps)
+
+        for pid in range(p):
+            sched.add(pid, worker(pid))
+        sched.run("random")
+        costs[p] = worst[0]
+    derived = ("push_steps_by_p=" + "/".join(f"{p}:{c}" for p, c in costs.items())
+               + " (linear in p)")
+    print(f"result2_shared_op_cost,0,{derived}")
+
+
+def jax_block_pool_o1():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import block_pool
+    us_by_m = {}
+    for m in (1 << 10, 1 << 14, 1 << 18):
+        pool = block_pool.create(m)
+        alloc = jax.jit(block_pool.alloc)
+        mask = jnp.ones(64, bool)
+        pool2, ids = alloc(pool, mask)          # compile
+        jax.block_until_ready(ids)
+        us_by_m[m] = _time_us(
+            lambda: jax.block_until_ready(alloc(pool, mask)[1]), n=20)
+    derived = "us_by_pool_size=" + "/".join(
+        f"{m}:{u:.1f}" for m, u in us_by_m.items())
+    print(f"jax_block_pool_o1,{us_by_m[1 << 18]:.2f},{derived}")
+
+
+def jax_paged_kv_append():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import kv_cache
+    cache = kv_cache.create(num_pages=256, page_size=16, kv_heads=4,
+                            head_dim=64, max_seqs=16, max_pages_per_seq=16)
+    app = jax.jit(kv_cache.append)
+    k = jnp.ones((16, 4, 64))
+    v = jnp.ones((16, 4, 64))
+    act = jnp.ones(16, bool)
+    cache, ok = app(cache, k, v, act)
+    jax.block_until_ready(ok)
+    us = _time_us(lambda: jax.block_until_ready(app(cache, k, v, act)[1]),
+                  n=20)
+    print(f"jax_paged_kv_append,{us:.2f},tokens_per_call=16")
+
+
+def serving_throughput():
+    import numpy as np
+    import jax
+    from repro import models
+    from repro.configs import get_config, smoke_config
+    from repro.serving.engine import Request, ServingEngine
+    cfg = smoke_config(get_config("olmo-1b"))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, dp=2, b_local=2, max_len=64)
+    rng = np.random.RandomState(0)
+    for i in range(12):
+        eng.submit(Request(i, prompt=list(rng.randint(1, 255, 6)),
+                           max_new_tokens=6))
+    t0 = time.perf_counter()
+    eng.run(max_steps=400)
+    dt = time.perf_counter() - t0
+    tps = eng.stats["tokens_out"] / dt
+    us = dt * 1e6 / max(eng.stats["steps"], 1)
+    print(f"serving_throughput,{us:.0f},tok_per_s={tps:.1f} "
+          f"steps={eng.stats['steps']} alloc_O1_max={eng.stats['alloc_steps_max']}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    result1_worst_case_steps()
+    result1_vs_baselines()
+    result1_space_overhead()
+    result1_memory_blowup()
+    result2_shared_op_cost()
+    jax_block_pool_o1()
+    jax_paged_kv_append()
+    serving_throughput()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end serving driver: batched requests over paged KV cache.
+
+The engine admits requests through the paper's wait-free allocator
+(sequence slots = fixed-size blocks), streams prompts + generation
+through the paged decode path, and reports allocator + paging metrics.
+
+  PYTHONPATH=src python examples/serve_paged.py [--arch recurrentgemma-2b]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import models
+from repro.configs import get_config, smoke_config
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, dp=2, b_local=4, max_len=96,
+                           scheduler_lanes=4)
+
+    rng = np.random.RandomState(0)
+    reqs = []
+    for rid in range(args.requests):
+        r = Request(rid,
+                    prompt=list(rng.randint(1, cfg.vocab - 1,
+                                            rng.randint(4, 24))),
+                    max_new_tokens=args.max_new)
+        reqs.append(r)
+        engine.submit(r)
+
+    t0 = time.time()
+    peak_occ = 0.0
+    while engine.queue or engine.active:
+        engine.step()
+        peak_occ = max(peak_occ, engine.page_occupancy())
+    dt = time.time() - t0
+
+    lat = [r.finished_at - r.submitted_at for r in reqs]
+    s = engine.stats
+    print(f"arch={cfg.name}")
+    print(f"requests={s['admitted']} tokens={s['tokens_out']} "
+          f"steps={s['steps']} wall={dt:.1f}s "
+          f"throughput={s['tokens_out']/dt:.1f} tok/s")
+    print(f"p50 latency={sorted(lat)[len(lat)//2]*1e3:.0f}ms "
+          f"p99={sorted(lat)[-1]*1e3:.0f}ms")
+    print(f"peak page occupancy={peak_occ:.2%}  "
+          f"after drain={engine.page_occupancy():.2%} (0% = no leaks)")
+    print(f"host admission worst-case steps={s['alloc_steps_max']} "
+          f"(paper Result 1: O(1))")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

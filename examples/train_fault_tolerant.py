@@ -1,0 +1,45 @@
+"""Fault-tolerant training demo: checkpoint/restart + failure injection.
+
+Trains a reduced mixtral (MoE + SWA) while injecting two node failures;
+the loop restores from the last complete checkpoint and converges to the
+exact same state a failure-free run reaches (pure step function + pure
+data stream).
+
+  PYTHONPATH=src python examples/train_fault_tolerant.py
+"""
+
+import shutil
+
+import jax.numpy as jnp
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    for d in ("/tmp/ft_a", "/tmp/ft_b"):
+        shutil.rmtree(d, ignore_errors=True)
+
+    print("=== run A: no failures ===")
+    state_a, losses_a = train_main([
+        "--arch", "mixtral-8x7b", "--smoke", "--steps", "24",
+        "--save-every", "6", "--ckpt-dir", "/tmp/ft_a"])
+
+    print("=== run B: failure injected at step 15 ===")
+    state_b, losses_b = train_main([
+        "--arch", "mixtral-8x7b", "--smoke", "--steps", "24",
+        "--save-every", "6", "--ckpt-dir", "/tmp/ft_b",
+        "--inject-failure-at", "15"])
+
+    pa, _, _ = state_a
+    pb, _, _ = state_b
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32))))
+             for a, b in zip(
+                 jnp.tree_util.tree_leaves(pa), jnp.tree_util.tree_leaves(pb))]
+    print(f"max param diff after recovery vs failure-free: {max(diffs):.2e}")
+    assert max(diffs) < 1e-5, "recovery must be bit-faithful"
+    print("fault-tolerant recovery is exact.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Sharded checkpointing with atomic index and async save.
+
+Layout: ``<dir>/step_<N>/``
+  * ``shard_<k>.npz``  — flat {path: array} for this host's shard
+  * ``INDEX.json``     — written LAST (atomic rename); a checkpoint
+    without INDEX is incomplete and ignored on restore
+
+Fault-tolerance contract (runtime/fault.py):
+  * saves never corrupt the previous checkpoint (new directory, atomic
+    index rename);
+  * ``latest_step`` only reports complete checkpoints;
+  * async mode runs serialization in a worker thread — the train loop's
+    deamortized "delayed work" slice, the same discipline as the paper's
+    ``run_delayed_step``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif hasattr(tree, "_fields"):          # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten_into(tree: Any, flat: Dict[str, np.ndarray], prefix: str = ""):
+    if isinstance(tree, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in tree.items()}
+    if hasattr(tree, "_fields"):
+        return type(tree)(*(
+            _unflatten_into(getattr(tree, k), flat, f"{prefix}{k}/")
+            for k in tree._fields))
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(
+            _unflatten_into(v, flat, f"{prefix}{i}/")
+            for i, v in enumerate(tree))
+    if tree is None:
+        return None
+    arr = flat[prefix[:-1]]
+    return jax.numpy.asarray(arr, dtype=tree.dtype).reshape(tree.shape)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, shard_id: int = 0, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.shard_id = shard_id
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: Any, async_: bool = False) -> None:
+        def np_safe(a):
+            a = np.asarray(a)
+            if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+                return a.astype(np.float32)   # lossless; restore re-casts
+            return a
+        flat = {k: np_safe(v) for k, v in _flatten(state).items()}
+        if async_:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        d = self.dir / f"step_{step:08d}"
+        d.mkdir(parents=True, exist_ok=True)
+        np.savez(d / f"shard_{self.shard_id}.npz", **flat)
+        tmp = d / ".INDEX.tmp"
+        tmp.write_text(json.dumps({
+            "step": step,
+            "shards": [self.shard_id],
+            "keys": sorted(flat),
+        }))
+        os.replace(tmp, d / "INDEX.json")       # atomic completion marker
+        self._gc()
+
+    def _gc(self) -> None:
+        done = sorted(p for p in self.dir.glob("step_*")
+                      if (p / "INDEX.json").exists())
+        for p in done[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        done = sorted(p for p in self.dir.glob("step_*")
+                      if (p / "INDEX.json").exists())
+        if not done:
+            return None
+        return int(done[-1].name.split("_")[1])
+
+    def restore(self, step: int, like: Any) -> Any:
+        d = self.dir / f"step_{step:08d}"
+        assert (d / "INDEX.json").exists(), "incomplete checkpoint"
+        flat = dict(np.load(d / f"shard_{self.shard_id}.npz"))
+        return _unflatten_into(like, flat)

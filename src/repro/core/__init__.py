@@ -1,0 +1,22 @@
+"""Core of the reproduction: the paper's wait-free fixed-size allocator.
+
+Faithful layer (simulated asynchronous shared memory):
+  sim, memory, psim, allocator, scheduler, linearizability, baselines
+
+TPU-native layer (JAX, SPMD):
+  block_pool, hier_pool, kv_cache
+"""
+
+from .sim import NULL, SimContext, Register, RegisterArray, CASWord, LLSC
+from .memory import BlockMemory
+from .psim import PSimStack
+from .allocator import WaitFreeAllocator, PoolExhausted, DEAMORT_C
+from .scheduler import Scheduler, closed_loop
+from .linearizability import check_alloc_history, WGStackChecker, Event
+
+__all__ = [
+    "NULL", "SimContext", "Register", "RegisterArray", "CASWord", "LLSC",
+    "BlockMemory", "PSimStack", "WaitFreeAllocator", "PoolExhausted",
+    "DEAMORT_C", "Scheduler", "closed_loop", "check_alloc_history",
+    "WGStackChecker", "Event",
+]

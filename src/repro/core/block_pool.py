@@ -1,0 +1,96 @@
+"""Fixed-size block pool as a pure-functional JAX state machine.
+
+TPU-native translation of the paper's constant-time discipline: the pool
+is a free-*stack* of block ids plus a stack pointer; ``alloc``/``free``
+are fixed-shape gathers/scatters whose HLO cost is O(R) for R requests
+and — the paper's key property — **independent of the pool size m** (no
+scans over the pool, no compaction).  All functions are jit-compatible
+and differentiable-free (integer state).
+
+Request batching: callers pass a fixed-width request vector with a mask
+(SPMD programs need static shapes); each masked-off slot costs nothing
+semantically.  NULL = -1 ids mark failed/masked allocations.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NULL = jnp.int32(-1)
+
+
+class BlockPool(NamedTuple):
+    """free_ids[0:top] are the available block ids (a stack)."""
+
+    free_ids: jax.Array     # int32[m]
+    top: jax.Array          # int32 scalar — number of free blocks
+
+
+def create(num_blocks: int) -> BlockPool:
+    return BlockPool(
+        free_ids=jnp.arange(num_blocks - 1, -1, -1, dtype=jnp.int32),
+        top=jnp.int32(num_blocks),
+    )
+
+
+def num_free(pool: BlockPool) -> jax.Array:
+    return pool.top
+
+
+def alloc(pool: BlockPool, mask: jax.Array) -> Tuple[BlockPool, jax.Array]:
+    """Allocate one block per True slot of ``mask`` (bool[R]).
+
+    Returns (new_pool, ids[R]) with ids = NULL where mask is False or the
+    pool had too few blocks (allocation is all-or-nothing per slot, in
+    slot order).  O(R) work, independent of m.
+    """
+    mask = mask.astype(jnp.int32)
+    # slot i takes the (rank_i)-th block from the top of the stack
+    rank = jnp.cumsum(mask) * mask            # 1-based rank among granted
+    have = rank <= pool.top                   # enough blocks for this slot?
+    take = (mask == 1) & have
+    idx = pool.top - rank                     # stack position (top-1 .. )
+    idx = jnp.where(take, idx, 0)
+    ids = jnp.where(take, pool.free_ids[idx], NULL)
+    n_taken = jnp.sum(take.astype(jnp.int32))
+    return BlockPool(pool.free_ids, pool.top - n_taken), ids.astype(jnp.int32)
+
+
+def free(pool: BlockPool, ids: jax.Array) -> BlockPool:
+    """Return blocks to the pool; slots with id == NULL are ignored.
+
+    O(R) scatter, independent of m.  Double-free protection is the
+    caller's contract (as in the paper: free requires a live block).
+    """
+    valid = ids >= 0
+    rank = jnp.cumsum(valid.astype(jnp.int32)) * valid  # 1-based
+    pos = pool.top + rank - 1
+    pos = jnp.where(valid, pos, jnp.int32(pool.free_ids.shape[0]))  # drop
+    free_ids = pool.free_ids.at[pos].set(ids, mode="drop")
+    n = jnp.sum(valid.astype(jnp.int32))
+    return BlockPool(free_ids, pool.top + n)
+
+
+def alloc_batch(pool: BlockPool, n: int) -> Tuple[BlockPool, jax.Array]:
+    """Allocate a contiguous batch of exactly ``n`` ids (static n) —
+    the paper's batch-granularity transfer.  Returns ids[n] (all NULL if
+    the pool holds fewer than n)."""
+    ok = pool.top >= n
+    start = jnp.maximum(pool.top - n, 0)
+    ids = jax.lax.dynamic_slice(pool.free_ids, (start,), (n,))
+    ids = jnp.where(ok, ids, NULL)
+    new_top = jnp.where(ok, pool.top - n, pool.top)
+    return BlockPool(pool.free_ids, new_top), ids.astype(jnp.int32)
+
+
+def free_batch(pool: BlockPool, ids: jax.Array) -> BlockPool:
+    """Return a full batch (static length; all ids valid or all NULL)."""
+    n = ids.shape[0]
+    ok = ids[0] >= 0
+    updated = jax.lax.dynamic_update_slice(pool.free_ids, ids, (pool.top,))
+    free_ids = jnp.where(ok, updated, pool.free_ids)
+    new_top = jnp.where(ok, pool.top + n, pool.top)
+    return BlockPool(free_ids, new_top)

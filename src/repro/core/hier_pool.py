@@ -1,0 +1,141 @@
+"""Two-level (private / shared) block pool — the paper's structure in SPMD.
+
+Each *lane* (a serving request slot or a data-parallel shard) owns a
+private stack of block ids with capacity ``3 * ell``; a shared pool
+(:mod:`block_pool`) holds the rest.  Exactly as in the paper:
+
+* ``alloc`` / ``free`` touch **only the lane's private stack** — O(1)
+  array ops per lane, fully vectorized across lanes, no cross-lane
+  coordination (the common case);
+* ``rebalance`` is the deamortized shared-pool traffic: lanes whose
+  private pool dropped below ``ell`` pull a batch of ``ell`` blocks from
+  the shared pool, lanes that exceed ``3*ell - ell`` push a batch back.
+  It is called once per engine step, off the per-token critical path —
+  the moral equivalent of ``run_delayed_step``.
+
+Invariant (paper section 4.2): with ell >= max per-step demand, a lane's
+private pool never runs dry between rebalances, so ``alloc`` never needs
+the shared pool synchronously.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import block_pool
+from .block_pool import BlockPool, NULL
+
+
+class HierPool(NamedTuple):
+    shared: BlockPool
+    private_ids: jax.Array    # int32[L, 3*ell] — per-lane stacks
+    private_top: jax.Array    # int32[L]
+    ell: jax.Array            # int32 scalar — batch size (static-ish)
+
+
+def create(num_blocks: int, num_lanes: int, ell: int) -> HierPool:
+    """All blocks start in the shared pool except one warm batch per lane."""
+    cap = 3 * ell
+    assert num_blocks >= num_lanes * ell, "need >= one batch per lane"
+    shared = block_pool.create(num_blocks)
+    private_ids = jnp.full((num_lanes, cap), NULL, dtype=jnp.int32)
+    private_top = jnp.zeros((num_lanes,), dtype=jnp.int32)
+    pool = HierPool(shared, private_ids, private_top, jnp.int32(ell))
+    # warm every lane with one batch (sequential init, not on hot path)
+    def warm(i, pool):
+        shared, ids = block_pool.alloc_batch(pool.shared, ell)
+        private_ids = jax.lax.dynamic_update_slice(
+            pool.private_ids, ids[None, :], (i, 0))
+        private_top = pool.private_top.at[i].set(ell)
+        return HierPool(shared, private_ids, private_top, pool.ell)
+    return jax.lax.fori_loop(0, num_lanes, warm, pool)
+
+
+def alloc(pool: HierPool, want: jax.Array) -> Tuple[HierPool, jax.Array]:
+    """Per-lane allocate: want bool[L] -> ids int32[L] (NULL if denied).
+
+    Touches only private state: one gather + one subtract per lane.
+    """
+    want = want.astype(jnp.int32)
+    have = pool.private_top > 0
+    take = (want == 1) & have
+    idx = jnp.maximum(pool.private_top - 1, 0)
+    ids = jnp.take_along_axis(pool.private_ids, idx[:, None], axis=1)[:, 0]
+    ids = jnp.where(take, ids, NULL)
+    new_top = pool.private_top - take.astype(jnp.int32)
+    return pool._replace(private_top=new_top), ids
+
+
+def free(pool: HierPool, ids: jax.Array) -> HierPool:
+    """Per-lane free: ids int32[L] (NULL = no-op for that lane).
+
+    Frees go to the lane's own private pool, as in the paper.  If a
+    private stack is at capacity the block spills directly to the shared
+    pool (bounded leak path; rebalance keeps this rare).
+    """
+    valid = ids >= 0
+    cap = pool.private_ids.shape[1]
+    fits = pool.private_top < cap
+    local = valid & fits
+    pos = jnp.where(local, pool.private_top, 0)
+    rows = jnp.arange(ids.shape[0])
+    private_ids = pool.private_ids.at[rows, pos].set(
+        jnp.where(local, ids, pool.private_ids[rows, pos]))
+    private_top = pool.private_top + local.astype(jnp.int32)
+    spill = jnp.where(valid & ~fits, ids, NULL)
+    shared = block_pool.free(pool.shared, spill)
+    return HierPool(shared, private_ids, private_top, pool.ell)
+
+
+def rebalance(pool: HierPool) -> HierPool:
+    """Deamortized shared-pool traffic (one call per engine step).
+
+    Each lane moves at most one batch of ``ell`` blocks per call:
+      * refill if private_top <  ell      (paper: pop a batch)
+      * drain  if private_top > 2*ell     (paper: push a batch at 3*ell;
+        2*ell keeps headroom for a full step of frees, mirroring the
+        paper's ell >= 3p slack)
+    Work is O(L * ell) per call, independent of pool size m.
+    """
+    L, cap = pool.private_ids.shape
+
+    def lane_step(i, pool):
+        ell = pool.ell
+        top = pool.private_top[i]
+
+        def refill(pool):
+            shared, ids = block_pool.alloc_batch(
+                pool.shared, int(pool.private_ids.shape[1]) // 3)
+            got = ids[0] >= 0
+            top = pool.private_top[i]
+            # place batch above current top
+            updated = jax.lax.dynamic_update_slice(
+                pool.private_ids[i], ids, (top,))
+            private_ids = pool.private_ids.at[i].set(
+                jnp.where(got, updated, pool.private_ids[i]))
+            private_top = pool.private_top.at[i].add(
+                jnp.where(got, ids.shape[0], 0))
+            return HierPool(shared, private_ids, private_top, pool.ell)
+
+        def drain(pool):
+            n = int(pool.private_ids.shape[1]) // 3
+            top = pool.private_top[i]
+            start = top - n
+            ids = jax.lax.dynamic_slice(pool.private_ids[i], (start,), (n,))
+            shared = block_pool.free_batch(pool.shared, ids)
+            private_top = pool.private_top.at[i].add(-n)
+            return HierPool(shared, pool.private_ids, private_top, pool.ell)
+
+        pool = jax.lax.cond(top < ell, refill, lambda p: p, pool)
+        top2 = pool.private_top[i]
+        pool = jax.lax.cond(top2 > 2 * ell, drain, lambda p: p, pool)
+        return pool
+
+    return jax.lax.fori_loop(0, L, lane_step, pool)
+
+
+def total_free(pool: HierPool) -> jax.Array:
+    return pool.shared.top + jnp.sum(pool.private_top)

@@ -1,0 +1,117 @@
+"""Paged KV cache built on the block pool — the allocator's main client.
+
+vLLM-style paging adapted to TPU: the KV store is a pool of fixed-size
+*pages* of ``page_size`` tokens; each sequence owns a page table (list of
+page ids).  Appending a token is O(1) array ops; crossing a page
+boundary allocates a page from the :mod:`hier_pool`/:mod:`block_pool`
+(constant time, the paper's contribution).  Attention kernels read
+through the page table (see ``repro.kernels.paged_attention``).
+
+Layout choice for TPU: pages store K and V as
+``[num_pages, page_size, kv_heads, head_dim]`` so that a page is a
+(page_size x head_dim) VMEM tile per head — head_dim is kept a multiple
+of 128 by configs, aligning gathers with the MXU/VPU lanes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import block_pool
+from .block_pool import BlockPool, NULL
+
+
+class PagedKVCache(NamedTuple):
+    pool: BlockPool           # page allocator
+    k_pages: jax.Array        # [num_pages, page_size, kv_heads, head_dim]
+    v_pages: jax.Array        # [num_pages, page_size, kv_heads, head_dim]
+    page_tables: jax.Array    # int32[max_seqs, max_pages_per_seq]
+    seq_lens: jax.Array       # int32[max_seqs] — tokens currently stored
+
+
+def create(num_pages: int, page_size: int, kv_heads: int, head_dim: int,
+           max_seqs: int, max_pages_per_seq: int,
+           dtype=jnp.bfloat16) -> PagedKVCache:
+    return PagedKVCache(
+        pool=block_pool.create(num_pages),
+        k_pages=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
+        v_pages=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
+        page_tables=jnp.full((max_seqs, max_pages_per_seq), NULL, jnp.int32),
+        seq_lens=jnp.zeros((max_seqs,), jnp.int32),
+    )
+
+
+def page_size(cache: PagedKVCache) -> int:
+    return cache.k_pages.shape[1]
+
+
+def append(cache: PagedKVCache, k: jax.Array, v: jax.Array,
+           active: jax.Array) -> Tuple["PagedKVCache", jax.Array]:
+    """Append one token of K/V per active sequence.
+
+    k, v: [max_seqs, kv_heads, head_dim]; active: bool[max_seqs].
+    Returns (cache, ok[max_seqs]) — ok False if a page allocation failed.
+    O(max_seqs) work, independent of cache size (paper's discipline).
+    """
+    S = cache.seq_lens.shape[0]
+    psz = page_size(cache)
+    pos_in_page = cache.seq_lens % psz
+    page_idx = cache.seq_lens // psz
+
+    needs_page = active & (pos_in_page == 0)
+    pool, new_ids = block_pool.alloc(cache.pool, needs_page)
+    ok = jnp.where(needs_page, new_ids >= 0, True) & active
+
+    rows = jnp.arange(S)
+    page_tables = cache.page_tables.at[rows, page_idx].set(
+        jnp.where(needs_page & ok, new_ids,
+                  cache.page_tables[rows, page_idx]))
+
+    page_ids = page_tables[rows, page_idx]
+    write = ok & (page_ids >= 0)
+    tgt = jnp.where(write, page_ids, 0)
+    k_pages = cache.k_pages.at[tgt, pos_in_page].set(
+        jnp.where(write[:, None, None], k.astype(cache.k_pages.dtype),
+                  cache.k_pages[tgt, pos_in_page]))
+    v_pages = cache.v_pages.at[tgt, pos_in_page].set(
+        jnp.where(write[:, None, None], v.astype(cache.v_pages.dtype),
+                  cache.v_pages[tgt, pos_in_page]))
+
+    seq_lens = cache.seq_lens + write.astype(jnp.int32)
+    return PagedKVCache(pool, k_pages, v_pages, page_tables, seq_lens), ok
+
+
+def release(cache: PagedKVCache, seq_mask: jax.Array) -> PagedKVCache:
+    """Free all pages of the masked sequences (one batch-free per call).
+
+    O(max_seqs * max_pages_per_seq) scatter — independent of num_pages.
+    """
+    S, P = cache.page_tables.shape
+    to_free = jnp.where(seq_mask[:, None], cache.page_tables, NULL)
+    pool = block_pool.free(cache.pool, to_free.reshape(-1))
+    page_tables = jnp.where(seq_mask[:, None], NULL, cache.page_tables)
+    seq_lens = jnp.where(seq_mask, 0, cache.seq_lens)
+    return PagedKVCache(pool, cache.k_pages, cache.v_pages,
+                        page_tables, seq_lens)
+
+
+def gather_kv(cache: PagedKVCache, seq_id: int | jax.Array,
+              max_len: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Materialize a sequence's K/V up to max_len (reference path / tests).
+
+    Production attention reads pages directly via the kernel; this is the
+    jnp oracle used by ref implementations and the CPU dry-run path.
+    """
+    psz = page_size(cache)
+    n_pages = max_len // psz
+    table = jax.lax.dynamic_slice(
+        cache.page_tables, (seq_id, 0), (1, n_pages))[0]
+    safe = jnp.maximum(table, 0)
+    k = cache.k_pages[safe].reshape(n_pages * psz, *cache.k_pages.shape[2:])
+    v = cache.v_pages[safe].reshape(n_pages * psz, *cache.v_pages.shape[2:])
+    valid = (jnp.arange(n_pages * psz) <
+             cache.seq_lens[seq_id]) & jnp.repeat(table >= 0, psz)
+    return k, v, valid

@@ -1,0 +1,133 @@
+"""Linearizability / safety checkers.
+
+Two checkers:
+
+1. :func:`check_alloc_history` — allocator-specific safety on a recorded
+   history: a linearizable fixed-size allocator must admit a sequential
+   witness where every ``allocate`` returns an *available* block and every
+   ``free`` targets a *live* block.  For allocate/free this reduces to
+   interval conditions on each block's alternating alloc/free timeline
+   (allocations of a block must strictly interleave with its frees), which
+   we verify directly — no exponential search needed.
+
+2. :class:`WGStackChecker` — a small Wing & Gong style exhaustive
+   linearizability checker for stack histories (used on the P-SIM shared
+   stack with small histories).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .sim import OpRecord
+
+
+def check_alloc_history(history: Sequence[OpRecord]) -> List[str]:
+    """Safety check for allocate/free histories.
+
+    Uses invocation/response *steps* as the real-time order.  Returns a
+    list of violation strings (empty == pass).
+
+    Conditions (each implies no sequential witness exists if violated):
+      * a block returned by two allocations with no free of that block
+        whose interval could linearize between them;
+      * a free of a block that was never allocated, or whose latest
+        possible allocation responds after the free's invocation window
+        closes without overlap.
+    """
+    errs: List[str] = []
+    per_block: Dict[Any, List[OpRecord]] = {}
+    for op in history:
+        if not op.completed:
+            continue
+        if op.name == "allocate":
+            per_block.setdefault(op.result, []).append(op)
+        elif op.name == "free":
+            per_block.setdefault(op.arg, []).append(op)
+
+    for block, ops in per_block.items():
+        # Sort by response step: a valid linearization must alternate
+        # alloc, free, alloc, free ... when ops on one block are totally
+        # ordered in real time.  With overlap we only flag definite
+        # violations: two allocs both *responding* before any free of the
+        # block *invokes* in between.
+        ops_sorted = sorted(ops, key=lambda o: (o.response_step, o.invoke_step))
+        live = False
+        prev = None
+        for op in ops_sorted:
+            if op.name == "allocate":
+                if live and prev is not None and prev.response_step < op.invoke_step:
+                    # prev alloc strictly precedes this alloc; no free of
+                    # this block linearized in between.
+                    errs.append(
+                        f"block {block}: double allocation "
+                        f"(ops {prev.opid} then {op.opid})")
+                live = True
+                prev = op
+            else:  # free
+                if not live and prev is not None and prev.response_step < op.invoke_step:
+                    errs.append(
+                        f"block {block}: free while available (op {op.opid})")
+                live = False
+                prev = op
+    return errs
+
+
+# ---------------------------------------------------------------- WG checker
+
+@dataclass
+class Event:
+    pid: int
+    op: str          # 'push' | 'pop'
+    arg: Any
+    result: Any
+    invoke: int
+    response: int
+
+
+class WGStackChecker:
+    """Exhaustive linearizability check for small stack histories."""
+
+    def __init__(self, events: Sequence[Event]):
+        self.events = list(events)
+
+    def check(self) -> bool:
+        events = sorted(self.events, key=lambda e: e.invoke)
+        n = len(events)
+        if n > 14:
+            raise ValueError("exhaustive checker limited to small histories")
+
+        def search(done: frozenset, stack: Tuple, memo: set) -> bool:
+            if (done, stack) in memo:
+                return False
+            if len(done) == n:
+                return True
+            # an op may linearize now if it hasn't, and every op whose
+            # response precedes its invocation has already linearized
+            min_resp = min(
+                (events[i].response for i in range(n) if i not in done),
+                default=float("inf"))
+            for i in range(n):
+                if i in done:
+                    continue
+                e = events[i]
+                if e.invoke > min_resp:
+                    continue   # must linearize someone responding earlier
+                new_stack = None
+                if e.op == "push":
+                    new_stack = stack + (e.arg,)
+                else:
+                    if stack:
+                        if e.result == stack[-1]:
+                            new_stack = stack[:-1]
+                    else:
+                        if e.result is None or e.result == -1:
+                            new_stack = stack
+                if new_stack is not None:
+                    if search(done | {i}, new_stack, memo):
+                        return True
+            memo.add((done, stack))
+            return False
+
+        return search(frozenset(), tuple(), set())

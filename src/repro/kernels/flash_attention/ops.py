@@ -1,0 +1,20 @@
+"""Jit'd wrapper for flash attention (TPU kernel / jnp ref dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention as _kernel
+from .ref import flash_attention_ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "force"))
+def flash_attention(q, k, v, causal: bool = True, force: str = "auto"):
+    if force == "kernel" or (force == "auto"
+                             and jax.default_backend() == "tpu"):
+        return _kernel(q, k, v, causal=causal)
+    if force == "interpret":
+        return _kernel(q, k, v, causal=causal, interpret=True)
+    return _ref(q, k, v, causal=causal)

@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for paged decode attention.
+
+Selects the Pallas kernel on TPU and the pure-jnp reference elsewhere
+(including the CPU dry-run); both share the exact semantics, which the
+kernel test suite asserts over shape/dtype sweeps in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import paged_attention as _kernel
+from .ref import paged_attention_ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                    force: str = "auto"):
+    """Dispatch: force in {"auto", "kernel", "interpret", "ref"}."""
+    if force == "kernel" or (force == "auto" and _on_tpu()):
+        return _kernel(q, k_pages, v_pages, page_table, seq_lens)
+    if force == "interpret":
+        return _kernel(q, k_pages, v_pages, page_table, seq_lens,
+                       interpret=True)
+    return _ref(q, k_pages, v_pages, page_table, seq_lens)

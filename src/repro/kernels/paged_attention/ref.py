@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """q: [B, H, hd]; pages: [P, psz, KH, hd]; table: [B, maxp]; lens: [B].
+
+    GQA: H q-heads read from KH kv-heads (H % KH == 0).
+    """
+    B, H, hd = q.shape
+    P, psz, KH, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    L = maxp * psz
+    safe = jnp.maximum(page_table, 0)
+    k = k_pages[safe].reshape(B, L, KH, hd)
+    v = v_pages[safe].reshape(B, L, KH, hd)
+    if KH != H:
+        k = jnp.repeat(k, H // KH, axis=2)
+        v = jnp.repeat(v, H // KH, axis=2)
+    pos = jnp.arange(L)
+    valid = (pos[None] < seq_lens[:, None]) & jnp.repeat(
+        page_table >= 0, psz, axis=1)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

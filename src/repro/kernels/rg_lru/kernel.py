@@ -1,0 +1,80 @@
+"""Pallas TPU RG-LRU recurrence kernel.
+
+The gate matmuls run on the MXU outside (they are plain GEMMs); this
+kernel computes the elementwise first-order recurrence
+``h_t = a_t * h_{t-1} + b_t`` which has no matmul content — a VPU
+kernel.  grid = (B, d_tiles, n_chunks) with the chunk axis sequential;
+the carry h [1, d_tile] sits in VMEM scratch.  Within a chunk the
+recurrence is evaluated by a log2(Q)-step Blelloch-style doubling on the
+[Q, d_tile] tile (vector ops only), rather than a Q-step scalar loop:
+
+  (a, b) o (a', b') = (a a', a' b + b')
+
+d_tile = 256 lanes x f32; Q = 128 rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h_ref, hout_ref, h_scr, *, Q: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h_ref[0]
+
+    a = a_ref[0].astype(jnp.float32)          # [Q, dt]
+    b = b_ref[0].astype(jnp.float32)
+
+    # inclusive scan of (a, b) pairs along axis 0 by doubling
+    k = 1
+    while k < Q:
+        a_sh = jnp.pad(a, ((k, 0), (0, 0)))[:Q]          # a shifted by k
+        b_sh = jnp.pad(b, ((k, 0), (0, 0)))[:Q]
+        mask = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0) >= k
+        b = jnp.where(mask, a * b_sh + b, b)
+        a = jnp.where(mask, a * a_sh, a)
+        k *= 2
+
+    h0 = h_scr[...]                            # [1, dt]
+    h = a * h0 + b                             # [Q, dt] all prefixes applied
+    h_scr[...] = h[Q - 1:Q]
+    hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def rg_lru(a, b, h0=None, chunk: int = 128, d_tile: int = 256,
+           interpret: bool = False):
+    """a, b: [B, S, d] -> (h [B, S, d], h_final [B, d])."""
+    B, S, d = a.shape
+    Q = min(chunk, S)
+    assert S % Q == 0 and d % d_tile == 0 or d <= d_tile
+    if d < d_tile:
+        d_tile = d
+    nc = S // Q
+    nd = d // d_tile
+    if h0 is None:
+        h0 = jnp.zeros((B, d), jnp.float32)
+
+    grid = (B, nd, nc)
+    hs = pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, d_tile), lambda bb, dd, cc: (bb, cc, dd)),
+            pl.BlockSpec((1, Q, d_tile), lambda bb, dd, cc: (bb, cc, dd)),
+            pl.BlockSpec((1, 1, d_tile), lambda bb, dd, cc: (bb, 0, dd)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, d_tile), lambda bb, dd, cc: (bb, cc, dd)),
+        scratch_shapes=[pltpu.VMEM((1, d_tile), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B, S, d), jnp.float32),
+        interpret=interpret,
+    )(a, b, h0[:, None, :])
+    return hs, hs[:, -1]

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the RG-LRU recurrence."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rg_lru as _kernel
+from .ref import rg_lru_ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def rg_lru(a, b, h0=None, force: str = "auto"):
+    if force == "kernel" or (force == "auto"
+                             and jax.default_backend() == "tpu"):
+        return _kernel(a, b, h0)
+    if force == "interpret":
+        return _kernel(a, b, h0, interpret=True)
+    return _ref(a, b, h0)

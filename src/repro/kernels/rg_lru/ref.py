@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t, sequential.  a, b: [B, S, d]."""
+    B, S, d = a.shape
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    h_init = h0 if h0 is not None else jnp.zeros((B, d), jnp.float32)
+    h_fin, hs = jax.lax.scan(
+        step, h_init.astype(jnp.float32),
+        (a.swapaxes(0, 1).astype(jnp.float32),
+         b.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1), h_fin

@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the SSD scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan as _kernel
+from .ref import ssd_scan_ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def ssd_scan(x, dt, A, Bm, Cm, D, force: str = "auto"):
+    if force == "kernel" or (force == "auto"
+                             and jax.default_backend() == "tpu"):
+        y, h = _kernel(x, dt, A, Bm, Cm, D)
+        return y, h.transpose(0, 1, 3, 2)   # [B,H,P,N] convention
+    if force == "interpret":
+        y, h = _kernel(x, dt, A, Bm, Cm, D, interpret=True)
+        return y, h.transpose(0, 1, 3, 2)
+    return _ref(x, dt, A, Bm, Cm, D)

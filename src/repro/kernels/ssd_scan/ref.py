@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD scan: direct sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, D):
+    """Sequential SSM recurrence (the definition SSD must match).
+
+    x: [B, S, H, P]; dt: [B, S, H]; A: [H]; Bm, Cm: [B, S, N]; D: [H].
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t + D x_t
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        a = jnp.exp(dtt * A[None, :])                       # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        h = h * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          Bm.swapaxes(0, 1).astype(jnp.float32),
+          Cm.swapaxes(0, 1).astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h_fin

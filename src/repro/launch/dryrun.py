@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module (jax
+locks the device count at first init).  Do not set that flag globally —
+smoke tests and benches should see one device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results/dryrun
+
+Per cell: jit(step).lower(*ShapeDtypeStructs).compile() on the
+production mesh, then record memory_analysis(), cost_analysis(), and the
+parsed roofline terms (see roofline.py) to JSON.
+"""
+
+import argparse
+import json
+import math
+import pathlib
+import time
+import traceback
+
+import jax
+
+from .. import models
+from ..configs import SHAPES, get_config, list_archs
+from ..configs.base import base_kind
+from . import roofline as rf
+from . import steps as steps_mod
+from .mesh import make_production_mesh
+
+
+def cell_is_runnable(arch: str, shape_name: str) -> bool:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.supports_long:
+        return False   # sub-quadratic rule — see DESIGN.md
+    return True
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D; x3 for train (fwd+bwd)."""
+    n_active = models.count_active_params(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: str = None, save_hlo: str = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    spec = steps_mod.cell_specs(cfg, shape, mesh, rules=rules)
+
+    from ..parallel import partition
+    partition.set_activation_mesh(mesh, seq_shard=(rules == "sp"))
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            spec["fn"],
+            in_shardings=spec["in_shardings"],
+            donate_argnums=spec["donate_argnums"])
+        lowered = jitted.lower(*spec["args"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    partition.set_activation_mesh(None)
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_info[k] = int(v)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+
+    roof = rf.from_compiled(compiled, chips,
+                            model_flops=model_flops_for(cfg, shape))
+    hbm_per_dev = (mem_info.get("argument_size_in_bytes", 0)
+                   + mem_info.get("temp_size_in_bytes", 0)
+                   - mem_info.get("alias_size_in_bytes", 0))
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "rules": rules or ("fsdp" if shape.mode == "train" else "tp"),
+        "mode": shape.mode,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_info,
+        "hbm_per_device_gb": round(hbm_per_dev / 2**30, 3),
+        "xla_cost_analysis": {k: float(ca.get(k, 0.0))
+                              for k in ("flops", "bytes accessed")},
+        "roofline": roof.as_dict(),
+    }
+    if save_hlo:
+        pathlib.Path(save_hlo).write_text(compiled.as_text())
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for arch in archs:
+        for shape in shapes:
+            if not cell_is_runnable(arch, shape):
+                print(f"SKIP {arch} x {shape} (sub-quadratic rule)")
+                continue
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+        if args.rules:
+            tag += f"__{args.rules}"
+        path = outdir / (tag + ".json")
+        if args.skip_existing and path.exists():
+            print(f"SKIP (exists) {tag}")
+            continue
+        print(f"=== {tag} ===", flush=True)
+        try:
+            res = run_cell(arch, shape, mp, rules=args.rules,
+                           save_hlo=args.save_hlo)
+            path.write_text(json.dumps(res, indent=2))
+            r = res["roofline"]
+            print(f"  ok: compile={res['compile_s']}s "
+                  f"hbm/dev={res['hbm_per_device_gb']}GB "
+                  f"t_comp={r['t_compute_s']:.2e} t_mem={r['t_memory_s']:.2e} "
+                  f"t_coll={r['t_collective_s']:.2e} "
+                  f"bottleneck={r['bottleneck']} mfu<={r['mfu_bound']:.2f}",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            path.with_suffix(".err").write_text(traceback.format_exc())
+            print(f"  FAIL: {type(e).__name__}: {e}", flush=True)
+    print(f"done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import to get placeholder devices (see dryrun.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def nearest_mesh_for(n_devices: int, model_parallel: int = 16):
+    """Elastic fallback: best (data, model) factorization for a device set.
+
+    Used by runtime/elastic.py when membership changes: keep the model
+    axis if divisible, shrink data parallelism to what remains.
+    """
+    while model_parallel > 1 and n_devices % model_parallel:
+        model_parallel //= 2
+    data = n_devices // model_parallel
+    return (data, model_parallel), ("data", "model")

@@ -1,0 +1,79 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSONs.
+
+  PYTHONPATH=src python -m repro.launch.report results/dryrun_v2 [fallback_dir]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def load(dirs):
+    cells = {}
+    for d in reversed(dirs):                      # earlier dirs = fallback
+        for p in sorted(pathlib.Path(d).glob("*.json")):
+            r = json.loads(p.read_text())
+            key = (r["arch"], r["shape"], r["mesh"], r.get("rules", ""))
+            base_key = (r["arch"], r["shape"], r["mesh"])
+            cells[base_key] = r
+    return cells
+
+
+def fmt(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.3f}" if x < 10 else f"{x:.1f}"
+
+
+def table(cells, mesh):
+    rows = []
+    hdr = ("| arch | shape | HBM/dev GB | t_compute s | t_memory s | "
+           "t_coll s | bottleneck | useful FLOP frac | MFU bound |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {r['hbm_per_device_gb']} | "
+            f"{fmt(rf['t_compute_s'])} | {fmt(rf['t_memory_s'])} | "
+            f"{fmt(rf['t_collective_s'])} | {rf['bottleneck']} | "
+            f"{rf['useful_flop_fraction']:.3f} | {rf['mfu_bound']:.3f} |")
+    return "\n".join(rows)
+
+
+def dryrun_section(cells):
+    ok_sp = sum(1 for k in cells if k[2] == "16x16")
+    ok_mp = sum(1 for k in cells if k[2] == "2x16x16")
+    lines = [f"Single-pod (16x16 = 256 chips) cells compiled: {ok_sp}",
+             f"Multi-pod (2x16x16 = 512 chips) cells compiled: {ok_mp}", ""]
+    lines.append("| arch | shape | mesh | compile s | HBM/dev GB | "
+                 "largest collective |")
+    lines.append("|" + "---|" * 6)
+    for (arch, shape, m), r in sorted(cells.items()):
+        rf = r["roofline"]
+        lines.append(f"| {arch} | {shape} | {m} | {r['compile_s']} | "
+                     f"{r['hbm_per_device_gb']} | "
+                     f"{rf.get('largest_collective', '')[:60]} |")
+    return "\n".join(lines)
+
+
+def main():
+    dirs = sys.argv[1:] or ["results/dryrun_v2", "results/dryrun"]
+    cells = load(dirs)
+    print("## Dry-run summary\n")
+    print(dryrun_section(cells))
+    print("\n## Roofline (single-pod 16x16, per §Roofline)\n")
+    print(table(cells, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(table(cells, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

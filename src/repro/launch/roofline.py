@@ -1,0 +1,382 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e targets):
+
+  compute    = HLO_FLOPs_per_device / 197e12      (bf16 peak per chip)
+  memory     = HLO_bytes_per_device / 819e9       (HBM bandwidth)
+  collective = collective_bytes_per_device / 50e9 (ICI per link)
+
+``compiled.cost_analysis()`` is per-device after SPMD partitioning but
+counts ``while`` bodies (our layer scans) exactly once, so it badly
+undercounts deep models.  We therefore walk the optimized HLO text with
+a mini cost model:
+
+  * computations are parsed into per-computation symbol tables
+    (name -> shape), and a call-graph multiplier is propagated:
+    while bodies multiply by their trip count (recovered from the
+    loop-condition constant), fusions/calls inherit the caller's count;
+  * FLOPs: ``dot``/``convolution`` ops (2 x result x contracted dims) —
+    the MXU work.  VPU elementwise FLOPs are excluded (<2% for these
+    models; noted in EXPERIMENTS.md);
+  * bytes: per top-level instruction, result + operand bytes (fusion
+    internals excluded — fusion boundaries are exactly where HBM traffic
+    happens).  gather/dynamic-slice/dynamic-update-slice are charged for
+    the data actually moved, not the full operand;
+  * collectives: all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute result bytes x transfer factor (ring all-reduce
+    moves ~2x), times the call-graph multiplier.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip, TPU v5e
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_KINDS = tuple(_COLL_FACTOR)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "after-all", "iota", "rng",
+}
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"([a-z][a-zA-Z\d\-]*)\(")
+_ONE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _ONE_SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _ONE_SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str            # result shape string
+    op: str
+    operands: List[str]
+    line: str
+
+
+def parse_hlo(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if s.endswith("{") and (") -> " in s or s.startswith("ENTRY")):
+            name = s.split("(")[0].strip().split()[-1].lstrip("%")
+            cur = name
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None or "=" not in s:
+            continue
+        nm = _NAME_RE.match(s)
+        if not nm:
+            continue
+        name = nm.group(1)
+        rest = s[nm.end():]
+        om = _OPCODE_RE.search(rest)
+        if not om:
+            continue
+        op = om.group(1)
+        shape = rest[:om.start()].strip()   # result type (may be a tuple)
+        # operand names: %refs inside the opcode's balanced (...)
+        after = rest[om.end():]
+        depth, args = 1, ""
+        for ch in after:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        operands = re.findall(r"%([\w\.\-]+)", args)
+        comps[cur].append(Instr(name, shape, op, operands, s))
+    return comps
+
+
+def _call_multipliers(comps: Dict[str, List[Instr]]) -> Dict[str, float]:
+    """computation -> number of executions of one entry invocation."""
+    entry = None
+    for name in comps:
+        if name.startswith("main") or entry is None:
+            if entry is None:
+                entry = name
+    # the ENTRY computation is the first parsed with ENTRY marker; fall
+    # back to a root heuristic: computation never called by others.
+    called = set()
+    calls: Dict[str, List[Tuple[str, float]]] = {}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            line = ins.line
+            mult = 1.0
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                trip = _trip_count(comps, mc.group(1)) if mc else 1
+                if mb:
+                    calls.setdefault(cname, []).append((mb.group(1), trip))
+                    called.add(mb.group(1))
+                if mc:
+                    calls.setdefault(cname, []).append((mc.group(1), trip + 1))
+                    called.add(mc.group(1))
+                continue
+            for attr in ("calls", "to_apply", "body", "branch_computations",
+                         "true_computation", "false_computation"):
+                for mm in re.finditer(attr + r"=\{?%?([\w\.\-, %]+)\}?", line):
+                    for target in re.findall(r"[\w\.\-]+", mm.group(1)):
+                        if target in comps:
+                            calls.setdefault(cname, []).append((target, 1.0))
+                            called.add(target)
+    roots = [c for c in comps if c not in called]
+    mult: Dict[str, float] = {c: (1.0 if c in roots else 0.0) for c in comps}
+    # propagate (call graph is a DAG; sweep to fixpoint)
+    for _ in range(len(comps) + 1):
+        new = {c: (1.0 if c in roots else 0.0) for c in comps}
+        for cname, targets in calls.items():
+            for tgt, k in targets:
+                new[tgt] += mult.get(cname, 0.0) * k
+        if new == mult:
+            break
+        mult = new
+    return mult
+
+
+def _trip_count(comps: Dict[str, List[Instr]], cond: str) -> float:
+    best = 1
+    for ins in comps.get(cond, []):
+        for mm in re.finditer(r"constant\((\d+)\)", ins.line):
+            best = max(best, int(mm.group(1)))
+    return float(best)
+
+
+def _fusion_bodies(comps: Dict[str, List[Instr]]) -> set:
+    out = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if m:
+                    out.add(m.group(1))
+    return out
+
+
+def _dot_flops(ins: Instr, symbols: Dict[str, str]) -> float:
+    out_elems = max(1, math.prod(_shape_dims(ins.shape)))
+    lhs = symbols.get(ins.operands[0]) if ins.operands else None
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contracted = 1
+    if lhs and cdims:
+        dims = _shape_dims(lhs)
+        for d in cdims.group(1).split(","):
+            if d and int(d) < len(dims):
+                contracted *= dims[int(d)]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(ins: Instr, symbols: Dict[str, str]) -> float:
+    out_elems = max(1, math.prod(_shape_dims(ins.shape)))
+    rhs = symbols.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    kernel = math.prod(_shape_dims(rhs)) if rhs else 1
+    # rough: 2 * out * (kernel/out_channels)
+    return 2.0 * out_elems * max(kernel, 1) ** 0.5
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes_weighted: float = 0.0
+    coll_bytes_raw: float = 0.0
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+    largest_collective: Tuple[str, float] = ("", 0.0)
+
+
+def _dus_update_bytes(comp_instrs: List[Instr]) -> Optional[int]:
+    """If a fused computation performs dynamic-update-slice(s), the real
+    traffic is the update slices (XLA aliases the big buffer in place)."""
+    total = 0
+    symbols = {i.name: i.shape for i in comp_instrs}
+    found = False
+    for ins in comp_instrs:
+        if ins.op == "dynamic-update-slice":
+            found = True
+            if len(ins.operands) > 1:
+                total += _shape_bytes(symbols.get(ins.operands[1], ""))
+    return total if found else None
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    mult = _call_multipliers(comps)
+    fused = _fusion_bodies(comps)
+    cost = HloCost()
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 1.0)
+        if m == 0.0:
+            m = 1.0
+        symbols = {i.name: i.shape for i in instrs}
+        in_fusion = cname in fused
+        for ins in instrs:
+            if ins.op == "dot":
+                cost.flops += m * _dot_flops(ins, symbols)
+            elif ins.op == "convolution":
+                cost.flops += m * _conv_flops(ins, symbols)
+            if in_fusion:
+                continue  # bytes counted at the fusion call site
+            opk = ins.op
+            if opk in _SKIP_BYTES_OPS:
+                continue
+            if opk.rstrip("-start").rstrip("-done") in _COLL_KINDS or \
+               any(opk.startswith(k) for k in _COLL_KINDS):
+                kind = next(k for k in _COLL_KINDS if opk.startswith(k))
+                b = _shape_bytes(ins.shape)
+                # XLA-CPU promotes bf16 all-reduce accumulation to f32
+                # (to_apply=%add..._promoted); TPU reduces in bf16 on the
+                # wire — charge the pre-promotion payload.
+                if "promoted" in ins.line and "f32" in ins.shape:
+                    b //= 2
+                cost.coll_bytes_weighted += m * b * _COLL_FACTOR[kind]
+                cost.coll_bytes_raw += m * b
+                cost.coll_counts[kind] = cost.coll_counts.get(kind, 0) + int(m)
+                if m * b > cost.largest_collective[1]:
+                    cost.largest_collective = (f"{kind} {ins.shape}", m * b)
+                cost.bytes += m * 2 * b
+                continue
+            res_b = _shape_bytes(ins.shape)
+            if opk in ("gather", "dynamic-slice"):
+                cost.bytes += m * (2 * res_b)
+                continue
+            if opk in ("scatter", "dynamic-update-slice"):
+                upd = (_shape_bytes(symbols.get(ins.operands[1], ""))
+                       if len(ins.operands) > 1 else res_b)
+                cost.bytes += m * (2 * upd)
+                continue
+            if opk == "fusion":
+                mm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                callee = comps.get(mm.group(1), []) if mm else []
+                dus = _dus_update_bytes(callee)
+                if dus is not None:
+                    # in-place update: slice write+read + non-aliased reads
+                    others = sorted(
+                        (_shape_bytes(symbols.get(o, ""))
+                         for o in ins.operands), reverse=True)
+                    # drop the largest operand (the aliased buffer)
+                    extra = sum(others[1:]) if others else 0
+                    cost.bytes += m * (2 * dus + min(extra, res_b))
+                    continue
+            op_b = sum(_shape_bytes(symbols.get(o, ""))
+                       for o in ins.operands)
+            cost.bytes += m * (res_b + op_b)
+    return cost
+
+
+@dataclass
+class Roofline:
+    chips: int
+    flops: float                  # per-device MXU flops
+    hbm_bytes: float              # per-device bytes accessed
+    coll_bytes: float             # per-device weighted collective bytes
+    model_flops: float = 0.0      # 6*N*D useful flops, whole step, global
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+    largest_collective: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (global HLO flops)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline-implied MFU upper bound: useful flops / (peak x time)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def as_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "hlo_flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flop_fraction": self.useful_fraction,
+            "mfu_bound": self.mfu_bound,
+            "coll_counts": self.coll_counts,
+            "largest_collective": self.largest_collective,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float = 0.0) -> Roofline:
+    cost = analyze_hlo(compiled.as_text())
+    return Roofline(
+        chips=chips, flops=cost.flops, hbm_bytes=cost.bytes,
+        coll_bytes=cost.coll_bytes_weighted, model_flops=model_flops,
+        coll_counts=cost.coll_counts,
+        largest_collective=cost.largest_collective[0])

@@ -1,0 +1,57 @@
+"""Serving driver: continuous batching over the paged-KV engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+      --requests 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from .. import models
+from ..configs import get_config, smoke_config
+from ..serving.engine import Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--dp", type=int, default=2)
+    ap.add_argument("--b-local", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, dp=args.dp, b_local=args.b_local,
+                           max_len=args.max_len)
+    rng = np.random.RandomState(0)
+    for rid in range(args.requests):
+        engine.submit(Request(
+            rid, prompt=list(rng.randint(1, cfg.vocab - 1,
+                                         rng.randint(4, 12))),
+            max_new_tokens=args.max_new))
+    t0 = time.time()
+    engine.run()
+    dt = time.time() - t0
+    s = engine.stats
+    print(f"served {s['admitted']} requests, {s['tokens_out']} tokens in "
+          f"{s['steps']} engine steps ({dt:.1f}s, "
+          f"{s['tokens_out']/max(dt,1e-9):.1f} tok/s)")
+    print(f"host allocator worst-case op steps: {s['alloc_steps_max']} "
+          f"(O(1) — paper Result 1)")
+    print(f"page occupancy after drain: {engine.page_occupancy():.4f}")
+    return engine
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .model import (param_defs, init_params, param_shapes, count_params,
+                    count_active_params, loss_fn, prefill, decode_step)
+from .transformer import (DecodeState, decode_state_defs, forward_train,
+                          forward_prefill, forward_decode, model_defs)

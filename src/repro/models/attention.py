@@ -1,0 +1,231 @@
+"""Attention: blockwise-streaming (flash semantics in pure jnp), sliding
+window, and paged decode.
+
+The blockwise forms never materialize the [S, S] score matrix, so 32k
+prefill lowers with bounded memory; FLOPs/bytes in the compiled HLO are
+what the roofline reads.  The Pallas kernels in ``repro.kernels`` are the
+TPU execution path validated against these same semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg) -> Dict[str, ParamDef]:
+    d, H, KH, hd, dt = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.jdtype
+    return {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": ParamDef((d, KH, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": ParamDef((d, KH, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+
+
+def qkv(cfg, params, x, positions=None, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if rope:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k, n_heads):
+    """GQA: repeat kv heads to match q heads."""
+    KH = k.shape[2]
+    if KH == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // KH, axis=2)
+
+
+def blockwise_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Streaming softmax attention; q,k,v: [B, S, H, hd] (kv pre-expanded).
+
+    Scans over KV blocks with an online-softmax accumulator.  Memory is
+    O(block_q * block_k) per step.  Causality/window applied via masks;
+    the §Perf iteration adds block skipping (see kernels/ and
+    EXPERIMENTS.md).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # pad to block multiples; padded KV positions are masked out, padded
+    # Q rows are sliced off the output
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sq_p, Sk_p = Sq + pq, Sk + pk
+    nq, nk = Sq_p // block_q, Sk_p // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    qb = q.reshape(B, nq, block_q, H, hd).swapaxes(0, 1)      # [nq, B, bq, H, hd]
+    kb = k.reshape(B, nk, block_k, H, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nk, block_k, H, hd).swapaxes(0, 1)
+
+    q_pos = (q_offset + jnp.arange(Sq_p)).reshape(nq, block_q)
+    k_pos = jnp.arange(Sk_p).reshape(nk, block_k)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_block(qi_and_pos):
+        # jax.checkpoint => the backward pass recomputes this block's
+        # scores instead of saving [B,H,bq,Sk] residuals from the KV scan
+        # — flash-attention memory behavior with plain-jnp gradients.
+        qi, qpos = qi_and_pos                                  # [B,bq,H,hd], [bq]
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            ki, vi, kpos = kv
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, ki) * scale
+            mask = jnp.broadcast_to(kpos[None, :] < Sk, (block_q, block_k))
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None], s.astype(jnp.float32), NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qi.dtype), vi).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, H, block_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, k_pos))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out.swapaxes(1, 2).astype(q.dtype)              # [B, bq, H, hd]
+
+    out = jax.lax.map(q_block, (qb, q_pos))                    # [nq, B, bq, H, hd]
+    out = out.swapaxes(0, 1).reshape(B, Sq_p, H, hd)
+    return out[:, :Sq] if pq else out
+
+
+def local_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    window: int,
+    block_q: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Sliding-window causal attention with FLOPs ~ O(S * window).
+
+    For each q block only the [start, start + window + block_q) KV slice
+    is touched (dynamic_slice), so compute and bytes scale with the
+    window, not the sequence — this is what makes long_500k affordable
+    for SWA/local archs.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    span = window + block_q
+    if span >= Sk or Sq % block_q:
+        return blockwise_attention(q, k, v, causal=True, window=window,
+                                   q_offset=q_offset)
+    nq = Sq // block_q
+    scale = 1.0 / (hd ** 0.5)
+    qb = q.reshape(B, nq, block_q, H, hd).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_block(args):
+        i, qi = args
+        q0 = q_offset + i * block_q
+        start = jnp.clip(q0 - window + 1, 0, Sk - span)
+        ks = jax.lax.dynamic_slice(k, (0, start, 0, 0), (B, span, H, hd))
+        vs = jax.lax.dynamic_slice(v, (0, start, 0, 0), (B, span, H, hd))
+        qpos = q0 + jnp.arange(block_q)
+        kpos = start + jnp.arange(span)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, ks) * scale
+        mask = (qpos[:, None] >= kpos[None, :]) & (
+            qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None], s.astype(jnp.float32), NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(qi.dtype), vs)
+        return out
+
+    out = jax.lax.map(q_block, (jnp.arange(nq), qb))
+    return out.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+def decode_attention_paged(
+    q: jax.Array,                 # [B, H, hd] — single query token
+    k_pages: jax.Array,           # [num_pages, psz, KH, hd]
+    v_pages: jax.Array,
+    page_table: jax.Array,        # int32[B, max_pages]
+    seq_lens: jax.Array,          # int32[B]
+) -> jax.Array:
+    """Reference paged decode attention (jnp oracle; kernel in kernels/).
+
+    Gathers each sequence's pages through its block table and performs
+    masked single-query attention.  Bytes ~ the live KV working set —
+    exactly the memory-bound profile the paged_attention kernel tiles.
+    """
+    B, H, hd = q.shape
+    n_pages, psz, KH, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    L = max_pages * psz
+    safe = jnp.maximum(page_table, 0)
+    k = k_pages[safe]                         # [B, max_pages, psz, KH, hd]
+    v = v_pages[safe]
+    k = k.reshape(B, L, KH, hd)
+    v = v.reshape(B, L, KH, hd)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    pos = jnp.arange(L)
+    valid = (pos[None, :] < seq_lens[:, None]) & jnp.repeat(
+        page_table >= 0, psz, axis=1)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k) / (hd ** 0.5)
+    s = jnp.where(valid[:, None], s.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p.astype(q.dtype), v)
+
+
+def attention_train(cfg, params, x, kind: str, positions=None,
+                    causal: bool = True):
+    """Full-sequence attention layer application (train/prefill).
+
+    Returns (out, (k, v)) — k/v returned for prefill cache fill.
+    """
+    q, k, v = qkv(cfg, params, x, positions)
+    ke = _expand_kv(k, cfg.n_heads)
+    ve = _expand_kv(v, cfg.n_heads)
+    if kind == "local" and cfg.window is not None:
+        o = local_attention(q, ke, ve, cfg.window)
+    else:
+        o = blockwise_attention(q, ke, ve, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return out, (k, v)
+
+
+def cross_attention(cfg, params, x, enc_kv):
+    """Decoder cross-attention over (precomputed) encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k, v = enc_kv
+    ke = _expand_kv(k, cfg.n_heads)
+    ve = _expand_kv(v, cfg.n_heads)
+    o = blockwise_attention(q, ke, ve, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])

@@ -1,0 +1,147 @@
+"""Decode-state construction: empty state + prefill-cache loading.
+
+Host-side engine utilities (not jitted): the serving engine allocates
+prompt pages through the paper's allocator and scatters prefill K/V into
+them.  Layouts match :class:`repro.models.transformer.DecodeState`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .transformer import DecodeState, decode_state_defs, _positions
+
+
+def empty_decode_state(cfg, dp: int, b_local: int, max_len: int) -> DecodeState:
+    """Concrete zero state with full per-shard page pools."""
+    defs = decode_state_defs(cfg, dp, b_local, max_len)
+
+    def zeros(sds):
+        return jnp.zeros(sds.shape, sds.dtype)
+
+    kv_pages = jax.tree.map(zeros, defs.kv_pages)
+    rings = jax.tree.map(zeros, defs.rings)
+    rec = jax.tree.map(zeros, defs.rec)
+    pages_local = defs.pool_ids.shape[1]
+    pool_ids = jnp.broadcast_to(
+        jnp.arange(pages_local - 1, -1, -1, jnp.int32)[None], (dp, pages_local))
+    pool_top = jnp.full((dp,), pages_local, jnp.int32)
+    page_tables = jnp.full(defs.page_tables.shape, -1, jnp.int32)
+    seq_lens = jnp.zeros(defs.seq_lens.shape, jnp.int32)
+    enc_kv = jax.tree.map(zeros, defs.enc_kv) if defs.enc_kv is not None else None
+    return DecodeState(kv_pages, rings, rec, page_tables, seq_lens,
+                       pool_ids, pool_top, enc_kv)
+
+
+def load_prefill(cfg, state: DecodeState, caches: Dict[str, Any],
+                 prompt_len: int) -> DecodeState:
+    """Scatter dense prefill caches into the paged/ring/recurrent state.
+
+    caches: output of ``forward_prefill`` — attention caches are dense
+    (k, v) of [n_groups, B, S, KH, hd]; recurrent caches are final
+    states.  All B sequences share prompt_len.  Pages are taken from
+    each DP shard's private pool (sequentially — engine-side op).
+    """
+    dp, b_local, max_pages = state.page_tables.shape
+    psz = cfg.page_size
+    n_pages = (prompt_len + psz - 1) // psz
+    assert n_pages <= max_pages
+    st_kinds = _positions(cfg)
+
+    def split_cache(pos):
+        c = caches[pos]
+        if cfg.arch_kind == "encdec":
+            return c[0]     # (self_cache, cross_kv)
+        return c
+
+    def cross_kv(pos):
+        return caches[pos][1]
+
+    # --- page allocation: per shard, first b_local * n_pages pool entries
+    pool_ids = np.array(state.pool_ids)
+    pool_top = np.array(state.pool_top)
+    tables = np.full((dp, b_local, max_pages), -1, np.int32)
+    for d in range(dp):
+        for b in range(b_local):
+            for pg in range(n_pages):
+                pool_top[d] -= 1
+                tables[d, b, pg] = pool_ids[d, pool_top[d]]
+
+    new_kv_pages = {}
+    for pos, (kp, vp) in state.kv_pages.items():
+        kd, vd = split_cache(pos)                 # [n, B, S, KH, hd]
+        n, B, S, KH, hd = kd.shape
+        kd = np.asarray(kd).reshape(n, dp, b_local, S, KH, hd)
+        vd = np.asarray(vd).reshape(n, dp, b_local, S, KH, hd)
+        kp = np.asarray(kp).copy()
+        vp = np.asarray(vp).copy()
+        pad = n_pages * psz - prompt_len
+        if pad:
+            z = np.zeros((n, dp, b_local, pad, KH, hd), kd.dtype)
+            kd = np.concatenate([kd, z], axis=3)
+            vd = np.concatenate([vd, z], axis=3)
+        kd = kd.reshape(n, dp, b_local, n_pages, psz, KH, hd)
+        vd = vd.reshape(n, dp, b_local, n_pages, psz, KH, hd)
+        for d in range(dp):
+            for b in range(b_local):
+                pids = tables[d, b, :n_pages]
+                kp[:, d, pids] = kd[:, d, b]
+                vp[:, d, pids] = vd[:, d, b]
+        new_kv_pages[pos] = (jnp.asarray(kp), jnp.asarray(vp))
+
+    new_rings = {}
+    for pos, (kr, vr) in state.rings.items():
+        kd, vd = split_cache(pos)
+        n, B, S, KH, hd = kd.shape
+        W = kr.shape[3]
+        kd = np.asarray(kd).reshape(n, dp, b_local, S, KH, hd)
+        vd = np.asarray(vd).reshape(n, dp, b_local, S, KH, hd)
+        krn = np.asarray(kr).copy()
+        vrn = np.asarray(vr).copy()
+        take = min(W, prompt_len)
+        src = np.arange(prompt_len - take, prompt_len)
+        for s in src:
+            krn[:, :, :, s % W] = kd[:, :, :, s]
+            vrn[:, :, :, s % W] = vd[:, :, :, s]
+        new_rings[pos] = (jnp.asarray(krn), jnp.asarray(vrn))
+
+    new_rec = {}
+    for pos, st in state.rec.items():
+        c = split_cache(pos)                       # {"h": [n,B,...], "conv":}
+        new_rec[pos] = {
+            "h": jnp.asarray(np.asarray(c["h"]).reshape(st["h"].shape)),
+            "conv": jnp.asarray(np.asarray(c["conv"]).reshape(st["conv"].shape)),
+        }
+
+    enc_kv = state.enc_kv
+    if cfg.arch_kind == "encdec":
+        ks, vs = [], []
+        order = [f"pos{j}" for j in range(len(cfg.pattern))]
+        rem = [f"rem{j}" for j in range(len(cfg.remainder))]
+        for pos in order:
+            k, v = cross_kv(pos)                  # [n_groups, B, L, KH, hd]
+            ks.append(np.asarray(k))
+            vs.append(np.asarray(v))
+        # interleave pattern positions back into layer order
+        n_layers_grp = len(order) * cfg.n_groups
+        kcat = np.stack(ks, axis=1).reshape(n_layers_grp, *ks[0].shape[1:])
+        vcat = np.stack(vs, axis=1).reshape(n_layers_grp, *vs[0].shape[1:])
+        for pos in rem:
+            k, v = cross_kv(pos)
+            kcat = np.concatenate([kcat, np.asarray(k)], axis=0)
+            vcat = np.concatenate([vcat, np.asarray(v)], axis=0)
+        L = kcat.shape[0]
+        kcat = kcat.reshape(L, dp, b_local, *kcat.shape[2:])
+        vcat = vcat.reshape(L, dp, b_local, *vcat.shape[2:])
+        enc_kv = (jnp.asarray(kcat), jnp.asarray(vcat))
+
+    return DecodeState(
+        kv_pages=new_kv_pages, rings=new_rings, rec=new_rec,
+        page_tables=jnp.asarray(tables),
+        seq_lens=jnp.full((dp, b_local), prompt_len, jnp.int32),
+        pool_ids=jnp.asarray(pool_ids), pool_top=jnp.asarray(pool_top),
+        enc_kv=enc_kv)

@@ -1,0 +1,186 @@
+"""Parameter definitions, norms, RoPE, embeddings, dense FFN.
+
+Parameters live in nested dicts of arrays.  Shapes/axes are declared via
+:class:`ParamDef` trees so the same declaration yields (a) initialized
+arrays, (b) ``jax.ShapeDtypeStruct`` stand-ins for the dry-run, and
+(c) ``PartitionSpec`` trees from logical-axis rules
+(:mod:`repro.parallel.partition`).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]    # logical axis names, len == ndim
+    dtype: Any = jnp.float32
+    init: str = "normal"               # normal | zeros | ones
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(key: jax.Array, defs) -> Any:
+    """Initialize a pytree of ParamDefs into arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            arrs.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            arrs.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[0] if d.shape else 1
+            arrs.append(
+                (jax.random.normal(k, d.shape, jnp.float32)
+                 * (1.0 / math.sqrt(max(fan_in, 1)))).astype(d.dtype))
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def shape_tree(defs) -> Any:
+    """ShapeDtypeStruct stand-ins (dry-run path; no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def)
+
+
+# ----------------------------------------------------------------- norms
+
+def rmsnorm(x, scale=None, eps: float = 1e-6):
+    """RMSNorm with a bf16 primal chain.
+
+    Only the variance *reduction* runs in f32 (a per-row scalar); the
+    elementwise normalize/scale stays in x.dtype.  This keeps the big
+    [B,S,d] primals — and therefore their cotangents and any TP
+    all-reduce placed on them — in bf16 instead of f32, halving both
+    HBM traffic and collective bytes (EXPERIMENTS.md §Perf A2).
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    rs = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    y = x * rs
+    if scale is not None:
+        y = y * (1.0 + scale).astype(x.dtype)
+    return y
+
+
+def ln_nonparam(x, eps: float = 1e-5):
+    """OLMo-style non-parametric LayerNorm (bf16 primal chain)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    rs = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return (x - mu.astype(x.dtype)) * rs
+
+
+def norm_defs(cfg) -> Dict[str, ParamDef]:
+    if cfg.norm == "ln_nonparam":
+        return {}
+    return {"scale": ParamDef((cfg.d_model,), ("embed",), jnp.float32, "zeros")}
+
+
+def apply_norm(cfg, params, x):
+    if cfg.norm == "ln_nonparam":
+        return ln_nonparam(x)
+    return rmsnorm(x, params["scale"])
+
+
+# ----------------------------------------------------------------- rope
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                   # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- ffn
+
+def ffn_defs(cfg) -> Dict[str, ParamDef]:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.jdtype
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("embed", "mlp"), dt),
+            "w_up": ParamDef((d, f), ("embed", "mlp"), dt),
+            "w_down": ParamDef((f, d), ("mlp", "embed"), dt),
+        }
+    return {
+        "w_up": ParamDef((d, f), ("embed", "mlp"), dt),
+        "w_down": ParamDef((f, d), ("mlp", "embed"), dt),
+    }
+
+
+def ffn_apply(cfg, params, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ----------------------------------------------------------------- embeds
+
+def embed_defs(cfg) -> Dict[str, ParamDef]:
+    dt = cfg.jdtype
+    out = {"tok": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"), dt)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamDef(
+            (cfg.d_model, cfg.vocab), ("embed", "vocab"), dt)
+    return out
+
+
+def embed_apply(params, tokens):
+    return params["tok"][tokens]
+
+
+def logits_apply(cfg, params, x):
+    w = params.get("lm_head")
+    if w is None:
+        w = params["tok"].T
+    return x @ w
+
+
+def chunked_softmax_xent(cfg, embed_params, x, labels, chunk: int = 512):
+    """Cross-entropy without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; with remat the chunk logits are
+    recomputed in the backward pass.  Returns mean loss over tokens.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    xs = x[:, :n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1)
+    ys = labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(acc, xy):
+        xc, yc = xy
+        logits = logits_apply(cfg, embed_params, xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), (xs, ys))
+    # remainder (S not divisible by chunk)
+    if S % chunk:
+        xc, yc = x[:, n * chunk:], labels[:, n * chunk:]
+        logits = logits_apply(cfg, embed_params, xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        total = total + jnp.sum(logz - gold)
+    return total / (B * S)

@@ -1,0 +1,85 @@
+"""Top-level model API: params, losses, serve steps, parameter counts."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (ParamDef, chunked_softmax_xent, init_tree, is_def,
+                     logits_apply, shape_tree)
+from .transformer import (DecodeState, decode_state_defs, forward_decode,
+                          forward_prefill, forward_train, model_defs)
+
+
+def param_defs(cfg):
+    return model_defs(cfg)
+
+
+def init_params(cfg, key: jax.Array):
+    return init_tree(key, model_defs(cfg))
+
+
+def param_shapes(cfg):
+    """ShapeDtypeStruct tree — dry-run stand-ins, no allocation."""
+    return shape_tree(model_defs(cfg))
+
+
+def count_params(cfg) -> int:
+    leaves = jax.tree.leaves(model_defs(cfg), is_leaf=is_def)
+    return sum(math.prod(d.shape) for d in leaves)
+
+
+def count_active_params(cfg) -> int:
+    """Active params per token: MoE expert weights scaled by top_k/E."""
+    if cfg.moe is None:
+        return count_params(cfg)
+    total = 0
+
+    def walk(tree):
+        nonlocal total
+        if is_def(tree):
+            total += math.prod(tree.shape)
+            return
+        if isinstance(tree, dict) and "router" in tree:   # a MoE ffn subtree
+            for k, v in tree.items():
+                n = sum(math.prod(d.shape)
+                        for d in jax.tree.leaves(v, is_leaf=is_def))
+                if k.startswith("w_"):                    # expert weights
+                    n = n * cfg.moe.top_k // cfg.moe.num_experts
+                total += n
+            return
+        for v in tree.values():
+            walk(v)
+
+    walk(model_defs(cfg))
+    return total
+
+
+# ------------------------------------------------------------------- train
+
+def loss_fn(cfg, params, batch: Dict[str, jax.Array], remat: bool = True):
+    """Causal LM loss (chunked CE — never materializes [B,S,V] logits)."""
+    x = forward_train(cfg, params, batch["tokens"], extra=batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.arch_kind == "vlm" and "img_embeds" in batch:
+        x = x[:, batch["img_embeds"].shape[1]:]     # loss on text tokens only
+    return chunked_softmax_xent(cfg, params["embed"], x, labels)
+
+
+# ------------------------------------------------------------------- serve
+
+def prefill(cfg, params, batch):
+    """Prompt processing: returns (last-token logits, caches)."""
+    x, caches = forward_prefill(cfg, params, batch["tokens"], extra=batch)
+    logits = logits_apply(cfg, params["embed"], x[:, -1])
+    return logits, caches
+
+
+def decode_step(cfg, params, tokens, state: DecodeState, active=None):
+    """One decode step: (logits [DP, Bl, V], new state)."""
+    x, state = forward_decode(cfg, params, tokens, state, active=active)
+    logits = logits_apply(cfg, params["embed"], x)
+    return logits, state

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN with sort-based (MegaBlocks-style) dispatch.
+
+Two dispatch paths, both avoiding the quadratic one-hot dispatch tensor
+of classic GShard:
+
+* ``per-row`` (train/prefill): tokens are grouped per sequence row; each
+  row sorts its (token, slot) pairs by expert id locally — with batch
+  sharded over the data axis the sorts never cross devices.  Capacity
+  per row C = ceil(top_k * S / E * cf); overflow tokens are dropped
+  (standard capacity-factor semantics; see DESIGN.md).
+* ``flat`` (decode, S == 1): all B tokens sorted globally; capacity
+  C = ceil(top_k * B / E * cf).  Keeps decode FLOPs within ~cf of the
+  useful expert compute instead of E/k times.
+
+Expert weights are stacked [E, ...] and shard over the "experts"
+logical axis (expert parallelism = model axis).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef
+
+
+def moe_defs(cfg) -> Dict[str, ParamDef]:
+    d, f, E, dt = cfg.d_model, cfg.d_ff, cfg.moe.num_experts, cfg.jdtype
+    return {
+        "router": ParamDef((d, E), ("embed", None), jnp.float32),
+        "w_gate": ParamDef((E, d, f), ("experts", "embed", "mlp"), dt),
+        "w_up": ParamDef((E, d, f), ("experts", "embed", "mlp"), dt),
+        "w_down": ParamDef((E, f, d), ("experts", "mlp", "embed"), dt),
+    }
+
+
+def _capacity(top_k: int, tokens: int, E: int, cf: float) -> int:
+    c = math.ceil(top_k * tokens / E * cf)
+    return max(8, min(c, top_k * tokens))   # clamp; pad to a useful floor
+
+
+def _dispatch_indices(eids, E, C):
+    """Sort-based routing for one token row: (keep, dest, t_s, order)."""
+    N, k = eids.shape
+    e_all = eids.reshape(N * k)
+    t_all = jnp.repeat(jnp.arange(N), k)
+    order = jnp.argsort(e_all)                       # stable
+    e_s, t_s = e_all[order], t_all[order]
+    idx = jnp.arange(N * k)
+    start_of_expert = jnp.searchsorted(e_s, jnp.arange(E), side="left")
+    pos = idx - start_of_expert[e_s]
+    keep = pos < C
+    dest = jnp.where(keep, e_s * C + pos, E * C)     # E*C = dropped bucket
+    return keep, dest, t_s, order
+
+
+def _dispatch_compute(params, x_flat, gates, eids, C):
+    """Sort-based dispatch for one token group (flat / decode path)."""
+    N, d = x_flat.shape
+    E = params["router"].shape[1]
+    keep, dest, t_s, order = _dispatch_indices(eids, E, C)
+    g_s = gates.reshape(-1)[order]
+
+    buf = jnp.zeros((E * C, d), x_flat.dtype)
+    buf = buf.at[dest].set(x_flat[t_s], mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h.astype(x_flat.dtype), params["w_down"])
+    y = y.astype(x_flat.dtype).reshape(E * C, d)
+
+    gathered = jnp.where(keep[:, None], y[jnp.minimum(dest, E * C - 1)], 0.0)
+    out = jnp.zeros((N, d), x_flat.dtype)
+    out = out.at[t_s].add(gathered * g_s[:, None].astype(x_flat.dtype))
+    return out
+
+
+def moe_apply(cfg, params, x) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d].
+
+    Train/prefill path: per-row sorted dispatch (vmapped scatter/gather —
+    row-local, so sorts never cross shards) but **batched expert einsums
+    outside the vmap** with explicit batch-sharding constraints on the
+    dispatch buffer.  Without the constraints GSPMD resolved the mixed
+    (batch-sharded activations x data-sharded expert weights) contraction
+    by materializing full-batch expert activations and all-reducing them
+    (~4.9e12 weighted bytes/device on mixtral train_4k — see
+    EXPERIMENTS.md §Perf iteration A1); pinning the buffer forces the
+    cheap weight-all-gather plan instead.
+    """
+    from ..parallel.partition import constrain_batch
+    B, S, d = x.shape
+    k, E, cf = cfg.moe.top_k, cfg.moe.num_experts, cfg.moe.capacity_factor
+
+    # router in x.dtype with f32 accumulation: casting x itself to f32
+    # would create an f32 [B,S,d] primal whose cotangent drags the whole
+    # backward residual chain into f32 (2x collective/HBM bytes — §Perf A2)
+    logits = jax.lax.dot_general(
+        x, params["router"].astype(x.dtype), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # [B,S,E]
+    gates, eids = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    if S == 1:
+        C = _capacity(k, B, E, cf)
+        out = _dispatch_compute(
+            params, x.reshape(B, d), gates.reshape(B, k),
+            eids.reshape(B, k), C)
+        return out.reshape(B, S, d)
+
+    C = _capacity(k, S, E, cf)
+
+    def row_scatter(xr, er):
+        keep, dest, t_s, order = _dispatch_indices(er, E, C)
+        buf = jnp.zeros((E * C, d), xr.dtype)
+        buf = buf.at[dest].set(xr[t_s], mode="drop")
+        return buf.reshape(E, C, d), (keep, dest, t_s, order)
+
+    buf, meta = jax.vmap(row_scatter)(x, eids)       # [B, E, C, d]
+    buf = constrain_batch(buf)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_gate"])) * \
+        jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    y = jnp.einsum("becf,efd->becd", h.astype(x.dtype), params["w_down"])
+    y = constrain_batch(y.astype(x.dtype))
+
+    def row_combine(yr, gr, m):
+        keep, dest, t_s, order = m
+        g_s = gr.reshape(-1)[order]
+        yf = yr.reshape(E * C, d)
+        gathered = jnp.where(keep[:, None],
+                             yf[jnp.minimum(dest, E * C - 1)], 0.0)
+        out = jnp.zeros((S, d), yr.dtype)
+        return out.at[t_s].add(gathered * g_s[:, None].astype(yr.dtype))
+
+    return jax.vmap(row_combine)(y, gates, meta)
+
+
+def aux_load_balance_loss(cfg, logits_mean_prob, fraction_assigned):
+    """Switch-style auxiliary loss (computed by the caller if desired)."""
+    E = cfg.moe.num_experts
+    return E * jnp.sum(logits_mean_prob * fraction_assigned)

@@ -1,0 +1,94 @@
+"""Griffin RG-LRU recurrent block [arXiv:2402.19427].
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+computed with ``jax.lax.associative_scan`` (O(log S) depth) for
+train/prefill and an O(1) update for decode.  The enclosing Griffin
+block: gated branch (GeLU) x (linear -> causal depthwise conv(4) ->
+RG-LRU) -> output projection.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef
+
+_C = 8.0
+
+
+def rglru_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    dt = cfg.jdtype
+    return {
+        "w_x": ParamDef((d, d), ("embed", "mlp"), dt),
+        "w_gate": ParamDef((d, d), ("embed", "mlp"), dt),
+        "conv_w": ParamDef((cfg.rglru_conv, d), (None, "mlp"), dt),
+        "w_r": ParamDef((d, d), ("mlp", "mlp"), dt),
+        "w_i": ParamDef((d, d), ("mlp", "mlp"), dt),
+        "lam": ParamDef((d,), ("mlp",), jnp.float32, "ones"),
+        "w_out": ParamDef((d, d), ("mlp", "embed"), dt),
+    }
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x @ params["w_r"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(x @ params["w_i"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * x.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_scan(params, x, h0=None):
+    """x: [B, S, d] -> (y [B, S, d], h_final [B, d])."""
+    a, b = _gates(params, x)                       # [B,S,d] fp32
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_decode_step(params, x, h):
+    """x: [B, 1, d]; h: [B, d] -> (y [B,1,d], h_new)."""
+    a, b = _gates(params, x)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def _causal_conv(x, w, state=None):
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + S] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def rglru_block_apply(cfg, params, x, h0=None, conv0=None,
+                      decode: bool = False):
+    """Griffin recurrent block.  x: [B,S,d] -> (y, (h, conv_state))."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_x"]
+    u, conv_state = _causal_conv(u, params["conv_w"], conv0)
+    if decode:
+        y, h = rglru_decode_step(params, u, h0 if h0 is not None else
+                                 jnp.zeros(u.shape[::2], jnp.float32))
+    else:
+        y, h = rglru_scan(params, u, h0)
+    return (y * gate) @ params["w_out"], (h, conv_state)

@@ -1,0 +1,164 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD reference: within-chunk attention-like term + inter-chunk
+state recurrence carried by ``lax.scan`` — O(S * Q) compute/memory per
+head instead of O(S^2).  Decode is an O(1) state update.  The Pallas
+kernel (kernels/ssd_scan) tiles the same computation for VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef, rmsnorm
+
+
+def ssd_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    di = cfg.ssd_expand * d
+    N = cfg.ssd_state
+    H = di // cfg.ssd_head_dim
+    dt = cfg.jdtype
+    return {
+        "in_proj": ParamDef((d, 2 * di + 2 * N + H), ("embed", "mlp"), dt),
+        "conv_w": ParamDef((4, di + 2 * N), (None, None), dt),
+        "A_log": ParamDef((H,), (None,), jnp.float32, "zeros"),
+        "D": ParamDef((H,), (None,), jnp.float32, "ones"),
+        "dt_bias": ParamDef((H,), (None,), jnp.float32, "zeros"),
+        "norm_scale": ParamDef((di,), ("mlp",), jnp.float32, "zeros"),
+        "out_proj": ParamDef((di, d), ("mlp", "embed"), dt),
+    }
+
+
+def _split_proj(cfg, z):
+    d = cfg.d_model
+    di = cfg.ssd_expand * d
+    N = cfg.ssd_state
+    H = di // cfg.ssd_head_dim
+    x, zgate, Bc, Cc, dt = jnp.split(
+        z, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return x, zgate, Bc, Cc, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, kernel 4.  x: [B, S, C]; w: [4, C].
+
+    Returns (y, new_state) where state is the last 3 inputs [B, 3, C].
+    """
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + S] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int = 128, h0=None):
+    """SSD scan. x: [B,S,H,P]; dt: [B,S,H]; A: [H]; Bm/Cm: [B,S,N].
+
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    a = dt * A[None, None, :]                       # [B,S,H] (negative)
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    ac = a.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    cum = jnp.cumsum(ac, axis=2)                    # [B,nc,Q,H]
+    a_total = cum[:, :, -1]                         # [B,nc,H]
+
+    # within-chunk (diagonal) term.  For i < j (masked out) seg > 0 and
+    # exp(seg) overflows; mask BEFORE the exp so the cotangent of the
+    # masked branch is well-defined (inf * 0 = NaN otherwise).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Q,Q,H] = cum_i - cum_j
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)      # [B,nc,Q,Q]
+    w = cb[..., None] * L * dtc[:, :, None, :, :]   # [B,nc,Q,Q,H]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xc)
+
+    # chunk states: contribution of each chunk to the carried state
+    decay_out = jnp.exp(a_total[:, :, None, :] - cum)         # [B,nc,Q,H]
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                        (decay_out * dtc).astype(x.dtype), Bc, xc)
+
+    # inter-chunk recurrence
+    def step(h, inp):
+        st, atot = inp                              # [B,H,P,N], [B,H]
+        h_out = h                                   # state entering this chunk
+        h_new = h * jnp.exp(atot)[:, :, None, None] + st
+        return h_new, h_out
+
+    h_init = h0 if h0 is not None else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        step, h_init,
+        (states.swapaxes(0, 1).astype(jnp.float32),
+         a_total.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                # [B,nc,H,P,N]
+
+    # off-diagonal (carried state) term
+    decay_in = jnp.exp(cum)                          # [B,nc,Q,H]
+    y_off = jnp.einsum("bcqn,bchpn->bcqhp", Cc,
+                       h_prevs.astype(x.dtype)) * decay_in[..., None].astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    y = y + x * D[None, None, :, None]
+    return y, h_final
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, D, h):
+    """One-token SSD update. x:[B,H,P]; dt:[B,H]; Bm/Cm:[B,N]; h:[B,H,P,N]."""
+    a = jnp.exp(dt * A[None, :])                     # [B,H]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, x)
+    h_new = h * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h_new.astype(x.dtype))
+    return y + x * D[None, :, None], h_new
+
+
+def ssd_block_apply(cfg, params, x, h0=None, conv0=None, decode: bool = False):
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    Train/prefill: x [B,S,d] -> (y, (h_final, conv_state)).
+    Decode: x [B,1,d] with (h0, conv0) states.
+    """
+    d = cfg.d_model
+    di = cfg.ssd_expand * d
+    N = cfg.ssd_state
+    P = cfg.ssd_head_dim
+    H = di // P
+
+    z = x @ params["in_proj"]
+    xin, zgate, Bc, Cc, dtr = _split_proj(cfg, z)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], conv0)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    Bsz, S, _ = x.shape
+    xh = xin.reshape(Bsz, S, H, P)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if decode:
+        y, h_new = ssd_decode_step(
+            xh[:, 0], dt[:, 0], A, Bc[:, 0], Cc[:, 0], params["D"],
+            h0 if h0 is not None else jnp.zeros((Bsz, H, P, N), jnp.float32))
+        y = y[:, None]
+    else:
+        y, h_new = ssd_chunked(xh, dt, A, Bc, Cc, params["D"], h0=h0)
+
+    y = y.reshape(Bsz, -1, di)
+    y = rmsnorm(y * jax.nn.silu(zgate), params["norm_scale"])
+    y = y.astype(x.dtype)
+    return y @ params["out_proj"], (h_new, conv_state)

@@ -1,0 +1,602 @@
+"""Unified decoder stack: dense / GQA / SWA / local-global / MoE / SSD /
+RG-LRU / enc-dec / VLM — one scan-over-pattern-groups implementation.
+
+Layer layout comes from ``cfg.pattern`` (see configs/base.py).  Parameters
+for the ``n_groups`` full pattern repetitions are stacked on a leading
+"layers" axis and consumed by ``jax.lax.scan`` — compile time and HLO
+size are independent of depth.  Remainder layers (when n_layers is not a
+multiple of the pattern length) are unrolled once.
+
+Three entry points:
+  * :func:`forward_train`   — full-sequence, no caches (training loss path)
+  * :func:`forward_prefill` — full-sequence, fills the decode state
+  * :func:`forward_decode`  — one token against the decode state
+
+Decode state (the paper's technique lives here):
+  * global-attention layers use **paged KV** (block tables +
+    fixed-size pages from :mod:`repro.core.block_pool` — constant-time
+    alloc/free, per-DP-shard private pools exactly like the paper's
+    private pools);
+  * local/SWA layers use fixed-size **ring slabs** (bounded state needs
+    no paging — it is a fixed-size block handed out at admission);
+  * SSD / RG-LRU layers carry fixed-size recurrent state slabs.
+
+Decode batch layout is [DP, B_local, ...] with DP sharded over the data
+(and pod) mesh axes; every cache gather/scatter is vmapped over DP so
+page ids stay shard-local (no cross-shard gathers — see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import base_kind, is_moe_kind
+from ..core import block_pool
+from ..parallel.partition import constrain_batch
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import (ParamDef, apply_norm, apply_rope, embed_apply,
+                     embed_defs, ffn_apply, ffn_defs, norm_defs)
+
+
+# ===================================================================== defs
+
+def _stack(defs, n: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.dtype, d.init),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def layer_defs(cfg, kind: str, with_xattn: bool = False) -> Dict[str, Any]:
+    bk = base_kind(kind)
+    d: Dict[str, Any] = {"norm1": norm_defs(cfg)}
+    if bk in ("global", "local"):
+        d["attn"] = attn.attn_defs(cfg)
+    elif bk == "ssd":
+        d["ssd"] = ssm_mod.ssd_defs(cfg)
+    elif bk == "rglru":
+        d["rglru"] = rglru_mod.rglru_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if with_xattn:
+        d["norm_x"] = norm_defs(cfg)
+        d["xattn"] = attn.attn_defs(cfg)
+    if bk != "ssd" and cfg.d_ff:
+        d["norm2"] = norm_defs(cfg)
+        d["ffn"] = moe_mod.moe_defs(cfg) if is_moe_kind(kind) else ffn_defs(cfg)
+    return d
+
+
+def model_defs(cfg) -> Dict[str, Any]:
+    is_dec_of_encdec = cfg.arch_kind == "encdec"
+    defs: Dict[str, Any] = {"embed": embed_defs(cfg)}
+    fn = norm_defs(cfg)
+    if fn:
+        defs["final_norm"] = fn
+    group = {f"pos{j}": layer_defs(cfg, k, with_xattn=is_dec_of_encdec)
+             for j, k in enumerate(cfg.pattern)}
+    if cfg.n_groups:
+        defs["groups"] = _stack(group, cfg.n_groups)
+    if cfg.remainder:
+        defs["rem"] = {
+            f"pos{j}": layer_defs(cfg, k, with_xattn=is_dec_of_encdec)
+            for j, k in enumerate(cfg.remainder)}
+    if is_dec_of_encdec:
+        enc_layer = layer_defs(cfg, "global")
+        defs["encoder"] = _stack(enc_layer, cfg.enc_layers)
+        if fn:
+            defs["enc_final_norm"] = norm_defs(cfg)
+    return defs
+
+
+# ================================================================ train path
+
+def _mix_train(cfg, lp, x, kind, enc_out=None, causal=True):
+    """One layer (full sequence).  Returns (x, cache) where cache is
+    (k, v) for attention layers or the final recurrent state tree."""
+    kind = base_kind(kind)
+    h = apply_norm(cfg, lp["norm1"], x)
+    if kind in ("global", "local"):
+        o, cache = attn.attention_train(cfg, lp["attn"], h, kind, causal=causal)
+    elif kind == "ssd":
+        o, (hn, cn) = ssm_mod.ssd_block_apply(cfg, lp["ssd"], h)
+        cache = {"h": hn, "conv": cn}
+    else:
+        o, (hn, cn) = rglru_mod.rglru_block_apply(cfg, lp["rglru"], h)
+        cache = {"h": hn, "conv": cn}
+    x = x + o
+    if "xattn" in lp and enc_out is not None:
+        hx = apply_norm(cfg, lp["norm_x"], x)
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+        x = x + attn.cross_attention(cfg, lp["xattn"], hx, (k, v))
+        cache = (cache, (k, v))
+    if "ffn" in lp:
+        h2 = apply_norm(cfg, lp["norm2"], x)
+        f = (moe_mod.moe_apply(cfg, lp["ffn"], h2) if "router" in lp["ffn"]
+             else ffn_apply(cfg, lp["ffn"], h2))
+        x = x + f
+    return x, cache
+
+
+def _encoder_apply(cfg, params, enc_embeds):
+    """Whisper-style encoder over stubbed frame embeddings."""
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(x, lp):
+        x = constrain_batch(x)
+        x, _ = _mix_train(cfg, lp, x, "global", causal=False)
+        return x, None
+    x, _ = jax.lax.scan(body, enc_embeds, params["encoder"])
+    if "enc_final_norm" in params:
+        x = apply_norm(cfg, params["enc_final_norm"], x)
+    return x
+
+
+def forward_train(cfg, params, tokens, extra: Optional[Dict] = None,
+                  remat: bool = True):
+    """tokens [B, S] (+ extra embeds for vlm/encdec) -> hidden [B, S', d]."""
+    x = embed_apply(params["embed"], tokens).astype(cfg.jdtype)
+    if cfg.arch_kind == "vlm" and extra and "img_embeds" in extra:
+        x = jnp.concatenate(
+            [extra["img_embeds"].astype(cfg.jdtype), x], axis=1)
+    x = constrain_batch(x)
+    enc_out = None
+    if cfg.arch_kind == "encdec":
+        enc_out = _encoder_apply(
+            cfg, params, extra["enc_embeds"].astype(cfg.jdtype))
+        enc_out = constrain_batch(enc_out)
+
+    def group_body(x, gparams):
+        x = constrain_batch(x)
+        for j, kind in enumerate(cfg.pattern):
+            x, _ = _mix_train(cfg, gparams[f"pos{j}"], x, kind, enc_out)
+        return constrain_batch(x), None
+
+    body = group_body
+    if remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    if cfg.n_groups:
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    for j, kind in enumerate(cfg.remainder):
+        x, _ = _mix_train(cfg, params["rem"][f"pos{j}"], x, kind, enc_out)
+    if "final_norm" in params:
+        x = apply_norm(cfg, params["final_norm"], x)
+    elif cfg.norm == "ln_nonparam":
+        from .layers import ln_nonparam
+        x = ln_nonparam(x)
+    return x
+
+
+def forward_prefill(cfg, params, tokens, extra: Optional[Dict] = None):
+    """Full-sequence forward that also returns per-layer caches.
+
+    Returns (hidden [B,S,d], caches) — caches is a dict:
+      {"pos{j}": stacked-over-groups cache, "rem{j}": cache, "enc_out": ...}
+    Attention caches are dense [n_groups, B, S, KH, hd] K/V (the serving
+    engine paginates them into pages allocated by the block allocator).
+    """
+    x = embed_apply(params["embed"], tokens).astype(cfg.jdtype)
+    if cfg.arch_kind == "vlm" and extra and "img_embeds" in extra:
+        x = jnp.concatenate([extra["img_embeds"].astype(cfg.jdtype), x], axis=1)
+    x = constrain_batch(x)
+    enc_out = None
+    if cfg.arch_kind == "encdec":
+        enc_out = _encoder_apply(cfg, params,
+                                 extra["enc_embeds"].astype(cfg.jdtype))
+        enc_out = constrain_batch(enc_out)
+
+    def group_body(x, gparams):
+        x = constrain_batch(x)
+        caches = {}
+        for j, kind in enumerate(cfg.pattern):
+            x, c = _mix_train(cfg, gparams[f"pos{j}"], x, kind, enc_out)
+            caches[f"pos{j}"] = c
+        return constrain_batch(x), caches
+
+    caches = {}
+    if cfg.n_groups:
+        x, caches = jax.lax.scan(group_body, x, params["groups"])
+    for j, kind in enumerate(cfg.remainder):
+        x, c = _mix_train(cfg, params["rem"][f"pos{j}"], x, kind, enc_out)
+        caches[f"rem{j}"] = jax.tree.map(lambda a: a[None], c)
+    if enc_out is not None:
+        caches["enc_out"] = enc_out
+    if "final_norm" in params:
+        x = apply_norm(cfg, params["final_norm"], x)
+    elif cfg.norm == "ln_nonparam":
+        from .layers import ln_nonparam
+        x = ln_nonparam(x)
+    return x, caches
+
+
+# ============================================================== decode state
+
+class DecodeState(NamedTuple):
+    """All per-sequence serving state, [DP, B_local, ...] layouts.
+
+    kv_pages:    dict pos -> (k, v) [n_stack, DP, pages_local, psz, KH, hd]
+    rings:       dict pos -> (k, v) [n_stack, DP, Bl, W, KH, hd]
+    rec:         dict pos -> pytree of recurrent states [n_stack, DP, Bl, ...]
+    page_tables: int32 [DP, Bl, max_pages]   (shared by all paged layers)
+    seq_lens:    int32 [DP, Bl]
+    pool_ids:    int32 [DP, pages_local]     (per-shard private free stacks)
+    pool_top:    int32 [DP]
+    enc_kv:      optional (k, v) [n_enc_stack?, ...] cross-attn KV (encdec)
+    """
+    kv_pages: Dict[str, Tuple[jax.Array, jax.Array]]
+    rings: Dict[str, Tuple[jax.Array, jax.Array]]
+    rec: Dict[str, Any]
+    page_tables: jax.Array
+    seq_lens: jax.Array
+    pool_ids: jax.Array
+    pool_top: jax.Array
+    enc_kv: Any
+
+
+def _positions(cfg) -> Dict[str, list]:
+    """Map pattern position -> layer-state kind ('paged'|'ring'|'rec')."""
+    kinds = {}
+    for j, k in enumerate(cfg.pattern):
+        bk = base_kind(k)
+        if bk == "global":
+            kinds[f"pos{j}"] = "paged"
+        elif bk == "local":
+            kinds[f"pos{j}"] = "ring"
+        else:
+            kinds[f"pos{j}"] = "rec"
+    return kinds
+
+
+def decode_state_defs(cfg, dp: int, b_local: int, max_len: int):
+    """ShapeDtypeStruct tree for the decode state (dry-run input)."""
+    psz = cfg.page_size
+    KH, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.jdtype
+    ng = cfg.n_groups
+    max_pages = max(max_len // psz, 1)
+    # per-shard page pool: enough for all local sequences + slack batch
+    pages_local = b_local * max_pages + 2 * max(b_local, 8)
+    kv_pages, rings, rec = {}, {}, {}
+
+    def entry(pos, kind, stack):
+        if kind == "paged":
+            shp = (stack, dp, pages_local, psz, KH, hd)
+            kv_pages[pos] = (jax.ShapeDtypeStruct(shp, dt),
+                             jax.ShapeDtypeStruct(shp, dt))
+        elif kind == "ring":
+            W = min(cfg.window or max_len, max_len)
+            shp = (stack, dp, b_local, W, KH, hd)
+            rings[pos] = (jax.ShapeDtypeStruct(shp, dt),
+                          jax.ShapeDtypeStruct(shp, dt))
+        else:
+            j = int(pos[3:])
+            kind_name = (cfg.pattern + cfg.remainder)[j] if pos.startswith("pos") else None
+            rec[pos] = _rec_state_defs(cfg, kind_name, stack, dp, b_local)
+
+    for j, k in enumerate(cfg.pattern):
+        entry(f"pos{j}", _positions(cfg)[f"pos{j}"], ng)
+    for j, k in enumerate(cfg.remainder):
+        pos = f"rem{j}"
+        k = base_kind(k)
+        if k == "global":
+            shp = (1, dp, pages_local, psz, KH, hd)
+            kv_pages[pos] = (jax.ShapeDtypeStruct(shp, dt),) * 2
+        elif k == "local":
+            W = min(cfg.window or max_len, max_len)
+            shp = (1, dp, b_local, W, KH, hd)
+            rings[pos] = (jax.ShapeDtypeStruct(shp, dt),) * 2
+        else:
+            rec[pos] = _rec_state_defs(cfg, k, 1, dp, b_local)
+
+    enc_kv = None
+    if cfg.arch_kind == "encdec":
+        shp = (cfg.n_groups + len(cfg.remainder), dp, b_local,
+               cfg.enc_len, cfg.n_kv_heads, cfg.hd)
+        enc_kv = (jax.ShapeDtypeStruct(shp, dt), jax.ShapeDtypeStruct(shp, dt))
+
+    return DecodeState(
+        kv_pages=kv_pages, rings=rings, rec=rec,
+        page_tables=jax.ShapeDtypeStruct((dp, b_local, max_pages), jnp.int32),
+        seq_lens=jax.ShapeDtypeStruct((dp, b_local), jnp.int32),
+        pool_ids=jax.ShapeDtypeStruct((dp, pages_local), jnp.int32),
+        pool_top=jax.ShapeDtypeStruct((dp,), jnp.int32),
+        enc_kv=enc_kv,
+    )
+
+
+def _rec_state_defs(cfg, kind, stack, dp, b_local):
+    if kind == "ssd":
+        di = cfg.ssd_expand * cfg.d_model
+        H = di // cfg.ssd_head_dim
+        return {
+            "h": jax.ShapeDtypeStruct(
+                (stack, dp, b_local, H, cfg.ssd_head_dim, cfg.ssd_state),
+                jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (stack, dp, b_local, 3, di + 2 * cfg.ssd_state), cfg.jdtype),
+        }
+    return {
+        "h": jax.ShapeDtypeStruct(
+            (stack, dp, b_local, cfg.d_model), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (stack, dp, b_local, cfg.rglru_conv - 1, cfg.d_model), cfg.jdtype),
+    }
+
+
+# ============================================================== decode path
+
+def _paged_write(k_pages, v_pages, k_new, v_new, page_ids, pos_in_page):
+    """k_pages: [DP, P, psz, KH, hd]; k_new: [DP, Bl, KH, hd]."""
+    def one(kp, vp, kn, vn, pid, pip):
+        kp = kp.at[pid, pip].set(kn.astype(kp.dtype), mode="drop")
+        vp = vp.at[pid, pip].set(vn.astype(vp.dtype), mode="drop")
+        return kp, vp
+    return jax.vmap(one)(k_pages, v_pages, k_new, v_new, page_ids, pos_in_page)
+
+
+def _paged_attn(q, k_pages, v_pages, tables, seq_lens):
+    """q: [DP, Bl, H, hd]; pages: [DP, P, psz, KH, hd]."""
+    return jax.vmap(attn.decode_attention_paged)(
+        q, k_pages, v_pages, tables, seq_lens)
+
+
+def _ring_write(k_ring, v_ring, k_new, v_new, pos):
+    """ring: [DP, Bl, W, KH, hd]; pos: [DP, Bl] absolute positions."""
+    W = k_ring.shape[2]
+    slot = pos % W
+    dp_i = jnp.arange(k_ring.shape[0])[:, None]
+    bl_i = jnp.arange(k_ring.shape[1])[None, :]
+    k_ring = k_ring.at[dp_i, bl_i, slot].set(k_new.astype(k_ring.dtype))
+    v_ring = v_ring.at[dp_i, bl_i, slot].set(v_new.astype(v_ring.dtype))
+    return k_ring, v_ring
+
+
+def _ring_attn(cfg, q, k_ring, v_ring, pos):
+    """Single-query attention over a ring of the last W positions.
+
+    q: [DP, Bl, H, hd]; ring: [DP, Bl, W, KH, hd]; pos: [DP, Bl] (current).
+    """
+    DP, Bl, H, hd = q.shape
+    W = k_ring.shape[2]
+    r = jnp.arange(W)
+    # absolute position stored in ring slot r (<= pos)
+    abs_pos = r[None, None, :] + W * ((pos[..., None] - r[None, None, :]) // W)
+    valid = (abs_pos >= 0) & (abs_pos <= pos[..., None]) & (
+        abs_pos > pos[..., None] - (cfg.window or W))
+    k = attn._expand_kv(k_ring.reshape(DP * Bl, W, -1, hd), H)
+    v = attn._expand_kv(v_ring.reshape(DP * Bl, W, -1, hd), H)
+    qf = q.reshape(DP * Bl, H, hd)
+    s = jnp.einsum("bhd,bkhd->bhk", qf, k) / (hd ** 0.5)
+    s = jnp.where(valid.reshape(DP * Bl, 1, W), s.astype(jnp.float32),
+                  attn.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p.astype(q.dtype), v)
+    return o.reshape(DP, Bl, H, hd)
+
+
+def _mix_decode(cfg, lp, x, kind, st_kind, layer_state, positions, state,
+                enc_kv_layer=None):
+    """One layer in decode mode.
+
+    x: [DP, Bl, d] (single token per seq).  Returns (x, new_layer_state).
+    """
+    DP, Bl, d = x.shape
+    kind = base_kind(kind)
+    h = apply_norm(cfg, lp["norm1"], x)
+    if kind in ("global", "local"):
+        hf = h.reshape(DP * Bl, 1, d)
+        pos_flat = positions.reshape(DP * Bl, 1)
+        q = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wv"])
+        q = apply_rope(q, pos_flat, cfg.rope_theta)
+        k = apply_rope(k, pos_flat, cfg.rope_theta)
+        qd = q[:, 0].reshape(DP, Bl, cfg.n_heads, cfg.hd)
+        kd = k[:, 0].reshape(DP, Bl, cfg.n_kv_heads, cfg.hd)
+        vd = v[:, 0].reshape(DP, Bl, cfg.n_kv_heads, cfg.hd)
+        if st_kind == "paged":
+            kp, vp = layer_state
+            psz = cfg.page_size
+            page_idx = positions // psz
+            pip = positions % psz
+            dp_i = jnp.arange(DP)[:, None]
+            pid = state.page_tables[dp_i, jnp.arange(Bl)[None, :], page_idx]
+            kp, vp = _paged_write(kp, vp, kd, vd, pid, pip)
+            o = _paged_attn(qd, kp, vp, state.page_tables, state.seq_lens + 1)
+            new_state = (kp, vp)
+        else:
+            kr, vr = layer_state
+            kr, vr = _ring_write(kr, vr, kd, vd, positions)
+            o = _ring_attn(cfg, qd, kr, vr, positions)
+            new_state = (kr, vr)
+        x = x + jnp.einsum("xbhk,hkd->xbd", o, lp["attn"]["wo"])
+    elif kind == "ssd":
+        hf = h.reshape(DP * Bl, 1, d)
+        o, (hn, cn) = ssm_mod.ssd_block_apply(
+            cfg, lp["ssd"], hf,
+            h0=layer_state["h"].reshape(DP * Bl, *layer_state["h"].shape[2:]),
+            conv0=layer_state["conv"].reshape(
+                DP * Bl, *layer_state["conv"].shape[2:]),
+            decode=True)
+        x = x + o[:, 0].reshape(DP, Bl, d)
+        new_state = {"h": hn.reshape(DP, Bl, *hn.shape[1:]),
+                     "conv": cn.reshape(DP, Bl, *cn.shape[1:])}
+    else:  # rglru
+        hf = h.reshape(DP * Bl, 1, d)
+        o, (hn, cn) = rglru_mod.rglru_block_apply(
+            cfg, lp["rglru"], hf,
+            h0=layer_state["h"].reshape(DP * Bl, d),
+            conv0=layer_state["conv"].reshape(
+                DP * Bl, *layer_state["conv"].shape[2:]),
+            decode=True)
+        x = x + o[:, 0].reshape(DP, Bl, d)
+        new_state = {"h": hn.reshape(DP, Bl, d),
+                     "conv": cn.reshape(DP, Bl, *cn.shape[1:])}
+
+    if "xattn" in lp and enc_kv_layer is not None:
+        x = _xattn_decode(cfg, lp, x, enc_kv_layer)
+
+    if "ffn" in lp:
+        h2 = apply_norm(cfg, lp["norm2"], x)
+        h2f = h2.reshape(DP * Bl, 1, d)
+        f = (moe_mod.moe_apply(cfg, lp["ffn"], h2f) if "router" in lp["ffn"]
+             else ffn_apply(cfg, lp["ffn"], h2f))
+        x = x + f.reshape(DP, Bl, d)
+    return x, new_state
+
+
+def _xattn_decode(cfg, lp, x, enc_kv_layer):
+    """Cross-attention for one decode token. enc_kv: [DP, Bl, L, KH, hd]."""
+    DP, Bl, d = x.shape
+    h = apply_norm(cfg, lp["norm_x"], x)
+    q = jnp.einsum("xbd,dhk->xbhk", h, lp["xattn"]["wq"])
+    k, v = enc_kv_layer
+    ke = attn._expand_kv(k.reshape(DP * Bl, cfg.enc_len, -1, cfg.hd), cfg.n_heads)
+    ve = attn._expand_kv(v.reshape(DP * Bl, cfg.enc_len, -1, cfg.hd), cfg.n_heads)
+    qf = q.reshape(DP * Bl, cfg.n_heads, cfg.hd)
+    s = jnp.einsum("bhd,bkhd->bhk", qf, ke) / (cfg.hd ** 0.5)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p.astype(x.dtype), ve)
+    o = o.reshape(DP, Bl, cfg.n_heads, cfg.hd)
+    return x + jnp.einsum("xbhk,hkd->xbd", o, lp["xattn"]["wo"])
+
+
+def forward_decode(cfg, params, tokens, state: DecodeState, active=None):
+    """tokens: int32 [DP, Bl] -> (hidden [DP, Bl, d], new DecodeState).
+
+    ``active`` (bool [DP, Bl], default all) gates page allocation,
+    sequence-length advance, and recurrent-state evolution so idle slots
+    in a continuous-batching engine stay inert.
+
+    Page allocation: sequences crossing a page boundary take one page
+    from their DP shard's private free stack (block_pool.alloc — O(1),
+    the paper's operation).  The serving engine refills/drains these
+    private pools against the host-side shared pool off the hot path
+    (hier_pool.rebalance / the paper's deamortized transfers).
+    """
+    DP, Bl = tokens.shape
+    if active is None:
+        active = jnp.ones((DP, Bl), bool)
+    x = constrain_batch(embed_apply(params["embed"], tokens).astype(cfg.jdtype))
+    positions = state.seq_lens                       # current write position
+
+    # --- page allocation for this step (once, shared by all paged layers)
+    new_tables, pool_ids, pool_top = state.page_tables, state.pool_ids, state.pool_top
+    if state.kv_pages:
+        psz = cfg.page_size
+        needs = ((positions % psz) == 0) & active
+
+        def alloc_shard(ids, top, need):
+            pool = block_pool.BlockPool(ids, top)
+            pool, got = block_pool.alloc(pool, need)
+            return pool.free_ids, pool.top, got
+
+        pool_ids, pool_top, got = jax.vmap(alloc_shard)(
+            state.pool_ids, state.pool_top, needs)
+        page_idx = positions // psz
+        dp_i = jnp.arange(DP)[:, None]
+        bl_i = jnp.arange(Bl)[None, :]
+        new_tables = state.page_tables.at[dp_i, bl_i, page_idx].set(
+            jnp.where(needs, got, state.page_tables[dp_i, bl_i, page_idx]))
+    state = state._replace(page_tables=new_tables, pool_ids=pool_ids,
+                           pool_top=pool_top)
+
+    st_kinds = _positions(cfg)
+    has_x = cfg.arch_kind == "encdec"
+    n_rem = len(cfg.remainder)
+
+    def group_body(carry, xs):
+        x = carry
+        gparams, gstate, enc_kv_g = xs
+        new_gstate = {}
+        for j, kind in enumerate(cfg.pattern):
+            pos = f"pos{j}"
+            x, ns = _mix_decode(cfg, gparams[pos], x, kind, st_kinds[pos],
+                                gstate[pos], positions, state,
+                                enc_kv_g if has_x else None)
+            new_gstate[pos] = ns
+        return x, new_gstate
+
+    if cfg.n_groups:
+        gstates = {}
+        for pos, kv in state.kv_pages.items():
+            if pos.startswith("pos"):
+                gstates[pos] = kv
+        for pos, kv in state.rings.items():
+            if pos.startswith("pos"):
+                gstates[pos] = kv
+        for pos, rc in state.rec.items():
+            if pos.startswith("pos"):
+                gstates[pos] = rc
+        enc_scan = None
+        if has_x and state.enc_kv is not None:
+            # enc_kv is in layer order; with pattern length 1 (whisper)
+            # layer order == group order.
+            assert len(cfg.pattern) == 1, "encdec requires pattern length 1"
+            enc_scan = (state.enc_kv[0][:cfg.n_groups],
+                        state.enc_kv[1][:cfg.n_groups])
+        else:
+            enc_scan = (jnp.zeros((cfg.n_groups,)),) * 2  # placeholder
+        x, new_gstates = jax.lax.scan(
+            group_body, x, (params["groups"], gstates, enc_scan))
+    else:
+        new_gstates = {}
+
+    # remainder layers
+    new_rem_states = {}
+    for j, kind in enumerate(cfg.remainder):
+        pos = f"rem{j}"
+        bk = base_kind(kind)
+        st_kind = ("paged" if bk == "global"
+                   else "ring" if bk == "local" else "rec")
+        ls = (state.kv_pages.get(pos) or state.rings.get(pos)
+              or state.rec.get(pos))
+        ls0 = jax.tree.map(lambda a: a[0], ls)
+        lp = params["rem"][f"pos{j}"]
+        enc_l = None
+        if has_x and state.enc_kv is not None:
+            idx = cfg.n_groups * len(cfg.pattern) + j
+            enc_l = (state.enc_kv[0][idx], state.enc_kv[1][idx])
+        x, ns = _mix_decode(cfg, lp, x, kind, st_kind, ls0, positions, state,
+                            enc_l)
+        new_rem_states[pos] = jax.tree.map(lambda a: a[None], ns)
+
+    kv_pages, rings, rec = {}, {}, {}
+    for pos in state.kv_pages:
+        src = new_gstates if pos.startswith("pos") else new_rem_states
+        kv_pages[pos] = src[pos]
+    for pos in state.rings:
+        src = new_gstates if pos.startswith("pos") else new_rem_states
+        rings[pos] = src[pos]
+    for pos in state.rec:
+        src = new_gstates if pos.startswith("pos") else new_rem_states
+        rec[pos] = src[pos]
+
+    # gate recurrent-state evolution for idle slots
+    def gate(new, old):
+        def f(n, o):
+            m = active.reshape((1, DP, Bl) + (1,) * (n.ndim - 3))
+            return jnp.where(m, n, o)
+        return jax.tree.map(f, new, old)
+
+    rec = {pos: gate(rec[pos], state.rec[pos]) for pos in rec}
+
+    state = DecodeState(
+        kv_pages=kv_pages, rings=rings, rec=rec,
+        page_tables=state.page_tables,
+        seq_lens=state.seq_lens + active.astype(jnp.int32),
+        pool_ids=state.pool_ids, pool_top=state.pool_top,
+        enc_kv=state.enc_kv)
+
+    if "final_norm" in params:
+        x = apply_norm(cfg, params["final_norm"], x)
+    elif cfg.norm == "ln_nonparam":
+        from .layers import ln_nonparam
+        x = ln_nonparam(x)
+    return x, state

@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, AdamWState, init, apply, schedule, global_norm

@@ -1,0 +1,90 @@
+"""AdamW with cosine schedule, global-norm clipping, bf16-param support.
+
+Optimizer state keeps fp32 master copies of bf16 params (mixed-precision
+training discipline); moments are fp32.  Pure-functional, pjit-friendly:
+state is a pytree matching the param tree.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    master: Any              # fp32 master params (None leaves if fp32 already)
+
+
+class AdamWConfig(NamedTuple):
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr_peak * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: Any) -> AdamWState:
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # copy=True: fp32 params must not alias the master buffer (donation)
+    master = jax.tree.map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(), zeros(), master)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, state: AdamWState, grads: Any,
+          params: Any) -> Tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, state.step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = state.step + 1
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return new_master.astype(p.dtype), m, v, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_ma = treedef.flatten_up_to(state.master)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(*args) for args in zip(flat_g, flat_m, flat_v, flat_ma, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_ma = treedef.unflatten([o[3] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(t, new_m, new_v, new_ma), metrics

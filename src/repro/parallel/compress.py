@@ -1,0 +1,68 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Distributed-optimization trick for bandwidth-bound training: gradients
+are quantized to int8 with per-tensor scales before the data-parallel
+all-reduce; the quantization error is carried in an error-feedback
+buffer and added to the next step's gradients (Seide et al. '14, 1-bit
+SGD lineage; here 8-bit symmetric).  Cuts DP collective bytes 4x vs
+fp32 / 2x vs bf16 at negligible quality cost for these scales.
+
+Usage: wrap the per-microbatch gradient before ``psum``/pmean, or let
+GSPMD's all-reduce operate on the int8 tensors by quantizing inside the
+jitted step (the dry-run hillclimb measures the collective-term delta).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any        # same tree as grads, fp32
+
+
+def init_error_feedback(grads_like: Any) -> EFState:
+    return EFState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, ef: EFState) -> Tuple[Any, Any, EFState]:
+    """Returns (q_tree, scale_tree, new_ef).  g' = g + residual; the
+    dequantization error goes back into the residual."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, s = quantize(g)
+        err = g - dequantize(q, s)
+        return q, s, err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qs = treedef.unflatten([o[0] for o in out])
+    ss = treedef.unflatten([o[1] for o in out])
+    ef = EFState(treedef.unflatten([o[2] for o in out]))
+    return qs, ss, ef
+
+
+def decompress_tree(qs: Any, ss: Any) -> Any:
+    return jax.tree.map(dequantize, qs, ss)
+
+
+def compressed_grads(grads: Any, ef: EFState) -> Tuple[Any, EFState]:
+    """Round-trip compress (models the all-reduce payload); returns the
+    dequantized gradients the optimizer sees plus the new EF state."""
+    qs, ss, ef = compress_tree(grads, ef)
+    return decompress_tree(qs, ss), ef

@@ -1,0 +1,149 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter/state array declares logical axis names (see
+``repro.models.layers.ParamDef``); this module maps them onto the mesh:
+
+  vocab / heads / kv_heads / mlp / experts -> "model"   (TP / EP)
+  batch                                    -> ("pod", "data") or "data"
+  embed / head_dim / layers / state dims   -> replicated
+
+A dimension is only sharded if divisible by the mesh axis size (GSPMD
+could pad, but padded shards waste memory and skew the roofline; tiny
+archs like whisper fall back to pure DP, which is the right call).
+
+Alternate rule sets are first-class for the §Perf hillclimb:
+  "tp"        — the default above (tensor parallel weights)
+  "fsdp"      — additionally shard the embed axis over "data"
+                (ZeRO-3-style fully sharded params)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def is_def(x) -> bool:
+    """Duck-typed ParamDef check (avoids a models<->parallel import cycle)."""
+    return hasattr(x, "axes") and hasattr(x, "shape") and hasattr(x, "init")
+
+RULE_SETS: Dict[str, Dict[str, Any]] = {
+    "tp": {
+        "vocab": "model", "heads": "model", "kv_heads": "model",
+        "mlp": "model", "experts": "model",
+        "embed": None, "head_dim": None, "layers": None,
+    },
+    "fsdp": {
+        "vocab": "model", "heads": "model", "kv_heads": "model",
+        "mlp": "model", "experts": "model",
+        "embed": "data", "head_dim": None, "layers": None,
+    },
+}
+RULE_SETS["sp"] = RULE_SETS["fsdp"]   # + seq-sharded activations (launcher)
+# Serving for huge MoE: expert weights sharded over the data axis too
+# (ZeRO-style for inference; tokens are tiny, weights are not — GSPMD
+# routes tokens via all-to-all instead of replicating 790GB of experts).
+RULE_SETS["ep_serve"] = {
+    "vocab": "model", "heads": "model", "kv_heads": "model",
+    "mlp": "model", "experts": "data", "embed": None,
+    "head_dim": None, "layers": None,
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def spec_for(defn, rules: Dict[str, Any], mesh: Mesh) -> P:
+    parts = []
+    used = set()
+    for dim, ax in zip(defn.shape, defn.axes):
+        mesh_ax = rules.get(ax) if ax else None
+        if (mesh_ax is None or mesh_ax in used
+                or dim % _axis_size(mesh, mesh_ax) != 0):
+            parts.append(None)
+        else:
+            parts.append(mesh_ax)
+            used.add(mesh_ax)
+    return P(*parts)
+
+
+def param_specs(defs: Any, mesh: Mesh, rules: str = "tp") -> Any:
+    rr = RULE_SETS[rules]
+    return jax.tree.map(lambda d: spec_for(d, rr, mesh), defs, is_leaf=is_def)
+
+
+def param_shardings(defs: Any, mesh: Mesh, rules: str = "tp") -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(defs, mesh, rules))
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying the batch: ("pod","data") multi-pod, else "data"."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def data_spec(mesh: Mesh, ndim: int, batch_dim: int = 0) -> P:
+    parts = [None] * ndim
+    ba = batch_axes(mesh)
+    parts[batch_dim] = ba if len(ba) > 1 else ba[0]
+    return P(*parts)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return _axis_size(mesh, batch_axes(mesh))
+
+
+# ------------------------------------------------- activation constraints
+#
+# GSPMD occasionally resolves mixed weight/activation shardings with
+# full-batch activation all-reduces (observed on the whisper fsdp cell:
+# an f32[256,4096,6,64] all-reduce instead of a 24KB weight all-gather).
+# Explicit batch-dim constraints on the residual stream pin the layout.
+# The active mesh is registered by the launcher before tracing; when no
+# mesh is registered (CPU unit tests) constraints are no-ops.
+
+_ACTIVE_MESH: Optional[Mesh] = None
+_SEQ_SHARD: bool = False
+
+
+def set_activation_mesh(mesh: Optional[Mesh], seq_shard: bool = False) -> None:
+    """Register the mesh for activation constraints.
+
+    seq_shard=True additionally shards the sequence dim of [B, S, d]
+    residual activations over the "model" axis (Megatron-style sequence
+    parallelism): per-token ops (norms, residual adds, projections' token
+    dim) run on S/TP tokens per device; GSPMD inserts the all-to-all /
+    all-gather resharding around attention and MoE sorts.  §Perf A3.
+    """
+    global _ACTIVE_MESH, _SEQ_SHARD
+    _ACTIVE_MESH = mesh
+    _SEQ_SHARD = seq_shard
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Constrain x's batch dim to the data axes; no-op without a mesh."""
+    if _ACTIVE_MESH is None:
+        return x
+    mesh = _ACTIVE_MESH
+    ba = batch_axes(mesh)
+    ba = ba if len(ba) > 1 else ba[0]
+    if x.shape[batch_dim] % _axis_size(mesh, ba) != 0:
+        return x
+    parts: list = [None] * x.ndim
+    parts[batch_dim] = ba
+    if (_SEQ_SHARD and x.ndim == 3 and batch_dim == 0
+            and x.shape[1] % _axis_size(mesh, "model") == 0):
+        parts[1] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

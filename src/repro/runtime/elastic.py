@@ -1,0 +1,44 @@
+"""Elastic scaling: re-mesh on device-membership change.
+
+On a real cluster, membership changes arrive from the coordinator; the
+policy below recomputes the nearest valid mesh, and the trainer restores
+from the last checkpoint with the new shardings (parameters are saved
+host-independent, so resharding is a restore-time layout decision).
+
+The policy is pure and unit-tested: given a surviving device count it
+keeps the model axis if possible (TP degree is architecture-critical)
+and shrinks the data axis; batch is kept constant by raising gradient
+accumulation so optimization dynamics are unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    grad_accum: int            # microbatches to keep the global batch
+    note: str
+
+
+def plan_for(n_devices: int, *, model_parallel: int = 16,
+             full_data_parallel: int = 16,
+             pods: int = 1) -> ElasticPlan:
+    """Nearest valid (data, model) factorization for surviving devices."""
+    mp = model_parallel
+    while mp > 1 and n_devices % mp:
+        mp //= 2
+    data = n_devices // mp
+    full_dp = full_data_parallel * pods
+    # keep global batch: accumulate if we lost data-parallel ways
+    accum = max(1, -(-full_dp // max(data, 1)))
+    note = ("full mesh" if mp == model_parallel and data == full_dp
+            else f"degraded: model {model_parallel}->{mp}, data {full_dp}->{data}")
+    if pods > 1 and data % pods == 0 and mp == model_parallel:
+        return ElasticPlan((pods, data // pods, mp), ("pod", "data", "model"),
+                           accum, note)
+    return ElasticPlan((data, mp), ("data", "model"), accum, note)

@@ -1,0 +1,224 @@
+"""Continuous-batching serving engine on the paper's allocator.
+
+Two allocator integrations (DESIGN.md §2b):
+
+* **host (faithful)**: admission runs through the wait-free
+  :class:`~repro.core.allocator.WaitFreeAllocator` — sequence *slots*
+  are the fixed-size blocks, scheduler lanes are the processes.  Each
+  admission/release is O(1) regardless of fleet size, so request
+  scheduling never stalls behind a global lock (the paper's claim,
+  live in the control plane).
+* **device (SPMD)**: KV pages come from per-DP-shard private pools
+  (block_pool inside serve_step) — one O(1) alloc per crossing
+  sequence per step, exactly the private-pool fast path.
+
+The engine is a continuous batcher: new requests are admitted into free
+slots every step; prompts are streamed through the decode path (chunked
+prefill would batch this further; see examples/serve_paged.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import models
+from ..core import NULL, SimContext, WaitFreeAllocator
+from ..models.decode_init import empty_decode_state
+from ..models.transformer import DecodeState
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+def _release_slots(state: DecodeState, mask):
+    """Jit-able: free all pages of masked slots, zero their state.
+
+    mask: bool[DP, Bl].
+    """
+    dp, bl, maxp = state.page_tables.shape
+
+    def free_shard(ids, top, table, m):
+        # push freed page ids back onto the shard stack
+        flat = jnp.where(m[:, None], table, NULL).reshape(-1)
+        valid = flat >= 0
+        rank = jnp.cumsum(valid.astype(jnp.int32)) * valid
+        pos = jnp.where(valid, top + rank - 1, ids.shape[0])
+        ids = ids.at[pos].set(flat, mode="drop")
+        return ids, top + jnp.sum(valid.astype(jnp.int32))
+
+    pool_ids, pool_top = jax.vmap(free_shard)(
+        state.pool_ids, state.pool_top, state.page_tables, mask)
+    page_tables = jnp.where(mask[:, :, None], NULL, state.page_tables)
+    seq_lens = jnp.where(mask, 0, state.seq_lens)
+
+    def zero_masked(tree):
+        def f(a):
+            if a.ndim >= 3 and a.shape[1] == dp and a.shape[2] == bl:
+                m = mask.reshape((1, dp, bl) + (1,) * (a.ndim - 3))
+                return jnp.where(m, jnp.zeros_like(a), a)
+            return a
+        return jax.tree.map(f, tree)
+
+    rings = zero_masked(state.rings)
+    rec = zero_masked(state.rec)
+    return state._replace(page_tables=page_tables, seq_lens=seq_lens,
+                          pool_ids=pool_ids, pool_top=pool_top,
+                          rings=rings, rec=rec)
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, dp: int = 1, b_local: int = 4,
+                 max_len: int = 512, scheduler_lanes: int = 2,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.dp, self.bl = dp, b_local
+        self.max_len = max_len
+        self.state = empty_decode_state(cfg, dp, b_local, max_len)
+        self.greedy = greedy
+
+        self._decode = jax.jit(
+            lambda p, t, s, a: models.decode_step(cfg, p, t, s, active=a),
+            donate_argnums=(2,))
+        self._release = jax.jit(_release_slots, donate_argnums=(0,))
+
+        # host-side wait-free slot allocator: slots are fixed-size blocks.
+        n_slots = dp * b_local
+        self.lane_ctx = SimContext(scheduler_lanes, seed=0)
+        self.slot_alloc = WaitFreeAllocator(
+            self.lane_ctx, ell=max(3 * scheduler_lanes, 4),
+            shared_batches=max(2, n_slots), allow_os_growth=True)
+        # bind allocator block ids <-> engine slots (first n_slots blocks)
+        self._slot_of_block: Dict[int, int] = {}
+        self._block_of_slot: Dict[int, int] = {}
+        self._free_slots = deque(range(n_slots))
+        self.lanes = itertools.cycle(range(scheduler_lanes))
+
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}     # slot -> request
+        self.pending_tokens: Dict[int, List[int]] = {}
+        self.stats = {"steps": 0, "tokens_out": 0, "admitted": 0,
+                      "alloc_steps_max": 0}
+
+    # ------------------------------------------------------------ control
+    def _host_alloc_slot(self) -> Optional[int]:
+        """O(1) wait-free admission through the paper's allocator."""
+        if not self._free_slots:
+            return None
+        lane = next(self.lanes)
+        gen = self.slot_alloc.allocate(lane)
+        try:
+            while True:
+                next(gen)
+        except StopIteration as e:
+            block = e.value
+        op = self.lane_ctx.history[-1]
+        self.stats["alloc_steps_max"] = max(
+            self.stats["alloc_steps_max"], op.steps)
+        slot = self._free_slots.popleft()
+        self._slot_of_block[block] = slot
+        self._block_of_slot[slot] = block
+        return slot
+
+    def _host_free_slot(self, slot: int) -> None:
+        lane = next(self.lanes)
+        block = self._block_of_slot.pop(slot)
+        self._slot_of_block.pop(block)
+        gen = self.slot_alloc.free(lane, block)
+        try:
+            while True:
+                next(gen)
+        except StopIteration:
+            pass
+        self._free_slots.append(slot)
+
+    def submit(self, req: Request) -> None:
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    # -------------------------------------------------------------- step
+    def step(self) -> None:
+        # 1. admission
+        while self.queue and self._free_slots:
+            slot = self._host_alloc_slot()
+            if slot is None:
+                break
+            req = self.queue.popleft()
+            req.slot = slot
+            self.active[slot] = req
+            self.pending_tokens[slot] = list(req.prompt)
+            self.stats["admitted"] += 1
+
+        # 2. one decode step for every active slot
+        tokens = np.zeros((self.dp, self.bl), np.int32)
+        active = np.zeros((self.dp, self.bl), bool)
+        feeding = {}
+        for slot, req in self.active.items():
+            d, b = divmod(slot, self.bl)
+            pend = self.pending_tokens[slot]
+            if pend:
+                tok = pend.pop(0)
+                feeding[slot] = ("prompt", tok)
+            else:
+                tok = req.out_tokens[-1] if req.out_tokens else 1
+                feeding[slot] = ("gen", tok)
+            tokens[d, b] = tok
+            active[d, b] = True
+        if not feeding:
+            return
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(tokens), self.state, jnp.asarray(active))
+        self.stats["steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+
+        # 3. collect outputs / completions
+        finished = []
+        for slot, req in list(self.active.items()):
+            d, b = divmod(slot, self.bl)
+            kind, _ = feeding[slot]
+            if kind == "gen" or not self.pending_tokens[slot]:
+                req.out_tokens.append(int(nxt[d, b]))
+                self.stats["tokens_out"] += 1
+            full = int(np.asarray(self.state.seq_lens)[d, b]) >= self.max_len - 1
+            if len(req.out_tokens) >= req.max_new_tokens or full:
+                finished.append(slot)
+        if finished:
+            mask = np.zeros((self.dp, self.bl), bool)
+            for slot in finished:
+                d, b = divmod(slot, self.bl)
+                mask[d, b] = True
+                req = self.active.pop(slot)
+                req.done = True
+                req.finished_at = time.time()
+                self.pending_tokens.pop(slot, None)
+                self._host_free_slot(slot)
+            self.state = self._release(self.state, jnp.asarray(mask))
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and not self.active:
+                break
+            self.step()
+
+    # ------------------------------------------------------------ metrics
+    def page_occupancy(self) -> float:
+        total = self.state.pool_ids.shape[1] * self.dp
+        free = int(jnp.sum(self.state.pool_top))
+        return 1.0 - free / total

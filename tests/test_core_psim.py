@@ -1,0 +1,198 @@
+"""Tests for the P-SIM shared stack with memory management (Result 2)."""
+
+import random
+
+import pytest
+
+from repro.core import SimContext, Scheduler, WGStackChecker, Event
+from repro.core.memory import BlockMemory
+from repro.core.psim import PSimStack
+from repro.core.sim import NULL, LLSC, LLSCFromTaggedCAS
+
+
+def make_stack(ctx, nodes_per_proc=64):
+    """Standalone stack with trivial per-process node pools."""
+    p = ctx.nprocs
+    mem = BlockMemory(ctx, p * nodes_per_proc, k=2)
+    free = [list(range(pid * nodes_per_proc, (pid + 1) * nodes_per_proc))
+            for pid in range(p)]
+
+    def alloc_node(pid):
+        yield from ctx.local_step(pid)
+        return free[pid].pop()
+
+    def free_node(pid, nd):
+        yield from ctx.local_step(pid)
+        free[pid].append(nd)
+
+    return PSimStack(ctx, mem, alloc_node, free_node), mem, free
+
+
+@pytest.mark.parametrize("p", [2, 3, 4, 8])
+@pytest.mark.parametrize("policy", ["random", "bursty", "round_robin"])
+def test_stack_semantics(p, policy):
+    """Concurrent pushes/pops: pops return exactly the pushed multiset
+    minus what remains; no value delivered twice; LIFO per linearization
+    (validated via snapshot + conservation)."""
+    # Nodes for *all* pushed values can come from one winner's pool, so
+    # size pools generously (the recursive allocator avoids this by
+    # refilling from the shared pool; here pools are static).
+    ctx = SimContext(p, seed=42)
+    stack, mem, _ = make_stack(ctx, nodes_per_proc=24 * p + 16)
+    sched = Scheduler(seed=42)
+    pushed, popped = [], []
+
+    def worker(pid):
+        rng = random.Random(pid * 7)
+        mine = [1000 * (pid + 1) + i for i in range(20)]
+        for v in mine:
+            ok = yield from stack.push(pid, v)
+            assert ok is True
+            pushed.append(v)
+            if rng.random() < 0.5:
+                r = yield from stack.pop(pid)
+                if r != NULL:
+                    popped.append(r)
+
+    for pid in range(p):
+        sched.add(pid, worker(pid))
+    sched.run(policy)
+
+    assert ctx.violations == []
+    remaining = [d for _, d in stack.snapshot_stack()]
+    assert sorted(popped + remaining) == sorted(pushed)
+    assert len(set(popped)) == len(popped), "a value was delivered twice"
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16])
+def test_shared_op_linear_time(p):
+    """Result 2.1: each push/pop is O(p) instructions."""
+    ctx = SimContext(p, seed=0)
+    stack, _, _ = make_stack(ctx, nodes_per_proc=8 * p + 16)
+    sched = Scheduler(seed=0)
+    costs = []
+
+    def worker(pid):
+        for i in range(6):
+            rec = ctx.begin_op(pid, "push")
+            yield from stack.push(pid, pid * 100 + i)
+            ctx.end_op(rec)
+            costs.append(rec.steps)
+            rec = ctx.begin_op(pid, "pop")
+            yield from stack.pop(pid)
+            ctx.end_op(rec)
+            costs.append(rec.steps)
+
+    for pid in range(p):
+        sched.add(pid, worker(pid))
+    sched.run("random")
+    assert max(costs) <= 40 * p + 60, f"p={p}: op cost {max(costs)}"
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_internal_alloc_free_bound(p):
+    """Result 2.2: <= 2p allocate and <= 2p free calls per shared op."""
+    ctx = SimContext(p, seed=1)
+    stack, _, _ = make_stack(ctx, nodes_per_proc=10 * p + 16)
+    sched = Scheduler(seed=1)
+    maxima = [0, 0]
+
+    def worker(pid):
+        for i in range(8):
+            yield from stack.push(pid, pid * 100 + i)
+            a, f = stack.last_op_internal_calls
+            maxima[0] = max(maxima[0], a)
+            maxima[1] = max(maxima[1], f)
+            yield from stack.pop(pid)
+            a, f = stack.last_op_internal_calls
+            maxima[0] = max(maxima[0], a)
+            maxima[1] = max(maxima[1], f)
+
+    for pid in range(p):
+        sched.add(pid, worker(pid))
+    sched.run("bursty")
+    assert maxima[0] <= 2 * p, f"allocs per op {maxima[0]} > 2p"
+    assert maxima[1] <= 2 * p, f"frees per op {maxima[1]} > 2p"
+
+
+def test_node_space_bound():
+    """Result 2.3: <= M + O(p^2) nodes allocated-but-not-freed."""
+    p = 4
+    ctx = SimContext(p, seed=2)
+    stack, _, free = make_stack(ctx, nodes_per_proc=152)
+    sched = Scheduler(seed=2)
+
+    def worker(pid):
+        for i in range(24):
+            yield from stack.push(pid, pid * 1000 + i)
+        for _ in range(12):
+            yield from stack.pop(pid)
+
+    for pid in range(p):
+        sched.add(pid, worker(pid))
+    sched.run("random")
+    assert ctx.violations == []
+    M = len(stack.snapshot_stack())
+    outstanding = p * 96 - sum(len(f) for f in free)
+    assert outstanding <= M + 2 * p * p, (
+        f"{outstanding} nodes un-freed with stack size {M}")
+
+
+def test_small_history_linearizable():
+    """Wing&Gong-checked linearizability on small concurrent histories."""
+    for seed in range(8):
+        p = 3
+        ctx = SimContext(p, seed=seed)
+        stack, _, _ = make_stack(ctx)
+        sched = Scheduler(seed=seed)
+        events = []
+
+        def worker(pid):
+            rng = random.Random(seed * 31 + pid)
+            for i in range(2):
+                v = (pid + 1) * 10 + i
+                t0 = ctx.global_step
+                yield from stack.push(pid, v)
+                events.append(Event(pid, "push", v, True, t0, ctx.global_step))
+                if rng.random() < 0.7:
+                    t0 = ctx.global_step
+                    r = yield from stack.pop(pid)
+                    events.append(Event(
+                        pid, "pop", None, None if r == NULL else r,
+                        t0, ctx.global_step))
+
+        for pid in range(p):
+            sched.add(pid, worker(pid))
+        sched.run("random")
+        assert WGStackChecker(events).check(), f"seed {seed} not linearizable"
+
+
+def test_llsc_semantics_match_tagged_cas():
+    """The black-box LLSC behaves identically to the tagged-CAS build."""
+    for seed in range(6):
+        rng = random.Random(seed)
+        ctx = SimContext(3, seed=seed)
+        a = LLSC(ctx, init=0)
+        b = LLSCFromTaggedCAS(ctx, init=0)
+
+        def drive(obj):
+            out = []
+            rng2 = random.Random(seed)
+            gens = {}
+            for step in range(300):
+                pid = rng2.randrange(3)
+                op = rng2.choice(["ll", "vl", "sc"])
+                if op == "ll":
+                    g = obj.ll(pid)
+                elif op == "vl":
+                    g = obj.vl(pid)
+                else:
+                    g = obj.sc(pid, rng2.randrange(100))
+                try:
+                    while True:
+                        next(g)
+                except StopIteration as e:
+                    out.append((op, pid, e.value))
+            return out
+
+        assert drive(a) == drive(b)

@@ -1,0 +1,170 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.rg_lru.kernel import rg_lru
+from repro.kernels.rg_lru.ref import rg_lru_ref
+
+
+def _tol(dt):
+    return 1e-4 if dt == jnp.float32 else 6e-2
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("B,H,KH,hd,psz,maxp,P,dt", [
+        (4, 8, 2, 128, 16, 6, 64, jnp.float32),
+        (2, 4, 4, 64, 8, 4, 32, jnp.float32),
+        (3, 8, 1, 128, 32, 3, 16, jnp.bfloat16),
+        (1, 16, 8, 64, 16, 5, 48, jnp.float32),
+    ])
+    def test_vs_ref(self, B, H, KH, hd, psz, maxp, P, dt):
+        rng = np.random.RandomState(hash((B, H, KH)) % 2**31)
+        q = jnp.asarray(rng.randn(B, H, hd), dt)
+        kp = jnp.asarray(rng.randn(P, psz, KH, hd), dt)
+        vp = jnp.asarray(rng.randn(P, psz, KH, hd), dt)
+        lens = jnp.asarray(rng.randint(1, maxp * psz, B), jnp.int32)
+        table = np.full((B, maxp), -1, np.int32)
+        used = set()
+        for b in range(B):
+            for i in range(int(np.ceil(float(lens[b]) / psz))):
+                pid = rng.randint(0, P)
+                while pid in used:
+                    pid = rng.randint(0, P)
+                used.add(pid)
+                table[b, i] = pid
+        table = jnp.asarray(table)
+        ref = paged_attention_ref(q, kp, vp, table, lens)
+        out = paged_attention(q, kp, vp, table, lens, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dt), rtol=_tol(dt))
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), psz=st.sampled_from([8, 16]),
+           maxp=st.integers(2, 5))
+    def test_property_random_tables(self, seed, psz, maxp):
+        rng = np.random.RandomState(seed)
+        B, H, KH, hd, P = 2, 4, 2, 64, 24
+        q = jnp.asarray(rng.randn(B, H, hd), jnp.float32)
+        kp = jnp.asarray(rng.randn(P, psz, KH, hd), jnp.float32)
+        vp = jnp.asarray(rng.randn(P, psz, KH, hd), jnp.float32)
+        lens = jnp.asarray(rng.randint(1, maxp * psz, B), jnp.int32)
+        table = np.full((B, maxp), -1, np.int32)
+        avail = list(range(P))
+        rng.shuffle(avail)
+        for b in range(B):
+            for i in range(int(np.ceil(float(lens[b]) / psz))):
+                table[b, i] = avail.pop()
+        ref = paged_attention_ref(q, kp, vp, jnp.asarray(table), lens)
+        out = paged_attention(q, kp, vp, jnp.asarray(table), lens,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,S,hd,bq,bk,dt", [
+        (2, 3, 512, 64, 256, 256, jnp.float32),
+        (1, 2, 256, 128, 128, 64, jnp.float32),
+        (2, 2, 256, 128, 128, 128, jnp.bfloat16),
+        (1, 1, 128, 64, 64, 128, jnp.float32),
+    ])
+    def test_vs_ref_causal(self, B, H, S, hd, bq, bk, dt):
+        rng = np.random.RandomState(0)
+        q = jnp.asarray(rng.randn(B, H, S, hd), dt)
+        k = jnp.asarray(rng.randn(B, H, S, hd), dt)
+        v = jnp.asarray(rng.randn(B, H, S, hd), dt)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dt), rtol=_tol(dt))
+
+    def test_bidirectional(self):
+        rng = np.random.RandomState(1)
+        q = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+        k = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+        v = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+        ref = flash_attention_ref(q, k, v, causal=False)
+        out = flash_attention(q, k, v, causal=False, block_q=128,
+                              block_k=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("B,S,H,P,N,chunk", [
+        (2, 256, 4, 64, 32, 64),
+        (1, 128, 2, 32, 64, 128),
+        (1, 128, 1, 64, 128, 32),
+    ])
+    def test_vs_sequential_recurrence(self, B, S, H, P, N, chunk):
+        rng = np.random.RandomState(2)
+        x = jnp.asarray(rng.randn(B, S, H, P) * 0.5, jnp.float32)
+        dt = jnp.asarray(rng.rand(B, S, H) * 0.5 + 0.1, jnp.float32)
+        A = jnp.asarray(-np.abs(rng.randn(H)) * 0.5, jnp.float32)
+        Bm = jnp.asarray(rng.randn(B, S, N) * 0.3, jnp.float32)
+        Cm = jnp.asarray(rng.randn(B, S, N) * 0.3, jnp.float32)
+        D = jnp.asarray(rng.randn(H) * 0.1, jnp.float32)
+        yr, hr = ssd_scan_ref(x, dt, A, Bm, Cm, D)
+        yk, hk = ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   atol=2e-3, rtol=2e-3)
+        np.testing.assert_allclose(np.asarray(hk.transpose(0, 1, 3, 2)),
+                                   np.asarray(hr), atol=2e-3, rtol=2e-3)
+
+    def test_matches_model_ssd_chunked(self):
+        """The model-layer chunked SSD and the kernel agree."""
+        from repro.models.ssm import ssd_chunked
+        rng = np.random.RandomState(3)
+        B, S, H, P, N = 1, 128, 2, 32, 16
+        x = jnp.asarray(rng.randn(B, S, H, P) * 0.5, jnp.float32)
+        dt = jnp.asarray(rng.rand(B, S, H) * 0.5 + 0.1, jnp.float32)
+        A = jnp.asarray(-np.abs(rng.randn(H)) * 0.5, jnp.float32)
+        Bm = jnp.asarray(rng.randn(B, S, N) * 0.3, jnp.float32)
+        Cm = jnp.asarray(rng.randn(B, S, N) * 0.3, jnp.float32)
+        D = jnp.asarray(rng.randn(H) * 0.1, jnp.float32)
+        ym, hm = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=64)
+        yk, hk = ssd_scan(x, dt, A, Bm, Cm, D, chunk=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(ym),
+                                   atol=2e-3, rtol=2e-3)
+        np.testing.assert_allclose(
+            np.asarray(hk.transpose(0, 1, 3, 2)), np.asarray(hm),
+            atol=2e-3, rtol=2e-3)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("B,S,d", [(2, 256, 256), (1, 128, 512),
+                                       (3, 128, 128)])
+    def test_vs_sequential(self, B, S, d):
+        rng = np.random.RandomState(4)
+        a = jnp.asarray(rng.rand(B, S, d) * 0.9, jnp.float32)
+        b = jnp.asarray(rng.randn(B, S, d) * 0.5, jnp.float32)
+        hr, hfr = rg_lru_ref(a, b)
+        hk, hfk = rg_lru(a, b, interpret=True)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(hfk), np.asarray(hfr),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_initial_state(self):
+        rng = np.random.RandomState(5)
+        B, S, d = 2, 128, 256
+        a = jnp.asarray(rng.rand(B, S, d) * 0.9, jnp.float32)
+        b = jnp.asarray(rng.randn(B, S, d) * 0.5, jnp.float32)
+        h0 = jnp.asarray(rng.randn(B, d), jnp.float32)
+        hr, _ = rg_lru_ref(a, b, h0)
+        hk, _ = rg_lru(a, b, h0, interpret=True)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                                   atol=1e-4, rtol=1e-4)

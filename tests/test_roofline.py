@@ -1,0 +1,116 @@
+"""Unit tests for the HLO-walking roofline cost model."""
+
+import textwrap
+
+import pytest
+
+from repro.launch import roofline as rf
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %fused_dus (p0: f32[10,128,128], p1: f32[1,128,128], p2: s32[]) -> f32[10,128,128] {
+      %p0 = f32[10,128,128]{2,1,0} parameter(0)
+      %p1 = f32[1,128,128]{2,1,0} parameter(1)
+      %p2 = s32[] parameter(2)
+      %c0 = s32[] constant(0)
+      ROOT %dus = f32[10,128,128]{2,1,0} dynamic-update-slice(%p0, %p1, %p2, %c0, %c0)
+    }
+
+    %body (arg: (s32[], f32[64,64], f32[8,64,64])) -> (s32[], f32[64,64], f32[8,64,64]) {
+      %arg = (s32[], f32[64,64]{1,0}, f32[8,64,64]{2,1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %x = f32[64,64]{1,0} get-tuple-element(%arg), index=1
+      %ws = f32[8,64,64]{2,1,0} get-tuple-element(%arg), index=2
+      %c0 = s32[] constant(0)
+      %w = f32[1,64,64]{2,1,0} dynamic-slice(%ws, %i, %c0, %c0), dynamic_slice_sizes={1,64,64}
+      %wb = f32[64,64]{1,0} bitcast(%w)
+      %dot = f32[64,64]{1,0} dot(%x, %wb), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[64,64]{1,0} all-reduce(%dot), replica_groups={}, to_apply=%add_comp
+      %c1 = s32[] constant(1)
+      %ip = s32[] add(%i, %c1)
+      ROOT %t = (s32[], f32[64,64]{1,0}, f32[8,64,64]{2,1,0}) tuple(%ip, %ar, %ws)
+    }
+
+    %cond (arg: (s32[], f32[64,64], f32[8,64,64])) -> pred[] {
+      %arg = (s32[], f32[64,64]{1,0}, f32[8,64,64]{2,1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %n = s32[] constant(8)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    %add_comp (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (x: f32[64,64], ws: f32[8,64,64], big: f32[10,128,128], upd: f32[1,128,128]) -> f32[64,64] {
+      %x = f32[64,64]{1,0} parameter(0)
+      %ws = f32[8,64,64]{2,1,0} parameter(1)
+      %big = f32[10,128,128]{2,1,0} parameter(2)
+      %upd = f32[1,128,128]{2,1,0} parameter(3)
+      %c0 = s32[] constant(0)
+      %f = f32[10,128,128]{2,1,0} fusion(%big, %upd, %c0), kind=kLoop, calls=%fused_dus
+      %init = (s32[], f32[64,64]{1,0}, f32[8,64,64]{2,1,0}) tuple(%c0, %x, %ws)
+      %loop = (s32[], f32[64,64]{1,0}, f32[8,64,64]{2,1,0}) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[64,64]{1,0} get-tuple-element(%loop), index=1
+    }
+""")
+
+
+class TestParser:
+    def test_computations_split(self):
+        comps = rf.parse_hlo(HLO)
+        assert {"fused_dus", "body", "cond", "add_comp", "main"} <= set(comps)
+
+    def test_while_trip_count_multiplier(self):
+        comps = rf.parse_hlo(HLO)
+        mult = rf._call_multipliers(comps)
+        assert mult["body"] == 8.0         # constant(8) in the condition
+        assert mult["main"] == 1.0
+
+    def test_dot_flops_with_trip_count(self):
+        cost = rf.analyze_hlo(HLO)
+        # one 64x64x64 dot per iteration, 8 iterations
+        assert cost.flops == pytest.approx(8 * 2 * 64 * 64 * 64)
+
+    def test_collective_bytes_with_factor_and_trip(self):
+        cost = rf.analyze_hlo(HLO)
+        # all-reduce of f32[64,64] x8 iterations x2 (ring factor)
+        assert cost.coll_bytes_weighted == pytest.approx(8 * 64 * 64 * 4 * 2)
+        assert cost.coll_counts["all-reduce"] == 8
+
+    def test_dus_fusion_charged_as_slice(self):
+        comps = rf.parse_hlo(HLO)
+        assert rf._dus_update_bytes(comps["fused_dus"]) == 1 * 128 * 128 * 4
+        cost = rf.analyze_hlo(HLO)
+        # the DUS fusion must NOT be charged the 10x full buffer twice
+        assert cost.bytes < 3 * 10 * 128 * 128 * 4 + 8 * 6 * 64 * 64 * 4 + 1e5
+
+    def test_promoted_allreduce_halved(self):
+        hlo = HLO.replace("to_apply=%add_comp", "to_apply=%add_comp_promoted")
+        cost = rf.analyze_hlo(hlo)
+        assert cost.coll_bytes_weighted == pytest.approx(8 * 64 * 64 * 4)
+
+    def test_shape_bytes(self):
+        assert rf._shape_bytes("bf16[4,8]{1,0}") == 64
+        assert rf._shape_bytes("(f32[2,2]{1,0}, s32[3]{0})") == 28
+        assert rf._shape_bytes("pred[]") == 1
+
+
+class TestRoofline:
+    def test_terms_and_bottleneck(self):
+        r = rf.Roofline(chips=256, flops=1.97e14, hbm_bytes=8.19e11,
+                        coll_bytes=5e10, model_flops=1e16)
+        assert r.t_compute == pytest.approx(1.0)
+        assert r.t_memory == pytest.approx(1.0)
+        assert r.t_collective == pytest.approx(1.0)
+        r2 = rf.Roofline(chips=256, flops=1e12, hbm_bytes=8.19e12,
+                         coll_bytes=1e9)
+        assert r2.bottleneck == "memory"
+
+    def test_mfu_bound(self):
+        r = rf.Roofline(chips=1, flops=1.97e14, hbm_bytes=0, coll_bytes=0,
+                        model_flops=0.5 * 1.97e14)
+        assert r.mfu_bound == pytest.approx(0.5)
