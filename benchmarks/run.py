@@ -9,16 +9,30 @@ on them:
   result1_space_overhead     — Theta(p^2) metadata (Result 1.4)
   result1_memory_blowup      — vs Hoard-style Theta(p*S) (section 3.1)
   result2_shared_op_cost     — O(p) shared stack ops (Result 2.1)
-  jax_block_pool_o1          — device pool: cost independent of m
-  jax_paged_kv_append        — paged KV append throughput
-  serving_throughput         — continuous-batching engine tok/s
+  jax_block_pool_o1          — device pool: alloc AND chunked alloc_n
+                               cost independent of m
+  jax_paged_kv_append        — paged KV append + append_chunk throughput
+  serving_throughput         — continuous-batching engine tok/s:
+                               legacy (pre-refactor single-token) vs
+                               chunked device-resident step, on a
+                               decode-heavy and a prompt-heavy mix,
+                               in the same run
 
-Output: ``name,us_per_call,derived`` CSV rows.
+Output: ``name,us_per_call,derived`` CSV rows, plus machine-readable
+``BENCH_serving.json`` (written next to the CWD) so the serving perf
+trajectory is tracked across PRs.
 """
 
+import json
+import os
 import random
 import statistics
+import sys
 import time
+
+# repo root on sys.path: result2_shared_op_cost borrows a helper from
+# tests/, which `python benchmarks/run.py` would otherwise not resolve
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def _time_us(fn, n=5):
@@ -155,20 +169,48 @@ def result2_shared_op_cost():
 
 
 def jax_block_pool_o1():
+    """alloc and chunked alloc_n cost vs pool size m (donated buffers so
+    the free-stack is updated in place, as the serving step does — an
+    un-donated jit would copy the m-sized stack and mask the O(R) op)."""
     import jax
     import jax.numpy as jnp
     from repro.core import block_pool
-    us_by_m = {}
-    for m in (1 << 10, 1 << 14, 1 << 18):
+
+    def timed_pairs(m, step):
         pool = block_pool.create(m)
-        alloc = jax.jit(block_pool.alloc)
-        mask = jnp.ones(64, bool)
-        pool2, ids = alloc(pool, mask)          # compile
-        jax.block_until_ready(ids)
-        us_by_m[m] = _time_us(
-            lambda: jax.block_until_ready(alloc(pool, mask)[1]), n=20)
-    derived = "us_by_pool_size=" + "/".join(
+        pool = step(pool)                        # compile
+        jax.block_until_ready(pool.top)
+        ts = []
+        for _ in range(20):
+            t0 = time.perf_counter()
+            pool = step(pool)
+            jax.block_until_ready(pool.top)
+            ts.append((time.perf_counter() - t0) * 1e6)
+        return statistics.median(ts)
+
+    counts = jnp.tile(jnp.asarray([2, 0, 3, 1], jnp.int32), 16)  # 64 slots
+    mask = jnp.ones(64, bool)
+    us_by_m, usn_by_m = {}, {}
+    for m in (1 << 10, 1 << 14, 1 << 18):
+        alloc = jax.jit(block_pool.alloc, donate_argnums=(0,))
+        alloc_n = jax.jit(block_pool.alloc_n, static_argnums=(2,),
+                          donate_argnums=(0,))
+        freef = jax.jit(block_pool.free, donate_argnums=(0,))
+
+        def pair(pool, alloc=alloc, freef=freef):
+            pool, ids = alloc(pool, mask)
+            return freef(pool, ids)
+
+        def pair_n(pool, alloc_n=alloc_n, freef=freef):
+            pool, ids = alloc_n(pool, counts, 4)
+            return freef(pool, ids.reshape(-1))
+
+        us_by_m[m] = timed_pairs(m, pair)
+        usn_by_m[m] = timed_pairs(m, pair_n)
+    derived = ("us_by_pool_size=" + "/".join(
         f"{m}:{u:.1f}" for m, u in us_by_m.items())
+        + " alloc_n_us_by_pool_size=" + "/".join(
+        f"{m}:{u:.1f}" for m, u in usn_by_m.items()))
     print(f"jax_block_pool_o1,{us_by_m[1 << 18]:.2f},{derived}")
 
 
@@ -179,36 +221,88 @@ def jax_paged_kv_append():
     cache = kv_cache.create(num_pages=256, page_size=16, kv_heads=4,
                             head_dim=64, max_seqs=16, max_pages_per_seq=16)
     app = jax.jit(kv_cache.append)
+    appc = jax.jit(kv_cache.append_chunk)
     k = jnp.ones((16, 4, 64))
     v = jnp.ones((16, 4, 64))
     act = jnp.ones(16, bool)
-    cache, ok = app(cache, k, v, act)
-    jax.block_until_ready(ok)
+    C = 16
+    kc = jnp.ones((16, C, 4, 64))
+    vc = jnp.ones((16, C, 4, 64))
+    lens = jnp.full((16,), C, jnp.int32)
+    jax.block_until_ready(app(cache, k, v, act)[1])          # compile
+    jax.block_until_ready(appc(cache, kc, vc, lens)[1])
     us = _time_us(lambda: jax.block_until_ready(app(cache, k, v, act)[1]),
                   n=20)
-    print(f"jax_paged_kv_append,{us:.2f},tokens_per_call=16")
+    usc = _time_us(lambda: jax.block_until_ready(
+        appc(cache, kc, vc, lens)[1]), n=20)
+    print(f"jax_paged_kv_append,{us:.2f},tokens_per_call=16 "
+          f"chunk_us={usc:.2f} chunk_tokens_per_call={16 * C} "
+          f"chunk_us_per_token={usc / (16 * C):.3f}")
+
+
+def _run_serving_mix(cfg, params, prompts, max_new, legacy, chunk):
+    import numpy as np
+    from repro.serving.engine import Request, ServingEngine
+    eng = ServingEngine(cfg, params, dp=2, b_local=2, max_len=96,
+                        chunk_size=chunk, legacy=legacy)
+    # warmup: compile every step shape (chunk prefill, T=1 decode,
+    # release) off the clock
+    w = Request(-1, prompt=list(range(2, 2 + chunk + 2)), max_new_tokens=2)
+    eng.submit(w)
+    eng.run(max_steps=100)
+    eng.stats.update(steps=0, tokens_out=0, prompt_tokens=0)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, prompt=list(p), max_new_tokens=max_new))
+    t0 = time.perf_counter()
+    eng.run(max_steps=4000)
+    dt = time.perf_counter() - t0
+    total = eng.stats["tokens_out"] + eng.stats["prompt_tokens"]
+    return {
+        "gen_tok_per_s": round(eng.stats["tokens_out"] / dt, 1),
+        "total_tok_per_s": round(total / dt, 1),
+        "steps": eng.stats["steps"],
+        "us_per_step": round(dt * 1e6 / max(eng.stats["steps"], 1)),
+        "wall_s": round(dt, 3),
+        "alloc_O1_max": eng.stats["alloc_steps_max"],
+        "leak_free": eng.page_occupancy() == 0.0,
+    }
 
 
 def serving_throughput():
+    """Legacy vs chunked engine on decode-heavy and prompt-heavy mixes
+    (same params, same run) + BENCH_serving.json for trend tracking."""
     import numpy as np
     import jax
     from repro import models
     from repro.configs import get_config, smoke_config
-    from repro.serving.engine import Request, ServingEngine
     cfg = smoke_config(get_config("olmo-1b"))
     params = models.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, dp=2, b_local=2, max_len=64)
     rng = np.random.RandomState(0)
-    for i in range(12):
-        eng.submit(Request(i, prompt=list(rng.randint(1, 255, 6)),
-                           max_new_tokens=6))
-    t0 = time.perf_counter()
-    eng.run(max_steps=400)
-    dt = time.perf_counter() - t0
-    tps = eng.stats["tokens_out"] / dt
-    us = dt * 1e6 / max(eng.stats["steps"], 1)
-    print(f"serving_throughput,{us:.0f},tok_per_s={tps:.1f} "
-          f"steps={eng.stats['steps']} alloc_O1_max={eng.stats['alloc_steps_max']}")
+    chunk = 16
+    mixes = {
+        # prompt len >= 4x generation len: chunked prefill dominates
+        "prompt_heavy": ([list(rng.randint(1, 255, 48)) for _ in range(12)], 8),
+        "decode_heavy": ([list(rng.randint(1, 255, 6)) for _ in range(12)], 24),
+    }
+    report = {"config": cfg.name, "chunk_size": chunk, "mixes": {}}
+    for mix, (prompts, max_new) in mixes.items():
+        legacy = _run_serving_mix(cfg, params, prompts, max_new,
+                                  legacy=True, chunk=chunk)
+        chunked = _run_serving_mix(cfg, params, prompts, max_new,
+                                   legacy=False, chunk=chunk)
+        speedup = (chunked["total_tok_per_s"] /
+                   max(legacy["total_tok_per_s"], 1e-9))
+        report["mixes"][mix] = {"legacy": legacy, "chunked": chunked,
+                                "speedup_total": round(speedup, 2)}
+        print(f"serving_throughput,{chunked['us_per_step']},mix={mix} "
+              f"chunked_tok_per_s={chunked['total_tok_per_s']} "
+              f"legacy_tok_per_s={legacy['total_tok_per_s']} "
+              f"speedup={speedup:.2f}x steps={chunked['steps']} "
+              f"alloc_O1_max={chunked['alloc_O1_max']}")
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report
 
 
 def main() -> None:

@@ -1,10 +1,14 @@
 """End-to-end serving driver: batched requests over paged KV cache.
 
 The engine admits requests through the paper's wait-free allocator
-(sequence slots = fixed-size blocks), streams prompts + generation
-through the paged decode path, and reports allocator + paging metrics.
+(sequence slots = fixed-size blocks), streams prompts through chunked
+prefill (``--chunk`` tokens per step, each chunk's pages allocated in
+one O(1)-per-request ``alloc_n`` batch), and decodes fully on device —
+greedy sampling, done-detection, and page release all live inside the
+jitted step, so the host syncs once per step on a packed status array.
 
   PYTHONPATH=src python examples/serve_paged.py [--arch recurrentgemma-2b]
+  PYTHONPATH=src python examples/serve_paged.py --legacy   # pre-refactor path
 """
 
 import argparse
@@ -23,19 +27,26 @@ def main():
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=0,
+                    help="fixed prompt length (0 = random 4..24)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prefill chunk size (tokens per step)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="pre-refactor single-token host-synced path")
     args = ap.parse_args()
 
     cfg = smoke_config(get_config(args.arch))
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params, dp=2, b_local=4, max_len=96,
-                           scheduler_lanes=4)
+                           scheduler_lanes=4, chunk_size=args.chunk,
+                           legacy=args.legacy)
 
     rng = np.random.RandomState(0)
     reqs = []
     for rid in range(args.requests):
+        plen = args.prompt_len or rng.randint(4, 24)
         r = Request(rid,
-                    prompt=list(rng.randint(1, cfg.vocab - 1,
-                                            rng.randint(4, 24))),
+                    prompt=list(rng.randint(1, cfg.vocab - 1, plen)),
                     max_new_tokens=args.max_new)
         reqs.append(r)
         engine.submit(r)
@@ -49,10 +60,13 @@ def main():
 
     lat = [r.finished_at - r.submitted_at for r in reqs]
     s = engine.stats
-    print(f"arch={cfg.name}")
-    print(f"requests={s['admitted']} tokens={s['tokens_out']} "
-          f"steps={s['steps']} wall={dt:.1f}s "
-          f"throughput={s['tokens_out']/dt:.1f} tok/s")
+    total = s["tokens_out"] + s["prompt_tokens"]
+    print(f"arch={cfg.name} path={'legacy' if args.legacy else 'chunked'} "
+          f"chunk={args.chunk}")
+    print(f"requests={s['admitted']} gen_tokens={s['tokens_out']} "
+          f"prompt_tokens={s['prompt_tokens']} steps={s['steps']} "
+          f"wall={dt:.1f}s throughput={total/dt:.1f} tok/s "
+          f"({s['tokens_out']/dt:.1f} gen tok/s)")
     print(f"p50 latency={sorted(lat)[len(lat)//2]*1e3:.0f}ms "
           f"p99={sorted(lat)[-1]*1e3:.0f}ms")
     print(f"peak page occupancy={peak_occ:.2%}  "

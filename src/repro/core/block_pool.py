@@ -59,6 +59,56 @@ def alloc(pool: BlockPool, mask: jax.Array) -> Tuple[BlockPool, jax.Array]:
     return BlockPool(pool.free_ids, pool.top - n_taken), ids.astype(jnp.int32)
 
 
+def alloc_n(pool: BlockPool, counts: jax.Array,
+            max_per_slot: int) -> Tuple[BlockPool, jax.Array]:
+    """Allocate ``counts[i]`` blocks for slot i in ONE fixed-shape gather.
+
+    counts: int32[R] with 0 <= counts[i] <= max_per_slot (static).
+    Returns (new_pool, ids[R, max_per_slot]) — row i holds counts[i]
+    valid ids followed by NULL padding.  Grants are all-or-nothing per
+    slot in slot order: because the cumulative demand is monotone, a
+    denied slot denies every later slot too (prefix grants), so callers
+    can detect failure from the last needed id alone.  O(R *
+    max_per_slot) work, independent of the pool size m — the chunked
+    analogue of :func:`alloc` (multi-page demand per step absorbed in
+    one batch, the paper's batch-granularity transfer).
+    """
+    R = counts.shape[0]
+    counts = jnp.clip(counts.astype(jnp.int32), 0, max_per_slot)
+    k = jnp.arange(max_per_slot, dtype=jnp.int32)[None, :]
+    want = k < counts[:, None]                     # [R, K]
+    have = jnp.cumsum(counts) <= pool.top          # prefix-feasible slots
+    take = want & have[:, None]
+    flat = take.reshape(-1).astype(jnp.int32)
+    rank = (jnp.cumsum(flat) * flat).reshape(R, max_per_slot)  # 1-based
+    idx = jnp.where(take, pool.top - rank, 0)
+    ids = jnp.where(take, pool.free_ids[idx], NULL)
+    n_taken = jnp.sum(flat)
+    return BlockPool(pool.free_ids, pool.top - n_taken), ids.astype(jnp.int32)
+
+
+def chunk_page_plan(seq_lens: jax.Array, lens: jax.Array, psz: int,
+                    maxp: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Page demand for appending ``lens`` tokens per sequence (elementwise
+    over any leading shape).  Returns (lens, pages_before, counts) with
+    lens zeroed where the chunk would overflow a ``maxp``-page table —
+    the all-or-nothing contract shared by kv_cache.append_chunk and the
+    model's chunked decode path."""
+    lens = jnp.where((seq_lens + lens + psz - 1) // psz <= maxp, lens, 0)
+    pages_before = (seq_lens + psz - 1) // psz
+    counts = (seq_lens + lens + psz - 1) // psz - pages_before
+    return lens, pages_before, counts
+
+
+def granted_mask(ids: jax.Array, counts: jax.Array) -> jax.Array:
+    """Did :func:`alloc_n` grant a request in full?  Prefix-grant
+    semantics make one probe of the last needed id sufficient.
+    ids: [..., K]; counts: [...] -> bool[...]."""
+    last = jnp.take_along_axis(
+        ids, jnp.maximum(counts - 1, 0)[..., None], axis=-1)[..., 0]
+    return (counts == 0) | (last >= 0)
+
+
 def free(pool: BlockPool, ids: jax.Array) -> BlockPool:
     """Return blocks to the pool; slots with id == NULL are ignored.
 

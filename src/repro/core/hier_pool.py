@@ -69,6 +69,27 @@ def alloc(pool: HierPool, want: jax.Array) -> Tuple[HierPool, jax.Array]:
     return pool._replace(private_top=new_top), ids
 
 
+def alloc_n(pool: HierPool, counts: jax.Array,
+            max_per_lane: int) -> Tuple[HierPool, jax.Array]:
+    """Per-lane batched allocate: counts int32[L] -> ids int32[L, K].
+
+    The chunked-demand fast path: a lane appending C tokens per step
+    needs up to ceil(C / page_size) blocks at once.  All-or-nothing per
+    lane, private-stack only — with the §4.2 invariant ``ell >= max
+    per-step demand`` a lane's private pool never runs dry between
+    rebalances, so this never touches the shared pool.  O(L * K) work.
+    """
+    counts = jnp.clip(counts.astype(jnp.int32), 0, max_per_lane)
+    ok = counts <= pool.private_top
+    n = jnp.where(ok, counts, 0)
+    k = jnp.arange(max_per_lane, dtype=jnp.int32)[None, :]
+    want = k < n[:, None]
+    idx = jnp.maximum(pool.private_top[:, None] - 1 - k, 0)
+    ids = jnp.take_along_axis(pool.private_ids, idx, axis=1)
+    ids = jnp.where(want, ids, NULL)
+    return pool._replace(private_top=pool.private_top - n), ids
+
+
 def free(pool: HierPool, ids: jax.Array) -> HierPool:
     """Per-lane free: ids int32[L] (NULL = no-op for that lane).
 

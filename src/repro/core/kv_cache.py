@@ -72,15 +72,70 @@ def append(cache: PagedKVCache, k: jax.Array, v: jax.Array,
 
     page_ids = page_tables[rows, page_idx]
     write = ok & (page_ids >= 0)
-    tgt = jnp.where(write, page_ids, 0)
+    # masked slots scatter to an out-of-range page and are dropped; the
+    # previous read-modify-write idiom (write old value back to page 0)
+    # raced with a real write to page 0 at the same position
+    tgt = jnp.where(write, page_ids, cache.k_pages.shape[0])
     k_pages = cache.k_pages.at[tgt, pos_in_page].set(
-        jnp.where(write[:, None, None], k.astype(cache.k_pages.dtype),
-                  cache.k_pages[tgt, pos_in_page]))
+        k.astype(cache.k_pages.dtype), mode="drop")
     v_pages = cache.v_pages.at[tgt, pos_in_page].set(
-        jnp.where(write[:, None, None], v.astype(cache.v_pages.dtype),
-                  cache.v_pages[tgt, pos_in_page]))
+        v.astype(cache.v_pages.dtype), mode="drop")
 
     seq_lens = cache.seq_lens + write.astype(jnp.int32)
+    return PagedKVCache(pool, k_pages, v_pages, page_tables, seq_lens), ok
+
+
+def append_chunk(cache: PagedKVCache, k: jax.Array, v: jax.Array,
+                 lens: jax.Array,
+                 active: jax.Array | None = None
+                 ) -> Tuple["PagedKVCache", jax.Array]:
+    """Append up to C tokens of K/V per sequence in one fixed-shape call.
+
+    k, v: [max_seqs, C, kv_heads, head_dim]; lens: int32[max_seqs] —
+    tokens to append per sequence (0 <= lens[s] <= C); active:
+    bool[max_seqs] (default all).  Pages for the whole chunk
+    (ceil(C/psz) worst case per sequence) are taken from the pool in ONE
+    :func:`block_pool.alloc_n` call, so cost stays O(max_seqs * C),
+    independent of the pool size m.  Returns (cache, ok[max_seqs]) — ok
+    False where the allocation was denied or the chunk would overflow
+    the page table; denied sequences append nothing (all-or-nothing).
+    """
+    S, C = k.shape[0], k.shape[1]
+    psz = page_size(cache)
+    maxp = cache.page_tables.shape[1]
+    num_pages = cache.k_pages.shape[0]
+    if active is None:
+        active = jnp.ones((S,), bool)
+    L = cache.seq_lens
+    n = jnp.where(active, jnp.clip(lens.astype(jnp.int32), 0, C), 0)
+    asked = n
+    n, pages_before, counts = block_pool.chunk_page_plan(L, n, psz, maxp)
+
+    kmax = -(-C // psz)                            # ceil(C / psz), static
+    pool, ids = block_pool.alloc_n(cache.pool, counts, kmax)
+    ok = active & (n == asked) & block_pool.granted_mask(ids, counts)
+    n = jnp.where(ok, n, 0)
+
+    rows = jnp.arange(S)[:, None]
+    kk = jnp.arange(kmax)[None, :]
+    slot = pages_before[:, None] + kk
+    new_page = (kk < counts[:, None]) & ok[:, None] & (ids >= 0)
+    slot = jnp.where(new_page, slot, maxp)         # out-of-range => dropped
+    page_tables = cache.page_tables.at[rows, slot].set(ids, mode="drop")
+
+    t = jnp.arange(C)[None, :]
+    pos = L[:, None] + t                           # [S, C] absolute positions
+    write = t < n[:, None]
+    pid = page_tables[rows, jnp.minimum(pos // psz, maxp - 1)]
+    write = write & (pid >= 0)
+    pid = jnp.where(write, pid, num_pages)         # out-of-range => dropped
+    pip = pos % psz
+    k_pages = cache.k_pages.at[pid, pip].set(
+        k.astype(cache.k_pages.dtype), mode="drop")
+    v_pages = cache.v_pages.at[pid, pip].set(
+        v.astype(cache.v_pages.dtype), mode="drop")
+
+    seq_lens = L + n
     return PagedKVCache(pool, k_pages, v_pages, page_tables, seq_lens), ok
 
 
@@ -106,12 +161,13 @@ def gather_kv(cache: PagedKVCache, seq_id: int | jax.Array,
     jnp oracle used by ref implementations and the CPU dry-run path.
     """
     psz = page_size(cache)
-    n_pages = max_len // psz
-    table = jax.lax.dynamic_slice(
+    n_pages = -(-max_len // psz)   # round UP: a partial page still holds
+    table = jax.lax.dynamic_slice(  # live tokens; masking trims the tail
         cache.page_tables, (seq_id, 0), (1, n_pages))[0]
     safe = jnp.maximum(table, 0)
     k = cache.k_pages[safe].reshape(n_pages * psz, *cache.k_pages.shape[2:])
     v = cache.v_pages[safe].reshape(n_pages * psz, *cache.v_pages.shape[2:])
-    valid = (jnp.arange(n_pages * psz) <
-             cache.seq_lens[seq_id]) & jnp.repeat(table >= 0, psz)
+    pos = jnp.arange(n_pages * psz)
+    valid = ((pos < cache.seq_lens[seq_id]) & (pos < max_len)
+             & jnp.repeat(table >= 0, psz))
     return k, v, valid

@@ -12,6 +12,8 @@ import functools
 import jax
 
 from .kernel import paged_attention as _kernel
+from .kernel import paged_attention_chunk as _chunk_kernel
+from .ref import paged_attention_chunk_ref as _chunk_ref
 from .ref import paged_attention_ref as _ref
 
 
@@ -32,3 +34,18 @@ def paged_attention(q, k_pages, v_pages, page_table, seq_lens,
         return _kernel(q, k_pages, v_pages, page_table, seq_lens,
                        interpret=True)
     return _ref(q, k_pages, v_pages, page_table, seq_lens)
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def paged_attention_chunk(q, k_pages, v_pages, page_table, base_lens,
+                          force: str = "auto"):
+    """Chunked-prefill variant; same dispatch contract as above.
+
+    q: [B, T, H, hd]; base_lens: sequence lengths before the chunk.
+    """
+    if force == "kernel" or (force == "auto" and _on_tpu()):
+        return _chunk_kernel(q, k_pages, v_pages, page_table, base_lens)
+    if force == "interpret":
+        return _chunk_kernel(q, k_pages, v_pages, page_table, base_lens,
+                             interpret=True)
+    return _chunk_ref(q, k_pages, v_pages, page_table, base_lens)

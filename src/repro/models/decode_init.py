@@ -37,6 +37,20 @@ def empty_decode_state(cfg, dp: int, b_local: int, max_len: int) -> DecodeState:
                        pool_ids, pool_top, enc_kv)
 
 
+def empty_serve_arrays(dp: int, b_local: int):
+    """Device-resident per-slot serving registers: (last_tok, out_count,
+    budget), all int32[dp, b_local] zeros.
+
+    last_tok feeds the next decode step without a host round-trip;
+    out_count/budget drive on-device done-detection (see
+    serving.engine._serve_step).  The engine writes budget/out_count at
+    admission (host->device set, off the sync path) and the jitted step
+    owns them afterwards.
+    """
+    z = jnp.zeros((dp, b_local), jnp.int32)
+    return z, z, z
+
+
 def load_prefill(cfg, state: DecodeState, caches: Dict[str, Any],
                  prompt_len: int) -> DecodeState:
     """Scatter dense prefill caches into the paged/ring/recurrent state.

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 from .layers import (ParamDef, chunked_softmax_xent, init_tree, is_def,
                      logits_apply, shape_tree)
 from .transformer import (DecodeState, decode_state_defs, forward_decode,
-                          forward_prefill, forward_train, model_defs)
+                          forward_decode_chunk, forward_prefill,
+                          forward_train, model_defs)
 
 
 def param_defs(cfg):
@@ -83,3 +84,26 @@ def decode_step(cfg, params, tokens, state: DecodeState, active=None):
     x, state = forward_decode(cfg, params, tokens, state, active=active)
     logits = logits_apply(cfg, params["embed"], x)
     return logits, state
+
+
+def decode_step_chunk(cfg, params, tokens, state: DecodeState, lens,
+                      active=None):
+    """Chunked decode/prefill step:
+    (logits [DP, Bl, T, V], new state, ok bool[DP, Bl]).
+
+    Processes up to T tokens per sequence (lens gives each sequence's
+    live count); logits are returned for every chunk position so
+    callers can sample at position lens - 1 or score whole prompts.
+    ok is False where the chunk was denied whole (page-table overflow
+    or pool exhaustion — nothing appended, logits meaningless); callers
+    must not sample from a denied sequence.
+    """
+    T = tokens.shape[2]
+    if active is None:
+        active = jnp.ones(tokens.shape[:2], bool)
+    asked = jnp.where(active, jnp.clip(lens.astype(jnp.int32), 0, T), 0)
+    base = state.seq_lens
+    x, state = forward_decode_chunk(cfg, params, tokens, state, lens,
+                                    active=active)
+    logits = logits_apply(cfg, params["embed"], x)
+    return logits, state, state.seq_lens - base == asked

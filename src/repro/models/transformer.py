@@ -36,6 +36,7 @@ import jax.numpy as jnp
 
 from ..configs.base import base_kind, is_moe_kind
 from ..core import block_pool
+from ..kernels.paged_attention.ops import paged_attention_chunk
 from ..parallel.partition import constrain_batch
 from . import attention as attn
 from . import moe as moe_mod
@@ -591,6 +592,351 @@ def forward_decode(cfg, params, tokens, state: DecodeState, active=None):
         kv_pages=kv_pages, rings=rings, rec=rec,
         page_tables=state.page_tables,
         seq_lens=state.seq_lens + active.astype(jnp.int32),
+        pool_ids=state.pool_ids, pool_top=state.pool_top,
+        enc_kv=state.enc_kv)
+
+    if "final_norm" in params:
+        x = apply_norm(cfg, params["final_norm"], x)
+    elif cfg.norm == "ln_nonparam":
+        from .layers import ln_nonparam
+        x = ln_nonparam(x)
+    return x, state
+
+
+# ======================================================= chunked decode path
+
+def _paged_write_chunk(k_pages, v_pages, k_new, v_new, page_ids, pos_in_page,
+                       write):
+    """k_pages: [DP, P, psz, KH, hd]; k_new: [DP, Bl, T, KH, hd];
+    page_ids/pos_in_page/write: [DP, Bl, T].  One scatter of Bl*T tokens
+    per shard; masked tokens are dropped (out-of-range page index)."""
+    P = k_pages.shape[1]
+    pid = jnp.where(write, page_ids, P)
+
+    def one(kp, vp, kn, vn, pid, pip):
+        kp = kp.at[pid, pip].set(kn.astype(kp.dtype), mode="drop")
+        vp = vp.at[pid, pip].set(vn.astype(vp.dtype), mode="drop")
+        return kp, vp
+
+    return jax.vmap(one)(k_pages, v_pages, k_new, v_new, pid, pos_in_page)
+
+
+def _paged_attn_chunk(q, k_pages, v_pages, tables, base):
+    """q: [DP, Bl, T, H, hd]; pages: [DP, P, psz, KH, hd]; base: [DP, Bl].
+
+    Folds DP into the kernel batch (shard-local page ids offset by d*P)
+    so one pallas_call / ref call covers all shards — no vmap over the
+    kernel.  Dispatches the Pallas chunk kernel on TPU, jnp ref elsewhere.
+    """
+    DP, Bl, T, H, hd = q.shape
+    P = k_pages.shape[1]
+    maxp = tables.shape[2]
+    off = (jnp.arange(DP, dtype=jnp.int32) * P)[:, None, None]
+    tg = jnp.where(tables >= 0, tables + off, -1).reshape(DP * Bl, maxp)
+    kg = k_pages.reshape((DP * P,) + k_pages.shape[2:])
+    vg = v_pages.reshape((DP * P,) + v_pages.shape[2:])
+    o = paged_attention_chunk(q.reshape(DP * Bl, T, H, hd), kg, vg, tg,
+                              base.reshape(DP * Bl))
+    return o.reshape(DP, Bl, T, H, hd)
+
+
+def _ring_write_chunk(k_ring, v_ring, k_new, v_new, positions, tok_valid,
+                      lens):
+    """Write a chunk into the rings.  positions/tok_valid: [DP, Bl, T].
+
+    Only the last W valid tokens of a chunk can survive in a ring of
+    size W; masking the rest out also removes duplicate-slot scatters
+    when T > W."""
+    DP, Bl, W = k_ring.shape[:3]
+    T = k_new.shape[2]
+    t = jnp.arange(T)[None, None, :]
+    write = tok_valid & (t >= lens[..., None] - W)
+    slot = jnp.where(write, positions % W, W)
+    dp_i = jnp.arange(DP)[:, None, None]
+    bl_i = jnp.arange(Bl)[None, :, None]
+    k_ring = k_ring.at[dp_i, bl_i, slot].set(
+        k_new.astype(k_ring.dtype), mode="drop")
+    v_ring = v_ring.at[dp_i, bl_i, slot].set(
+        v_new.astype(v_ring.dtype), mode="drop")
+    return k_ring, v_ring
+
+
+def _ring_attn_chunk(cfg, q, k_ring, v_ring, k_chunk, v_chunk, base, lens):
+    """Chunked sliding-window attention over ring + in-chunk K/V.
+
+    q: [DP, Bl, T, H, hd]; ring: [DP, Bl, W, KH, hd] holding the
+    PRE-chunk content; k/v_chunk: [DP, Bl, T, KH, hd]; base/lens:
+    [DP, Bl].  Query t (absolute position base + t) attends to ring
+    tokens (absolute <= base - 1) and chunk tokens t' <= t, both
+    windowed.  Attention runs before the ring is overwritten so early
+    queries still see tokens that later chunk tokens will evict.
+    """
+    DP, Bl, T, H, hd = q.shape
+    W = k_ring.shape[2]
+    win = cfg.window or W
+    r = jnp.arange(W)
+    last = base - 1
+    # absolute position currently stored in ring slot r (<= base - 1)
+    abs_ring = r[None, None] + W * ((last[..., None] - r[None, None]) // W)
+    t_idx = jnp.arange(T)
+    qpos = base[..., None] + t_idx                               # [DP,Bl,T]
+    valid_ring = ((abs_ring[:, :, None, :] >= 0) &
+                  (abs_ring[:, :, None, :] > qpos[..., None] - win))
+    tp = t_idx[None, None, None, :]
+    tq = t_idx[None, None, :, None]
+    valid_chunk = ((tp <= tq) & (tp < lens[..., None, None]) &
+                   (tq - tp < win))
+    valid = jnp.concatenate(
+        [valid_ring, jnp.broadcast_to(valid_chunk, (DP, Bl, T, T))], axis=3)
+    k = jnp.concatenate([k_ring, k_chunk.astype(k_ring.dtype)], axis=2)
+    v = jnp.concatenate([v_ring, v_chunk.astype(v_ring.dtype)], axis=2)
+    ke = attn._expand_kv(k.reshape(DP * Bl, W + T, -1, hd), H)
+    ve = attn._expand_kv(v.reshape(DP * Bl, W + T, -1, hd), H)
+    qf = q.reshape(DP * Bl, T, H, hd)
+    s = jnp.einsum("bthd,bkhd->bhtk", qf, ke) / (hd ** 0.5)
+    vm = valid.reshape(DP * Bl, 1, T, W + T)
+    s = jnp.where(vm, s.astype(jnp.float32), attn.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(vm, axis=-1, keepdims=True), p, 0.0)
+    o = jnp.einsum("bhtk,bkhd->bthd", p.astype(q.dtype), ve)
+    return o.reshape(DP, Bl, T, H, hd)
+
+
+def _xattn_decode_chunk(cfg, lp, x, enc_kv_layer):
+    """Cross-attention for a chunk of decode tokens.
+
+    x: [DP, Bl, T, d]; enc_kv: [DP, Bl, L, KH, hd] (not causal)."""
+    DP, Bl, T, d = x.shape
+    h = apply_norm(cfg, lp["norm_x"], x)
+    q = jnp.einsum("xbtd,dhk->xbthk", h, lp["xattn"]["wq"])
+    k, v = enc_kv_layer
+    ke = attn._expand_kv(k.reshape(DP * Bl, cfg.enc_len, -1, cfg.hd),
+                         cfg.n_heads)
+    ve = attn._expand_kv(v.reshape(DP * Bl, cfg.enc_len, -1, cfg.hd),
+                         cfg.n_heads)
+    qf = q.reshape(DP * Bl, T, cfg.n_heads, cfg.hd)
+    s = jnp.einsum("bthd,bkhd->bhtk", qf, ke) / (cfg.hd ** 0.5)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bhtk,bkhd->bthd", p.astype(x.dtype), ve)
+    o = o.reshape(DP, Bl, T, cfg.n_heads, cfg.hd)
+    return x + jnp.einsum("xbthk,hkd->xbtd", o, lp["xattn"]["wo"])
+
+
+def _mix_decode_chunk(cfg, lp, x, kind, st_kind, layer_state, state,
+                      positions, tok_valid, base, lens, enc_kv_layer=None):
+    """One layer over a chunk of up to T tokens per sequence.
+
+    x: [DP, Bl, T, d].  Attention layers process the chunk in parallel
+    (pages / ring written once, one chunk-attention call); recurrent
+    layers scan the chunk sequentially with per-token state gating so
+    ragged tails stay inert.  Returns (x, new_layer_state).
+    """
+    DP, Bl, T, d = x.shape
+    kind = base_kind(kind)
+    h = apply_norm(cfg, lp["norm1"], x)
+    if kind in ("global", "local"):
+        hf = h.reshape(DP * Bl, T, d)
+        pos_flat = positions.reshape(DP * Bl, T)
+        q = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wv"])
+        q = apply_rope(q, pos_flat, cfg.rope_theta)
+        k = apply_rope(k, pos_flat, cfg.rope_theta)
+        qd = q.reshape(DP, Bl, T, cfg.n_heads, cfg.hd)
+        kd = k.reshape(DP, Bl, T, cfg.n_kv_heads, cfg.hd)
+        vd = v.reshape(DP, Bl, T, cfg.n_kv_heads, cfg.hd)
+        if st_kind == "paged":
+            kp, vp = layer_state
+            psz = cfg.page_size
+            maxp = state.page_tables.shape[2]
+            pid = jnp.take_along_axis(
+                state.page_tables, jnp.minimum(positions // psz, maxp - 1),
+                axis=2)
+            write = tok_valid & (pid >= 0)
+            kp, vp = _paged_write_chunk(kp, vp, kd, vd, pid,
+                                        positions % psz, write)
+            o = _paged_attn_chunk(qd, kp, vp, state.page_tables, base)
+            new_state = (kp, vp)
+        else:
+            kr, vr = layer_state
+            o = _ring_attn_chunk(cfg, qd, kr, vr, kd, vd, base, lens)
+            kr, vr = _ring_write_chunk(kr, vr, kd, vd, positions, tok_valid,
+                                       lens)
+            new_state = (kr, vr)
+        x = x + jnp.einsum("xbthk,hkd->xbtd", o, lp["attn"]["wo"])
+    else:  # ssd / rglru — sequential recurrence, scanned over the chunk
+        def tok_body(st, inp):
+            ht, valid_t = inp                      # [DP,Bl,d], [DP,Bl]
+            if kind == "ssd":
+                o, (hn, cn) = ssm_mod.ssd_block_apply(
+                    cfg, lp["ssd"], ht.reshape(DP * Bl, 1, d),
+                    h0=st["h"].reshape(DP * Bl, *st["h"].shape[2:]),
+                    conv0=st["conv"].reshape(DP * Bl, *st["conv"].shape[2:]),
+                    decode=True)
+            else:
+                o, (hn, cn) = rglru_mod.rglru_block_apply(
+                    cfg, lp["rglru"], ht.reshape(DP * Bl, 1, d),
+                    h0=st["h"].reshape(DP * Bl, d),
+                    conv0=st["conv"].reshape(DP * Bl, *st["conv"].shape[2:]),
+                    decode=True)
+            new_st = {"h": hn.reshape(DP, Bl, *hn.shape[1:]),
+                      "conv": cn.reshape(DP, Bl, *cn.shape[1:])}
+
+            def g(nw, old):
+                m = valid_t.reshape((DP, Bl) + (1,) * (nw.ndim - 2))
+                return jnp.where(m, nw, old)
+
+            new_st = jax.tree.map(g, new_st, st)
+            return new_st, o[:, 0].reshape(DP, Bl, d)
+
+        new_state, o_seq = jax.lax.scan(
+            tok_body, layer_state,
+            (h.transpose(2, 0, 1, 3), tok_valid.transpose(2, 0, 1)))
+        x = x + o_seq.transpose(1, 2, 0, 3)
+
+    if "xattn" in lp and enc_kv_layer is not None:
+        x = _xattn_decode_chunk(cfg, lp, x, enc_kv_layer)
+
+    if "ffn" in lp:
+        h2 = apply_norm(cfg, lp["norm2"], x)
+        h2f = h2.reshape(DP * Bl, T, d)
+        f = (moe_mod.moe_apply(cfg, lp["ffn"], h2f) if "router" in lp["ffn"]
+             else ffn_apply(cfg, lp["ffn"], h2f))
+        x = x + f.reshape(DP, Bl, T, d)
+    return x, new_state
+
+
+def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
+                         active=None):
+    """Chunked decode/prefill: up to T tokens per sequence per call.
+
+    tokens: int32 [DP, Bl, T]; lens: int32 [DP, Bl] — valid tokens per
+    sequence this call (ragged tails are inert: not written to any
+    cache, recurrent state gated per token).  Returns (hidden
+    [DP, Bl, T, d], new DecodeState) with seq_lens advanced by lens.
+
+    Pages for the WHOLE chunk (up to ceil(T/psz) per sequence) come
+    from the shard's private free stack in one :func:`block_pool.
+    alloc_n` call — the paper's batch-granularity transfer absorbing
+    multi-page demand per step in O(Bl * T) work, independent of the
+    pool size.  With T == 1 and lens == active this computes exactly
+    what :func:`forward_decode` computes (the serving engine's
+    steady-state decode path).
+    """
+    DP, Bl, T = tokens.shape
+    if active is None:
+        active = jnp.ones((DP, Bl), bool)
+    lens = jnp.where(active, jnp.clip(lens.astype(jnp.int32), 0, T), 0)
+    base = state.seq_lens
+    x = constrain_batch(embed_apply(params["embed"], tokens).astype(cfg.jdtype))
+
+    # --- page allocation for the whole chunk (once, all paged layers)
+    if state.kv_pages:
+        # all-or-nothing per sequence (append_chunk's contract): a chunk
+        # that would overflow the page table, or whose pages the pool
+        # denies, appends NOTHING — without the gate the page-index
+        # clamp below would overwrite live KV while seq_lens advanced
+        psz = cfg.page_size
+        maxp = state.page_tables.shape[2]
+        kmax = -(-T // psz)
+        lens, pages_before, counts = block_pool.chunk_page_plan(
+            base, lens, psz, maxp)
+
+        def alloc_shard(ids, top, cnt):
+            pool = block_pool.BlockPool(ids, top)
+            pool, got = block_pool.alloc_n(pool, cnt, kmax)
+            return pool.free_ids, pool.top, got
+
+        pool_ids, pool_top, got = jax.vmap(alloc_shard)(
+            state.pool_ids, state.pool_top, counts)
+        lens = jnp.where(block_pool.granted_mask(got, counts), lens, 0)
+        dp_i = jnp.arange(DP)[:, None, None]
+        bl_i = jnp.arange(Bl)[None, :, None]
+        kk = jnp.arange(kmax)[None, None, :]
+        slot = pages_before[..., None] + kk
+        new_page = (kk < counts[..., None]) & (got >= 0)
+        slot = jnp.where(new_page, slot, maxp)       # out-of-range => drop
+        new_tables = state.page_tables.at[dp_i, bl_i, slot].set(
+            got, mode="drop")
+        state = state._replace(page_tables=new_tables, pool_ids=pool_ids,
+                               pool_top=pool_top)
+
+    positions = base[..., None] + jnp.arange(T, dtype=jnp.int32)[None, None]
+    tok_valid = jnp.arange(T)[None, None, :] < lens[..., None]
+
+    st_kinds = _positions(cfg)
+    has_x = cfg.arch_kind == "encdec"
+
+    def group_body(carry, xs):
+        x = carry
+        gparams, gstate, enc_kv_g = xs
+        new_gstate = {}
+        for j, kind in enumerate(cfg.pattern):
+            pos = f"pos{j}"
+            x, ns = _mix_decode_chunk(
+                cfg, gparams[pos], x, kind, st_kinds[pos], gstate[pos],
+                state, positions, tok_valid, base, lens,
+                enc_kv_g if has_x else None)
+            new_gstate[pos] = ns
+        return x, new_gstate
+
+    if cfg.n_groups:
+        gstates = {}
+        for pos, kv in state.kv_pages.items():
+            if pos.startswith("pos"):
+                gstates[pos] = kv
+        for pos, kv in state.rings.items():
+            if pos.startswith("pos"):
+                gstates[pos] = kv
+        for pos, rc in state.rec.items():
+            if pos.startswith("pos"):
+                gstates[pos] = rc
+        if has_x and state.enc_kv is not None:
+            assert len(cfg.pattern) == 1, "encdec requires pattern length 1"
+            enc_scan = (state.enc_kv[0][:cfg.n_groups],
+                        state.enc_kv[1][:cfg.n_groups])
+        else:
+            enc_scan = (jnp.zeros((cfg.n_groups,)),) * 2  # placeholder
+        x, new_gstates = jax.lax.scan(
+            group_body, x, (params["groups"], gstates, enc_scan))
+    else:
+        new_gstates = {}
+
+    new_rem_states = {}
+    for j, kind in enumerate(cfg.remainder):
+        pos = f"rem{j}"
+        bk = base_kind(kind)
+        st_kind = ("paged" if bk == "global"
+                   else "ring" if bk == "local" else "rec")
+        ls = (state.kv_pages.get(pos) or state.rings.get(pos)
+              or state.rec.get(pos))
+        ls0 = jax.tree.map(lambda a: a[0], ls)
+        lp = params["rem"][f"pos{j}"]
+        enc_l = None
+        if has_x and state.enc_kv is not None:
+            idx = cfg.n_groups * len(cfg.pattern) + j
+            enc_l = (state.enc_kv[0][idx], state.enc_kv[1][idx])
+        x, ns = _mix_decode_chunk(cfg, lp, x, kind, st_kind, ls0, state,
+                                  positions, tok_valid, base, lens, enc_l)
+        new_rem_states[pos] = jax.tree.map(lambda a: a[None], ns)
+
+    kv_pages, rings, rec = {}, {}, {}
+    for pos in state.kv_pages:
+        src = new_gstates if pos.startswith("pos") else new_rem_states
+        kv_pages[pos] = src[pos]
+    for pos in state.rings:
+        src = new_gstates if pos.startswith("pos") else new_rem_states
+        rings[pos] = src[pos]
+    for pos in state.rec:
+        src = new_gstates if pos.startswith("pos") else new_rem_states
+        rec[pos] = src[pos]
+    # rec states were gated per token inside the chunk scan; no extra
+    # active-gating needed here (lens == 0 leaves every leaf untouched).
+
+    state = DecodeState(
+        kv_pages=kv_pages, rings=rings, rec=rec,
+        page_tables=state.page_tables,
+        seq_lens=base + lens,
         pool_ids=state.pool_ids, pool_top=state.pool_top,
         enc_kv=state.enc_kv)
 

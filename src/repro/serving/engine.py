@@ -9,17 +9,27 @@ Two allocator integrations (DESIGN.md §2b):
   scheduling never stalls behind a global lock (the paper's claim,
   live in the control plane).
 * **device (SPMD)**: KV pages come from per-DP-shard private pools
-  (block_pool inside serve_step) — one O(1) alloc per crossing
-  sequence per step, exactly the private-pool fast path.
+  (block_pool inside the jitted step) — one O(R) ``alloc_n`` batch per
+  step regardless of how many pages the chunk needs, exactly the
+  private-pool fast path at batch granularity.
 
-The engine is a continuous batcher: new requests are admitted into free
-slots every step; prompts are streamed through the decode path (chunked
-prefill would batch this further; see examples/serve_paged.py).
+The token hot path is fully device-resident (DESIGN.md §6): one jitted
+``_serve_step`` embeds the forward pass, chunked prefill, greedy
+sampling, EOS/length done-detection, and page release for finished
+slots, and returns a small packed status array — the host performs
+EXACTLY ONE device→host sync per step (``np.asarray(status)``).  Prompts
+are processed ``chunk_size`` tokens per step; steady-state decode runs
+the same step at T=1 with the previous token read from a device-resident
+register, never from the host.
+
+The pre-refactor single-token path is kept behind ``legacy=True`` for
+A/B benchmarking (benchmarks/run.py measures both in the same run).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
 from collections import deque
@@ -31,8 +41,9 @@ import numpy as np
 
 from .. import models
 from ..core import NULL, SimContext, WaitFreeAllocator
-from ..models.decode_init import empty_decode_state
-from ..models.transformer import DecodeState
+from ..models.decode_init import empty_decode_state, empty_serve_arrays
+from ..models.layers import logits_apply
+from ..models.transformer import DecodeState, forward_decode_chunk
 
 
 @dataclasses.dataclass
@@ -83,17 +94,85 @@ def _release_slots(state: DecodeState, mask):
                           rings=rings, rec=rec)
 
 
+# Packed per-step status rows (the step's single device->host transfer).
+STATUS_TOKEN = 0     # sampled token id (-1 where nothing was emitted)
+STATUS_EMITTED = 1   # 1 iff the slot produced an output token this step
+STATUS_DONE = 2      # 1 iff the slot finished (pages already released)
+
+
+def _serve_step(cfg, max_len, eos_id, params, state, last_tok, out_count,
+                budget, prompt_toks, feed_lens, is_prompt, emit):
+    """One fully device-resident engine step (jitted once per chunk T).
+
+    prompt_toks: int32[DP, Bl, T] host-provided prompt chunks (ignored
+    for generating slots — their input token is the device-resident
+    ``last_tok`` register); feed_lens: tokens fed per slot this step
+    (0 = idle); is_prompt: slot consumes prompt tokens; emit: slot
+    produces an output token this step (host knows this statically —
+    it's "prompt exhausted by this chunk" or "generating").
+
+    Folds greedy sampling, EOS/length done-detection, and page release
+    into the step so the host syncs exactly once, on the returned
+    packed status int32[3, DP, Bl] (see STATUS_* row indices).
+    """
+    DP, Bl, T = prompt_toks.shape
+    gen_col = jnp.zeros((DP, Bl, T), jnp.int32).at[:, :, 0].set(last_tok)
+    toks = jnp.where(is_prompt[..., None], prompt_toks, gen_col)
+    active = feed_lens > 0
+
+    hidden, state = forward_decode_chunk(cfg, params, toks, state,
+                                         feed_lens, active=active)
+    idx = jnp.maximum(feed_lens - 1, 0)
+    h_last = jnp.take_along_axis(hidden, idx[..., None, None],
+                                 axis=2)[:, :, 0]         # [DP, Bl, d]
+    logits = logits_apply(cfg, params["embed"], h_last)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    emit = emit & active
+    out_count = out_count + emit.astype(jnp.int32)
+    seq_full = state.seq_lens >= max_len - 1
+    done = active & ((out_count >= budget) | seq_full |
+                     (emit & (nxt == eos_id)))
+    last_tok = jnp.where(emit, nxt, last_tok)
+    state = _release_slots(state, done)
+
+    status = jnp.stack([jnp.where(emit, nxt, -1),
+                        emit.astype(jnp.int32),
+                        done.astype(jnp.int32)])
+    return state, last_tok, out_count, status
+
+
 class ServingEngine:
     def __init__(self, cfg, params, dp: int = 1, b_local: int = 4,
                  max_len: int = 512, scheduler_lanes: int = 2,
-                 greedy: bool = True):
+                 greedy: bool = True, chunk_size: int = 8,
+                 eos_id: Optional[int] = None, legacy: bool = False):
         self.cfg = cfg
         self.params = params
         self.dp, self.bl = dp, b_local
         self.max_len = max_len
+        self.chunk = max(int(chunk_size), 1)
+        self.legacy = legacy
         self.state = empty_decode_state(cfg, dp, b_local, max_len)
+        self.last_tok, self.out_count, self.budget = \
+            empty_serve_arrays(dp, b_local)
         self.greedy = greedy
+        # sequences can never outgrow the page table (maxp * psz tokens,
+        # < max_len when max_len is not a page multiple); done-detection
+        # and feed capping use the effective capacity so a chunk is never
+        # submitted that forward_decode_chunk would have to reject
+        maxp = self.state.page_tables.shape[2]
+        self.capacity = (min(max_len, maxp * cfg.page_size)
+                         if self.state.kv_pages else max_len)
+        self._fed: Dict[int, int] = {}       # host shadow of seq_lens
 
+        # fused device-resident step (compiled once for T=chunk and,
+        # lazily, once for the T=1 steady-state decode shape)
+        self._serve = jax.jit(
+            functools.partial(_serve_step, cfg, self.capacity,
+                              -1 if eos_id is None else int(eos_id)),
+            donate_argnums=(1, 2, 3))
+        # pre-refactor single-token path (A/B benchmarking)
         self._decode = jax.jit(
             lambda p, t, s, a: models.decode_step(cfg, p, t, s, active=a),
             donate_argnums=(2,))
@@ -115,7 +194,7 @@ class ServingEngine:
         self.active: Dict[int, Request] = {}     # slot -> request
         self.pending_tokens: Dict[int, List[int]] = {}
         self.stats = {"steps": 0, "tokens_out": 0, "admitted": 0,
-                      "alloc_steps_max": 0}
+                      "prompt_tokens": 0, "alloc_steps_max": 0}
 
     # ------------------------------------------------------------ control
     def _host_alloc_slot(self) -> Optional[int]:
@@ -153,9 +232,7 @@ class ServingEngine:
         req.submitted_at = time.time()
         self.queue.append(req)
 
-    # -------------------------------------------------------------- step
-    def step(self) -> None:
-        # 1. admission
+    def _admit(self) -> None:
         while self.queue and self._free_slots:
             slot = self._host_alloc_slot()
             if slot is None:
@@ -163,10 +240,74 @@ class ServingEngine:
             req = self.queue.popleft()
             req.slot = slot
             self.active[slot] = req
-            self.pending_tokens[slot] = list(req.prompt)
+            # empty prompts degrade to the legacy BOS=1 convention
+            self.pending_tokens[slot] = list(req.prompt) or [1]
+            self._fed[slot] = 0
+            if not self.legacy:
+                d, b = divmod(slot, self.bl)
+                self.budget = self.budget.at[d, b].set(req.max_new_tokens)
+                self.out_count = self.out_count.at[d, b].set(0)
             self.stats["admitted"] += 1
 
-        # 2. one decode step for every active slot
+    # -------------------------------------------------------------- step
+    def step(self) -> None:
+        if self.legacy:
+            return self._step_legacy()
+        self._admit()
+        if not self.active:
+            return
+
+        # schedule this step's feeds (host-side bookkeeping only — no
+        # device sync; prompt chunks come from host queues, generation
+        # tokens from the device-resident last_tok register)
+        any_prompt = any(self.pending_tokens[s] for s in self.active)
+        T = self.chunk if any_prompt else 1
+        prompt_toks = np.zeros((self.dp, self.bl, T), np.int32)
+        feed_lens = np.zeros((self.dp, self.bl), np.int32)
+        is_prompt = np.zeros((self.dp, self.bl), bool)
+        emit = np.zeros((self.dp, self.bl), bool)
+        for slot in self.active:
+            d, b = divmod(slot, self.bl)
+            pend = self.pending_tokens[slot]
+            if pend:
+                # never feed past the page-table capacity — a slot that
+                # reaches it finishes via the on-device length check
+                n = min(len(pend), T, self.capacity - self._fed[slot])
+                prompt_toks[d, b, :n] = pend[:n]
+                del pend[:n]
+                feed_lens[d, b] = n
+                is_prompt[d, b] = True
+                emit[d, b] = not pend
+                self.stats["prompt_tokens"] += n
+            else:
+                feed_lens[d, b] = 1
+                emit[d, b] = True
+            self._fed[slot] += int(feed_lens[d, b])
+
+        self.state, self.last_tok, self.out_count, status = self._serve(
+            self.params, self.state, self.last_tok, self.out_count,
+            self.budget, jnp.asarray(prompt_toks), jnp.asarray(feed_lens),
+            jnp.asarray(is_prompt), jnp.asarray(emit))
+        self.stats["steps"] += 1
+        status = np.asarray(status)      # the step's ONE device->host sync
+
+        for slot, req in list(self.active.items()):
+            d, b = divmod(slot, self.bl)
+            if status[STATUS_EMITTED, d, b]:
+                req.out_tokens.append(int(status[STATUS_TOKEN, d, b]))
+                self.stats["tokens_out"] += 1
+            if status[STATUS_DONE, d, b]:
+                # pages were already released inside the jitted step
+                req.done = True
+                req.finished_at = time.time()
+                self.active.pop(slot)
+                self.pending_tokens.pop(slot, None)
+                self._host_free_slot(slot)
+
+    def _step_legacy(self) -> None:
+        """Pre-refactor path: one token per step, host-side argmax."""
+        self._admit()
+
         tokens = np.zeros((self.dp, self.bl), np.int32)
         active = np.zeros((self.dp, self.bl), bool)
         feeding = {}
@@ -176,6 +317,7 @@ class ServingEngine:
             if pend:
                 tok = pend.pop(0)
                 feeding[slot] = ("prompt", tok)
+                self.stats["prompt_tokens"] += 1
             else:
                 tok = req.out_tokens[-1] if req.out_tokens else 1
                 feeding[slot] = ("gen", tok)
@@ -187,8 +329,9 @@ class ServingEngine:
             self.params, jnp.asarray(tokens), self.state, jnp.asarray(active))
         self.stats["steps"] += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        # one seq_lens transfer per step, not one per active slot
+        seq_lens = np.asarray(self.state.seq_lens)
 
-        # 3. collect outputs / completions
         finished = []
         for slot, req in list(self.active.items()):
             d, b = divmod(slot, self.bl)
@@ -196,7 +339,7 @@ class ServingEngine:
             if kind == "gen" or not self.pending_tokens[slot]:
                 req.out_tokens.append(int(nxt[d, b]))
                 self.stats["tokens_out"] += 1
-            full = int(np.asarray(self.state.seq_lens)[d, b]) >= self.max_len - 1
+            full = seq_lens[d, b] >= self.max_len - 1
             if len(req.out_tokens) >= req.max_new_tokens or full:
                 finished.append(slot)
         if finished:

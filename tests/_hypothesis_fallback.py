@@ -1,0 +1,57 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container image used for tier-1 runs does not ship hypothesis, so
+the property tests fall back to a tiny fixed-seed fuzzer: ``@given``
+re-runs the test body N times with pseudo-random draws from the same
+strategy surface the real library provides (only the subset this repo
+uses).  When hypothesis *is* available the real library is used — see
+the guarded imports in the test modules.
+"""
+
+from __future__ import annotations
+
+import random
+
+_EXAMPLES = 8          # fixed-seed draws per @given test
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class st:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30, **_kw):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+
+def settings(*_a, **_kw):
+    """No-op decorator factory (max_examples/deadline are ignored)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        # NOT functools.wraps: pytest must see the wrapper's (*args)
+        # signature, not the original's drawn parameters (it would try
+        # to resolve them as fixtures).
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0xC0FFEE)
+            for _ in range(_EXAMPLES):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:              # container image lacks hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import block_pool, hier_pool, kv_cache
 from repro.core.block_pool import NULL
@@ -54,6 +57,67 @@ class TestBlockPool:
                 drop += [-1] * (8 - len(drop))
                 pool = free_j(pool, jnp.asarray(drop, jnp.int32))
         assert int(pool.top) == 64 - len(live)
+
+    def test_alloc_n_basic(self):
+        pool = block_pool.create(16)
+        pool, ids = block_pool.alloc_n(pool, jnp.asarray([2, 0, 3]), 4)
+        got = np.asarray(ids)
+        assert got.shape == (3, 4)
+        assert (got[0] >= 0).sum() == 2 and (got[1] >= 0).sum() == 0
+        assert (got[2] >= 0).sum() == 3
+        assert int(pool.top) == 11
+        live = got[got >= 0].tolist()
+        assert len(set(live)) == 5, "duplicate grant"
+        pool = block_pool.free(pool, ids.reshape(-1))
+        assert int(pool.top) == 16
+
+    def test_alloc_n_prefix_denial(self):
+        """All-or-nothing per slot, in slot order: the first infeasible
+        slot denies itself and every later slot (monotone cumulative
+        demand), so one probe of the last needed id detects failure."""
+        pool = block_pool.create(10)
+        pool, ids = block_pool.alloc_n(pool, jnp.asarray([2, 0, 3, 6, 1]), 6)
+        got = np.asarray(ids)
+        assert (got[0] >= 0).sum() == 2 and (got[2] >= 0).sum() == 3
+        assert (got[3] >= 0).sum() == 0, "infeasible slot must get nothing"
+        assert (got[4] >= 0).sum() == 0, "slots after a denial get nothing"
+        assert int(pool.top) == 5
+
+    def test_alloc_n_matches_sequential_alloc(self):
+        """alloc_n(counts) hands out the same blocks as repeated alloc."""
+        p1 = p2 = block_pool.create(32)
+        counts = jnp.asarray([3, 1, 0, 2])
+        p1, ids1 = block_pool.alloc_n(p1, counts, 3)
+        seq = []
+        for s, c in enumerate(np.asarray(counts)):
+            row = []
+            for _ in range(int(c)):
+                p2, one = block_pool.alloc(
+                    p2, jnp.asarray([True]))
+                row.append(int(one[0]))
+            seq.append(row)
+        assert int(p1.top) == int(p2.top)
+        for s, row in enumerate(seq):
+            assert np.asarray(ids1)[s, :len(row)].tolist() == row
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(8, 64), seed=st.integers(0, 999))
+    def test_property_alloc_n_conservation(self, m, seed):
+        rng = np.random.RandomState(seed)
+        pool = block_pool.create(m)
+        live = []
+        for _ in range(12):
+            if rng.rand() < 0.6:
+                counts = jnp.asarray(rng.randint(0, 4, 5))
+                pool, ids = block_pool.alloc_n(pool, counts, 3)
+                live += [int(i) for i in np.asarray(ids).ravel() if i >= 0]
+            elif live:
+                k = rng.randint(1, len(live) + 1)
+                back = [live.pop() for _ in range(k)]
+                back += [-1] * ((-len(back)) % 6)
+                pool = block_pool.free(pool, jnp.asarray(back, jnp.int32))
+            assert int(pool.top) + len(live) == m
+            assert len(set(live)) == len(live)
 
     @settings(max_examples=20, deadline=None)
     @given(m=st.integers(4, 64), seed=st.integers(0, 999))
@@ -111,6 +175,79 @@ class TestHierPool:
         assert int(pool.private_top[0]) == 8
         assert int(pool.shared.top) == before
         assert int(hier_pool.total_free(pool)) == total_before
+
+    def test_alloc_n_private_only(self):
+        """Per-lane batched demand is served from private stacks alone."""
+        pool = hier_pool.create(num_blocks=256, num_lanes=4, ell=8)
+        shared_top0 = int(pool.shared.top)
+        pool, ids = hier_pool.alloc_n(pool, jnp.asarray([3, 8, 0, 5]), 8)
+        got = np.asarray(ids)
+        assert [(r >= 0).sum() for r in got] == [3, 8, 0, 5]
+        assert int(pool.shared.top) == shared_top0
+        # a lane demanding more than its private stack is denied whole
+        pool, ids = hier_pool.alloc_n(pool, jnp.asarray([0, 1, 0, 0]), 8)
+        assert not (np.asarray(ids) >= 0).any()
+
+    def test_adversarial_full_batch_drain_never_dry(self):
+        """§4.2 invariant: lanes draining a FULL batch (ell blocks) every
+        step, with one rebalance per step, never observe a dry private
+        pool — the private stack always covers the next step's worst-case
+        demand because refill restores >= ell blocks whenever the stack
+        drops below ell."""
+        L, ell, steps, hold = 4, 8, 60, 3
+        pool = hier_pool.create(num_blocks=L * ell * (hold + 4),
+                                num_lanes=L, ell=ell)
+        total0 = int(hier_pool.total_free(pool))
+        alloc_j = jax.jit(hier_pool.alloc_n, static_argnums=(2,))
+        free_j = jax.jit(hier_pool.free)
+        reb = jax.jit(hier_pool.rebalance)
+        held = []          # FIFO of [L, ell] batches, freed after `hold`
+        live = 0
+        for step in range(steps):
+            pool, ids = alloc_j(pool, jnp.full((L,), ell, jnp.int32), ell)
+            got = np.asarray(ids)
+            assert (got >= 0).all(), (
+                f"step {step}: a lane ran dry (paper §4.2 violated)")
+            held.append(got)
+            live += L * ell
+            if len(held) > hold:
+                batch = held.pop(0)
+                for k in range(ell):      # frees trickle back per lane
+                    pool = free_j(pool, jnp.asarray(batch[:, k]))
+                live -= L * ell
+            pool = reb(pool)
+            assert int(hier_pool.total_free(pool)) + live == total0, (
+                f"step {step}: blocks lost or duplicated")
+        # drain everything back and re-check conservation
+        while held:
+            batch = held.pop(0)
+            for k in range(ell):
+                pool = free_j(pool, jnp.asarray(batch[:, k]))
+        pool = reb(pool)
+        assert int(hier_pool.total_free(pool)) == total0
+
+    def test_rebalance_conserves_under_random_storms(self):
+        """No block is lost or duplicated across many rebalances under
+        randomized alloc/free storms (conservation + uniqueness)."""
+        rng = np.random.RandomState(7)
+        L, ell = 6, 4
+        pool = hier_pool.create(num_blocks=512, num_lanes=L, ell=ell)
+        total0 = int(hier_pool.total_free(pool))
+        live = set()
+        for step in range(40):
+            counts = jnp.asarray(rng.randint(0, ell + 1, L))
+            pool, ids = hier_pool.alloc_n(pool, counts, ell)
+            for i in np.asarray(ids).ravel():
+                if i >= 0:
+                    assert i not in live, "duplicate allocation"
+                    live.add(int(i))
+            if live and rng.rand() < 0.7:
+                back = np.full(L, -1, np.int32)
+                for lane in range(min(L, len(live))):
+                    back[lane] = live.pop()
+                pool = hier_pool.free(pool, jnp.asarray(back))
+            pool = hier_pool.rebalance(pool)
+            assert int(hier_pool.total_free(pool)) + len(live) == total0
 
     def test_conservation_under_jit(self):
         step_alloc = jax.jit(hier_pool.alloc)
@@ -191,3 +328,81 @@ class TestPagedKVCache:
             cache, ok = app(cache, jnp.ones((3, 2, 8)), jnp.ones((3, 2, 8)),
                             jnp.ones(3, bool))
         assert np.all(np.asarray(cache.seq_lens) == 5)
+
+    def test_gather_kv_partial_page_not_truncated(self):
+        """Regression: max_len not a multiple of page_size must include
+        the trailing partial page (was silently dropped by floor div)."""
+        cache = self._mk()          # psz=4
+        T = 10
+        ks = np.random.RandomState(2).randn(T, 3, 2, 8).astype(np.float32)
+        for t in range(T):
+            cache, _ = kv_cache.append(
+                cache, jnp.asarray(ks[t]), jnp.asarray(ks[t]),
+                jnp.ones(3, bool))
+        k, _, valid = kv_cache.gather_kv(cache, 0, max_len=10)
+        assert int(valid.sum()) == 10, "partial page tokens were dropped"
+        np.testing.assert_allclose(
+            np.asarray(k)[np.asarray(valid)], ks[:, 0], rtol=1e-6)
+        # max_len below seq_len still trims to max_len
+        _, _, valid7 = kv_cache.gather_kv(cache, 0, max_len=7)
+        assert int(valid7.sum()) == 7
+
+    def test_append_chunk_matches_sequential(self):
+        """append_chunk(C tokens) == C x append, including ragged lens."""
+        c1 = c2 = self._mk()
+        rng = np.random.RandomState(3)
+        ks = rng.randn(3, 7, 2, 8).astype(np.float32)
+        vs = rng.randn(3, 7, 2, 8).astype(np.float32)
+        lens = np.array([7, 5, 0], np.int32)
+        c1, ok = kv_cache.append_chunk(
+            c1, jnp.asarray(ks), jnp.asarray(vs), jnp.asarray(lens))
+        assert np.asarray(ok).all()
+        for t in range(7):
+            c2, _ = kv_cache.append(
+                c2, jnp.asarray(ks[:, t]), jnp.asarray(vs[:, t]),
+                jnp.asarray(t < lens))
+        assert np.array_equal(np.asarray(c1.seq_lens), np.asarray(c2.seq_lens))
+        assert int(c1.pool.top) == int(c2.pool.top)
+        for s in range(3):
+            k1, v1, m1 = kv_cache.gather_kv(c1, s, max_len=8)
+            k2, v2, m2 = kv_cache.gather_kv(c2, s, max_len=8)
+            assert int(m1.sum()) == int(m2.sum()) == lens[s]
+            np.testing.assert_allclose(np.asarray(k1)[np.asarray(m1)],
+                                       np.asarray(k2)[np.asarray(m2)])
+            np.testing.assert_allclose(np.asarray(v1)[np.asarray(m1)],
+                                       np.asarray(v2)[np.asarray(m2)])
+
+    def test_append_chunk_exhaustion_all_or_nothing(self):
+        """A chunk that cannot get all its pages appends nothing."""
+        cache = self._mk(num_pages=3, max_seqs=2, max_pages_per_seq=4)
+        ks = jnp.zeros((2, 8, 2, 8))
+        # seq 0 wants 2 pages, seq 1 wants 2 pages; only 3 pages exist
+        cache, ok = kv_cache.append_chunk(
+            cache, ks, ks, jnp.asarray([8, 8]))
+        got = np.asarray(ok)
+        assert got[0] and not got[1], "second chunk must fail whole"
+        assert np.asarray(cache.seq_lens).tolist() == [8, 0]
+        assert int(cache.pool.top) == 1
+
+    def test_append_chunk_table_overflow_fails_clean(self):
+        cache = self._mk(max_pages_per_seq=2)      # capacity 8 tokens
+        ks = jnp.zeros((3, 6, 2, 8))
+        cache, ok = kv_cache.append_chunk(
+            cache, ks, ks, jnp.asarray([6, 6, 6]))
+        assert np.asarray(ok).all()
+        cache, ok = kv_cache.append_chunk(       # 6 more would need page 3
+            cache, ks, ks, jnp.asarray([6, 0, 2]))
+        got = np.asarray(ok)
+        assert not got[0] and got[1] and got[2]
+        assert np.asarray(cache.seq_lens).tolist() == [6, 6, 8]
+
+    def test_append_chunk_under_jit_interleaved_with_append(self):
+        cache = self._mk()
+        appc = jax.jit(kv_cache.append_chunk)
+        app = jax.jit(kv_cache.append)
+        cache, ok = appc(cache, jnp.ones((3, 6, 2, 8)), jnp.ones((3, 6, 2, 8)),
+                         jnp.asarray([6, 3, 1]))
+        cache, ok2 = app(cache, jnp.ones((3, 2, 8)), jnp.ones((3, 2, 8)),
+                         jnp.ones(3, bool))
+        assert np.asarray(ok).all() and np.asarray(ok2).all()
+        assert np.asarray(cache.seq_lens).tolist() == [7, 4, 2]

@@ -13,7 +13,10 @@ user writes into live blocks.
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:              # container image lacks hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     SimContext, WaitFreeAllocator, Scheduler, closed_loop,

@@ -4,10 +4,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:              # container image lacks hypothesis
+    from _hypothesis_fallback import given, settings, st
 
-from repro.kernels.paged_attention.kernel import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (paged_attention,
+                                                  paged_attention_chunk)
+from repro.kernels.paged_attention.ref import (paged_attention_chunk_ref,
+                                               paged_attention_ref)
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan
@@ -68,6 +73,108 @@ class TestPagedAttention:
         ref = paged_attention_ref(q, kp, vp, jnp.asarray(table), lens)
         out = paged_attention(q, kp, vp, jnp.asarray(table), lens,
                               interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestPagedAttentionChunk:
+    def _case(self, rng, B, T, H, KH, hd, psz, maxp, P, dt,
+              ragged_base=True):
+        hi = max((maxp - 1) * psz - T, 1)
+        base = rng.randint(0, hi, B).astype(np.int32) if ragged_base \
+            else np.zeros(B, np.int32)
+        q = jnp.asarray(rng.randn(B, T, H, hd), dt)
+        kp = jnp.asarray(rng.randn(P, psz, KH, hd), dt)
+        vp = jnp.asarray(rng.randn(P, psz, KH, hd), dt)
+        table = np.full((B, maxp), -1, np.int32)
+        avail = list(range(P))
+        rng.shuffle(avail)
+        for b in range(B):
+            for i in range(int(np.ceil((base[b] + T) / psz))):
+                table[b, i] = avail.pop()
+        return q, kp, vp, jnp.asarray(table), jnp.asarray(base)
+
+    @pytest.mark.parametrize("B,T,H,KH,hd,psz,maxp,P,dt", [
+        (3, 4, 8, 2, 64, 8, 5, 32, jnp.float32),
+        (2, 8, 4, 4, 64, 8, 4, 32, jnp.float32),
+        (2, 5, 8, 1, 128, 16, 3, 16, jnp.bfloat16),
+        (1, 16, 16, 8, 64, 16, 4, 48, jnp.float32),
+    ])
+    def test_vs_ref(self, B, T, H, KH, hd, psz, maxp, P, dt):
+        rng = np.random.RandomState(hash((B, T, H, KH)) % 2**31)
+        q, kp, vp, table, base = self._case(rng, B, T, H, KH, hd, psz,
+                                            maxp, P, dt)
+        ref = paged_attention_chunk_ref(q, kp, vp, table, base)
+        out = paged_attention_chunk(q, kp, vp, table, base, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dt), rtol=_tol(dt))
+
+    def test_t1_matches_decode_kernel(self):
+        """The chunk kernel at T=1 equals the single-token decode path
+        (query at position base attends to base + 1 tokens)."""
+        rng = np.random.RandomState(11)
+        B, H, KH, hd, psz, maxp, P = 3, 8, 2, 64, 8, 4, 24
+        q, kp, vp, table, base = self._case(rng, B, 1, H, KH, hd, psz,
+                                            maxp, P, jnp.float32)
+        out = paged_attention_chunk(q, kp, vp, table, base, interpret=True)
+        ref = paged_attention_ref(q[:, 0], kp, vp, table, base + 1)
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_causal_within_chunk(self):
+        """Row t must ignore chunk tokens written at positions > base+t:
+        scrambling the future tokens' K/V leaves earlier rows unchanged."""
+        rng = np.random.RandomState(12)
+        B, T, H, KH, hd, psz, maxp, P = 1, 6, 4, 2, 64, 8, 3, 12
+        q, kp, vp, table, base = self._case(rng, B, T, H, KH, hd, psz,
+                                            maxp, P, jnp.float32,
+                                            ragged_base=False)
+        out1 = paged_attention_chunk_ref(q, kp, vp, table, base)
+        # scramble K/V at absolute positions >= base + tcut
+        tcut = 3
+        kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+        tbl = np.asarray(table)
+        for t in range(tcut, T):
+            pos = int(base[0]) + t
+            pid = tbl[0, pos // psz]
+            kp2[pid, pos % psz] = 99.0
+            vp2[pid, pos % psz] = -99.0
+        out2 = paged_attention_chunk_ref(q, jnp.asarray(kp2),
+                                         jnp.asarray(vp2), table, base)
+        np.testing.assert_allclose(np.asarray(out1[:, :tcut]),
+                                   np.asarray(out2[:, :tcut]),
+                                   atol=1e-6, rtol=1e-6)
+        assert not np.allclose(np.asarray(out1[:, tcut:]),
+                               np.asarray(out2[:, tcut:]))
+
+    def test_all_masked_row_outputs_zeros(self):
+        """An idle slot (page table all -1, the engine runs every batch
+        slot) must output exact zeros from kernel and ref alike — not a
+        mean of the clamped fallback page's V."""
+        rng = np.random.RandomState(13)
+        B, T, H, KH, hd, psz, maxp, P = 2, 4, 4, 2, 64, 8, 3, 12
+        q, kp, vp, table, base = self._case(rng, B, T, H, KH, hd, psz,
+                                            maxp, P, jnp.float32)
+        table = table.at[1].set(-1)          # slot 1: nothing resident
+        base = base.at[1].set(0)
+        ref = paged_attention_chunk_ref(q, kp, vp, table, base)
+        out = paged_attention_chunk(q, kp, vp, table, base, interpret=True)
+        assert np.all(np.asarray(ref[1]) == 0.0)
+        assert np.all(np.asarray(out[1]) == 0.0)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
+                                   atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), psz=st.sampled_from([8, 16]),
+           T=st.integers(1, 8))
+    def test_property_random_chunks(self, seed, psz, T):
+        rng = np.random.RandomState(seed)
+        B, H, KH, hd, maxp, P = 2, 4, 2, 64, 4, 24
+        q, kp, vp, table, base = self._case(rng, B, T, H, KH, hd, psz,
+                                            maxp, P, jnp.float32)
+        ref = paged_attention_chunk_ref(q, kp, vp, table, base)
+        out = paged_attention_chunk(q, kp, vp, table, base, interpret=True)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-4, rtol=1e-4)
 

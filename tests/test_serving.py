@@ -54,6 +54,170 @@ def test_host_allocator_constant_time(engine_setup):
     assert eng.lane_ctx.violations == []
 
 
+@pytest.mark.parametrize("arch", [
+    "olmo-1b",              # pure paged-global attention
+    "recurrentgemma-2b",    # ring (sliding window) + rglru recurrent
+    "mamba2-370m",          # ssd recurrent
+])
+def test_decode_step_chunk_matches_single_token(arch):
+    """Model-level contract: decode_step_chunk over ragged chunks yields
+    the same per-position logits as token-by-token decode_step — across
+    the paged, ring-eviction, and recurrent-scan chunk paths."""
+    cfg = smoke_config(get_config(arch))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.models.decode_init import empty_decode_state
+    rng = np.random.RandomState(1)
+    toks = rng.randint(1, 255, (1, 2, 11)).astype(np.int32)
+
+    s1 = empty_decode_state(cfg, 1, 2, 64)
+    outs1 = []
+    for t in range(11):
+        lg, s1 = models.decode_step(cfg, params, jnp.asarray(toks[:, :, t]),
+                                    s1)
+        outs1.append(np.asarray(lg))
+    outs1 = np.stack(outs1, axis=2)
+
+    s2 = empty_decode_state(cfg, 1, 2, 64)
+    outs2 = []
+    for c0 in range(0, 11, 4):           # 11 = 4 + 4 + 3, ragged tail
+        n = min(4, 11 - c0)
+        chunk = np.zeros((1, 2, 4), np.int32)
+        chunk[:, :, :n] = toks[:, :, c0:c0 + n]
+        lg, s2, ok = models.decode_step_chunk(
+            cfg, params, jnp.asarray(chunk), s2,
+            jnp.full((1, 2), n, jnp.int32))
+        assert np.asarray(ok).all()
+        outs2.append(np.asarray(lg)[:, :, :n])
+    outs2 = np.concatenate(outs2, axis=2)
+
+    np.testing.assert_allclose(outs1, outs2, atol=1e-5, rtol=1e-5)
+    assert np.array_equal(np.asarray(s1.seq_lens), np.asarray(s2.seq_lens))
+    assert np.array_equal(np.asarray(s1.pool_top), np.asarray(s2.pool_top))
+
+
+def test_decode_step_chunk_pool_denial_appends_nothing(engine_setup):
+    """Pool exhaustion is all-or-nothing: a chunk whose pages cannot all
+    be granted must not advance seq_lens (silently attending over
+    never-written positions) and must report ok=False."""
+    cfg, params = engine_setup
+    from repro.models.decode_init import empty_decode_state
+    state = empty_decode_state(cfg, 1, 1, 64)
+    state = state._replace(pool_top=jnp.zeros_like(state.pool_top))
+    toks = jnp.ones((1, 1, 8), jnp.int32)
+    _, state, ok = models.decode_step_chunk(
+        cfg, params, toks, state, jnp.full((1, 1), 8, jnp.int32))
+    assert not bool(ok[0, 0])
+    assert int(state.seq_lens[0, 0]) == 0
+    assert np.all(np.asarray(state.page_tables) == -1)
+
+
+def test_capacity_cap_when_max_len_not_page_multiple(engine_setup):
+    """max_len not a multiple of page_size: sequences must stop at the
+    page-table capacity instead of overwriting live KV through the
+    clamped page index (regression for the chunked path)."""
+    cfg, params = engine_setup          # smoke page_size = 8
+    eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=44,
+                        chunk_size=8)
+    assert eng.capacity == 40           # 5 pages of 8
+    reqs = [Request(i, prompt=[2] * 30, max_new_tokens=64)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=200)
+    assert all(r.done for r in reqs)
+    # 30 prompt + 10 generated hits capacity-1 done detection
+    assert all(len(r.out_tokens) <= 10 for r in reqs)
+    assert eng.page_occupancy() == 0.0
+
+
+def test_chunked_prefill_token_identical_to_legacy(engine_setup):
+    """Chunked prefill (the fused device-resident step) must emit exactly
+    the tokens the pre-refactor single-token path emits, across ragged
+    prompt lengths, continuous batching, and several chunk sizes."""
+    cfg, params = engine_setup
+    rng = np.random.RandomState(42)
+    prompts = [list(rng.randint(1, 255, rng.randint(2, 29)))
+               for _ in range(9)]
+
+    def run(**kw):
+        eng = ServingEngine(cfg, params, dp=2, b_local=2, max_len=64, **kw)
+        reqs = [Request(i, prompt=list(p), max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=500)
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs], eng
+
+    legacy_out, legacy_eng = run(legacy=True)
+    for chunk in (1, 4, 16):
+        out, eng = run(chunk_size=chunk)
+        assert out == legacy_out, f"chunk_size={chunk} diverged"
+        assert eng.page_occupancy() == 0.0
+    # chunked prefill takes fewer steps than one-token-per-step
+    out16, eng16 = run(chunk_size=16)
+    assert eng16.stats["steps"] < legacy_eng.stats["steps"]
+
+
+def test_steady_state_decode_single_sync(engine_setup):
+    """Once prompts are consumed, each engine step performs exactly one
+    device->host sync (the packed status array) and runs at T=1."""
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                        chunk_size=8)
+    for i in range(2):
+        eng.submit(Request(i, prompt=[3, 5, 7], max_new_tokens=8))
+    eng.step()                      # prefill chunk consumes the prompts
+    assert all(not p for p in eng.pending_tokens.values())
+
+    import repro.serving.engine as engine_mod
+    syncs = []
+    real_asarray = np.asarray
+
+    class CountingNp:
+        def __getattr__(self, name):
+            return getattr(np, name)
+
+        @staticmethod
+        def asarray(x, *a, **kw):
+            if isinstance(x, jax.Array):
+                syncs.append(x.shape)
+            return real_asarray(x, *a, **kw)
+
+    orig = engine_mod.np
+    engine_mod.np = CountingNp()
+    try:
+        steps0 = eng.stats["steps"]
+        for _ in range(3):
+            eng.step()
+    finally:
+        engine_mod.np = orig
+    assert eng.stats["steps"] == steps0 + 3
+    assert len(syncs) == 3, f"expected 1 sync/step, saw {syncs}"
+    assert all(s == (3, 1, 2) for s in syncs), "sync is the packed status"
+
+
+def test_eos_stops_generation(engine_setup):
+    """On-device EOS detection finishes a request mid-budget."""
+    cfg, params = engine_setup
+    probe = ServingEngine(cfg, params, dp=1, b_local=1, max_len=64)
+    r0 = Request(0, prompt=[5, 9, 17, 3], max_new_tokens=6)
+    probe.submit(r0)
+    probe.run(max_steps=100)
+    assert len(r0.out_tokens) == 6
+    eos = r0.out_tokens[2]          # greedy decode is deterministic
+    first = r0.out_tokens.index(eos)      # eos may repeat earlier
+
+    eng = ServingEngine(cfg, params, dp=1, b_local=1, max_len=64,
+                        eos_id=eos)
+    r1 = Request(0, prompt=[5, 9, 17, 3], max_new_tokens=6)
+    eng.submit(r1)
+    eng.run(max_steps=100)
+    assert r1.done
+    assert r1.out_tokens == r0.out_tokens[:first + 1]
+    assert eng.page_occupancy() == 0.0
+
+
 def test_outputs_match_offline_decode(engine_setup):
     """Engine output == running the same prompt through raw decode."""
     cfg, params = engine_setup

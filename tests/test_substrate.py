@@ -186,7 +186,10 @@ class TestPartitionRules:
     def test_divisibility_guard(self):
         import jax as j
         from repro.models.layers import ParamDef
-        mesh = j.sharding.AbstractMesh((1, 2), ("data", "model"))
+        try:                                  # jax >= 0.5 signature
+            mesh = j.sharding.AbstractMesh((1, 2), ("data", "model"))
+        except TypeError:                     # jax 0.4.x: (name, size) pairs
+            mesh = j.sharding.AbstractMesh((("data", 1), ("model", 2)))
         # 6 heads not divisible by 2 -> replicated... 6 % 2 == 0 -> sharded
         d = ParamDef((8, 6, 4), ("embed", "heads", "head_dim"))
         spec = param_specs({"w": d}, mesh)["w"]
