@@ -12,7 +12,7 @@ lock-based and Treiber-stack baselines.
 import random
 
 from repro.core import (SimContext, WaitFreeAllocator, Scheduler,
-                        closed_loop, check_alloc_history, PoolExhausted)
+                        check_alloc_history, PoolExhausted)
 from repro.core.baselines import (HoardSpaceModel, LockFreeListAllocator,
                                   TreiberAllocator)
 

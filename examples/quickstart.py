@@ -17,8 +17,6 @@ import numpy as np
 
 from repro.core import (SimContext, WaitFreeAllocator, Scheduler,
                         closed_loop, check_alloc_history, block_pool)
-from repro import models
-from repro.configs import get_config, smoke_config
 
 # ---------------------------------------------------------- 1. the paper
 print("=== 1. wait-free fixed-size allocate/free (Result 1) ===")

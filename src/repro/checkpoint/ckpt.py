@@ -20,7 +20,6 @@ import json
 import os
 import pathlib
 import shutil
-import tempfile
 import threading
 from typing import Any, Dict, Optional
 

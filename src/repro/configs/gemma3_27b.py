@@ -1,6 +1,6 @@
 """gemma3_27b config (see configs/archs.py for the full assignment table)."""
 
-from .base import ModelConfig, MoEConfig, register
+from .base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     # [hf:google/gemma-3-1b-pt; unverified] — 5:1 local:global, 128k ctx

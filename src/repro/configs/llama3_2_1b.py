@@ -1,6 +1,6 @@
 """llama3_2_1b config (see configs/archs.py for the full assignment table)."""
 
-from .base import ModelConfig, MoEConfig, register
+from .base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     # [hf:meta-llama/Llama-3.2-1B; unverified]

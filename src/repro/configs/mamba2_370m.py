@@ -1,6 +1,6 @@
 """mamba2_370m config (see configs/archs.py for the full assignment table)."""
 
-from .base import ModelConfig, MoEConfig, register
+from .base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     # [arXiv:2405.21060; unverified] — SSD, attention-free

@@ -1,6 +1,6 @@
 """olmo_1b config (see configs/archs.py for the full assignment table)."""
 
-from .base import ModelConfig, MoEConfig, register
+from .base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     # [arXiv:2402.00838; hf] — non-parametric LN

@@ -1,6 +1,6 @@
 """phi4_mini_3_8b config (see configs/archs.py for the full assignment table)."""
 
-from .base import ModelConfig, MoEConfig, register
+from .base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     # [arXiv:2412.08905; hf] — RoPE SwiGLU GQA

@@ -1,6 +1,6 @@
 """phi_3_vision_4_2b config (see configs/archs.py for the full assignment table)."""
 
-from .base import ModelConfig, MoEConfig, register
+from .base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     # [hf:microsoft/Phi-3-vision-128k-instruct; hf] — phi3-mini + CLIP stub

@@ -1,6 +1,6 @@
 """recurrentgemma_2b config (see configs/archs.py for the full assignment table)."""
 
-from .base import ModelConfig, MoEConfig, register
+from .base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     # [arXiv:2402.19427; hf] — RG-LRU + local attn, pattern 2 rec : 1 attn

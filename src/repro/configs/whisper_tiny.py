@@ -1,6 +1,6 @@
 """whisper_tiny config (see configs/archs.py for the full assignment table)."""
 
-from .base import ModelConfig, MoEConfig, register
+from .base import ModelConfig, register
 
 CONFIG = register(ModelConfig(
     # [arXiv:2212.04356; unverified] — enc-dec, conv frontend stubbed

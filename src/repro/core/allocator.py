@@ -39,7 +39,7 @@ noted in DESIGN.md):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Generator, List, Optional
 
 from .memory import BlockMemory

@@ -18,10 +18,10 @@ WaitFreeAllocator`:
 
 from __future__ import annotations
 
-from typing import Generator, List, Optional
+from typing import Generator, Optional
 
 from .memory import BlockMemory
-from .sim import CASWord, NULL, SimContext, Step
+from .sim import CASWord, NULL, SimContext
 
 
 class LockFreeListAllocator:

@@ -10,6 +10,14 @@ and differentiable-free (integer state).
 Request batching: callers pass a fixed-width request vector with a mask
 (SPMD programs need static shapes); each masked-off slot costs nothing
 semantically.  NULL = -1 ids mark failed/masked allocations.
+
+Reference counting (prefix sharing): every block carries an int16
+refcount.  ``alloc``/``alloc_n`` hand out blocks with refcount 1;
+``addref`` registers an extra reference (a second sequence mapping the
+same physical page); ``free`` drops one reference and only blocks whose
+count reaches zero return to the free stack.  Pool-internal batch
+transfers (``alloc_batch``/``free_batch``, the shared<->private lane
+traffic) move *free* blocks and never touch refcounts.
 """
 
 from __future__ import annotations
@@ -27,12 +35,14 @@ class BlockPool(NamedTuple):
 
     free_ids: jax.Array     # int32[m]
     top: jax.Array          # int32 scalar — number of free blocks
+    refcount: jax.Array     # int16[m] — live references per block (0 = free)
 
 
 def create(num_blocks: int) -> BlockPool:
     return BlockPool(
         free_ids=jnp.arange(num_blocks - 1, -1, -1, dtype=jnp.int32),
         top=jnp.int32(num_blocks),
+        refcount=jnp.zeros((num_blocks,), dtype=jnp.int16),
     )
 
 
@@ -40,12 +50,40 @@ def num_free(pool: BlockPool) -> jax.Array:
     return pool.top
 
 
+def num_live(pool: BlockPool) -> jax.Array:
+    """Blocks with at least one reference (each counted once)."""
+    return jnp.sum((pool.refcount > 0).astype(jnp.int32))
+
+
+def _set_ref(refcount: jax.Array, ids: jax.Array, value) -> jax.Array:
+    """refcount[id] = value for valid ids (NULL / out-of-range dropped)."""
+    m = refcount.shape[0]
+    safe = jnp.where(ids >= 0, ids, m)
+    return refcount.at[safe].set(jnp.int16(value), mode="drop")
+
+
+def addref(pool: BlockPool, ids: jax.Array) -> BlockPool:
+    """Register one extra reference per valid id (NULL = no-op).
+
+    Duplicate ids in one call add one reference each (scatter-add).
+    The blocks must be live (refcount >= 1) — sharing a free block is a
+    caller bug, exactly like freeing one.
+    """
+    m = pool.refcount.shape[0]
+    flat = ids.reshape(-1)
+    safe = jnp.where(flat >= 0, flat, m)
+    ones = jnp.ones_like(flat, dtype=jnp.int16)
+    return pool._replace(
+        refcount=pool.refcount.at[safe].add(ones, mode="drop"))
+
+
 def alloc(pool: BlockPool, mask: jax.Array) -> Tuple[BlockPool, jax.Array]:
     """Allocate one block per True slot of ``mask`` (bool[R]).
 
     Returns (new_pool, ids[R]) with ids = NULL where mask is False or the
     pool had too few blocks (allocation is all-or-nothing per slot, in
-    slot order).  O(R) work, independent of m.
+    slot order).  Granted blocks start with refcount 1.  O(R) work,
+    independent of m.
     """
     mask = mask.astype(jnp.int32)
     # slot i takes the (rank_i)-th block from the top of the stack
@@ -54,9 +92,28 @@ def alloc(pool: BlockPool, mask: jax.Array) -> Tuple[BlockPool, jax.Array]:
     take = (mask == 1) & have
     idx = pool.top - rank                     # stack position (top-1 .. )
     idx = jnp.where(take, idx, 0)
-    ids = jnp.where(take, pool.free_ids[idx], NULL)
+    ids = jnp.where(take, pool.free_ids[idx], NULL).astype(jnp.int32)
     n_taken = jnp.sum(take.astype(jnp.int32))
-    return BlockPool(pool.free_ids, pool.top - n_taken), ids.astype(jnp.int32)
+    refcount = _set_ref(pool.refcount, ids, 1)
+    return BlockPool(pool.free_ids, pool.top - n_taken, refcount), ids
+
+
+def _take_n(pool: BlockPool, counts: jax.Array,
+            max_per_slot: int) -> Tuple[BlockPool, jax.Array]:
+    """alloc_n without the refcount stamp — the pool-internal transfer
+    used by lane refills (blocks stay free, just change stacks)."""
+    R = counts.shape[0]
+    counts = jnp.clip(counts.astype(jnp.int32), 0, max_per_slot)
+    k = jnp.arange(max_per_slot, dtype=jnp.int32)[None, :]
+    want = k < counts[:, None]                     # [R, K]
+    have = jnp.cumsum(counts) <= pool.top          # prefix-feasible slots
+    take = want & have[:, None]
+    flat = take.reshape(-1).astype(jnp.int32)
+    rank = (jnp.cumsum(flat) * flat).reshape(R, max_per_slot)  # 1-based
+    idx = jnp.where(take, pool.top - rank, 0)
+    ids = jnp.where(take, pool.free_ids[idx], NULL).astype(jnp.int32)
+    n_taken = jnp.sum(flat)
+    return pool._replace(top=pool.top - n_taken), ids
 
 
 def alloc_n(pool: BlockPool, counts: jax.Array,
@@ -68,23 +125,14 @@ def alloc_n(pool: BlockPool, counts: jax.Array,
     valid ids followed by NULL padding.  Grants are all-or-nothing per
     slot in slot order: because the cumulative demand is monotone, a
     denied slot denies every later slot too (prefix grants), so callers
-    can detect failure from the last needed id alone.  O(R *
-    max_per_slot) work, independent of the pool size m — the chunked
-    analogue of :func:`alloc` (multi-page demand per step absorbed in
-    one batch, the paper's batch-granularity transfer).
+    can detect failure from the last needed id alone.  Granted blocks
+    start with refcount 1.  O(R * max_per_slot) work, independent of the
+    pool size m — the chunked analogue of :func:`alloc` (multi-page
+    demand per step absorbed in one batch, the paper's batch-granularity
+    transfer).
     """
-    R = counts.shape[0]
-    counts = jnp.clip(counts.astype(jnp.int32), 0, max_per_slot)
-    k = jnp.arange(max_per_slot, dtype=jnp.int32)[None, :]
-    want = k < counts[:, None]                     # [R, K]
-    have = jnp.cumsum(counts) <= pool.top          # prefix-feasible slots
-    take = want & have[:, None]
-    flat = take.reshape(-1).astype(jnp.int32)
-    rank = (jnp.cumsum(flat) * flat).reshape(R, max_per_slot)  # 1-based
-    idx = jnp.where(take, pool.top - rank, 0)
-    ids = jnp.where(take, pool.free_ids[idx], NULL)
-    n_taken = jnp.sum(flat)
-    return BlockPool(pool.free_ids, pool.top - n_taken), ids.astype(jnp.int32)
+    pool, ids = _take_n(pool, counts, max_per_slot)
+    return pool._replace(refcount=_set_ref(pool.refcount, ids, 1)), ids
 
 
 def chunk_page_plan(seq_lens: jax.Array, lens: jax.Array, psz: int,
@@ -109,38 +157,86 @@ def granted_mask(ids: jax.Array, counts: jax.Array) -> jax.Array:
     return (counts == 0) | (last >= 0)
 
 
-def free(pool: BlockPool, ids: jax.Array) -> BlockPool:
-    """Return blocks to the pool; slots with id == NULL are ignored.
+def _first_occurrence(ids: jax.Array) -> jax.Array:
+    """bool[R]: True where ids[r] is the first occurrence of its value
+    among the valid entries.  Stable sort + adjacent compare — O(R log
+    R), independent of m (release runs every serve step with R =
+    slots * max_pages, so no all-pairs R^2 blowup here)."""
+    R = ids.shape[0]
+    valid = ids >= 0
+    key = jnp.where(valid, ids, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key)             # stable: ties keep index order
+    sorted_key = key[order]
+    lead = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_key[1:] != sorted_key[:-1]])
+    first = jnp.zeros((R,), bool).at[order].set(lead)
+    return first & valid
 
-    O(R) scatter, independent of m.  Double-free protection is the
-    caller's contract (as in the paper: free requires a live block).
-    """
+
+def release_plan(refcount: jax.Array, ids: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Drop one reference per valid id; return (new_refcount,
+    released bool) where released marks, exactly once per block, the
+    entries whose block reached refcount zero in this call.  Duplicate
+    ids in one call drop one reference each (two sequences releasing a
+    shared page in the same step)."""
+    m = refcount.shape[0]
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, m)
+    dec = jnp.ones_like(ids, dtype=jnp.int16)
+    refcount = refcount.at[safe].add(-dec, mode="drop")
+    now_zero = refcount[jnp.where(valid, ids, 0)] == 0
+    released = valid & now_zero & _first_occurrence(ids)
+    return refcount, released
+
+
+def _push(pool: BlockPool, ids: jax.Array) -> BlockPool:
+    """Push valid ids onto the free stack (no refcount bookkeeping —
+    callers guarantee the blocks are free)."""
     valid = ids >= 0
     rank = jnp.cumsum(valid.astype(jnp.int32)) * valid  # 1-based
     pos = pool.top + rank - 1
     pos = jnp.where(valid, pos, jnp.int32(pool.free_ids.shape[0]))  # drop
     free_ids = pool.free_ids.at[pos].set(ids, mode="drop")
     n = jnp.sum(valid.astype(jnp.int32))
-    return BlockPool(free_ids, pool.top + n)
+    return pool._replace(free_ids=free_ids, top=pool.top + n)
+
+
+def free(pool: BlockPool, ids: jax.Array) -> BlockPool:
+    """Drop one reference per valid id; slots with id == NULL are ignored.
+
+    Blocks whose refcount reaches zero return to the free stack (each
+    exactly once, even if listed twice in one call by two sequences
+    releasing a shared page together).  O(R log R) sort + O(R) scatter,
+    independent of m.  Freeing more references than a block holds is the
+    caller's contract violation (as in the paper: free requires a live
+    block).
+    """
+    flat = ids.reshape(-1)
+    refcount, released = release_plan(pool.refcount, flat)
+    return _push(pool._replace(refcount=refcount),
+                 jnp.where(released, flat, NULL))
 
 
 def alloc_batch(pool: BlockPool, n: int) -> Tuple[BlockPool, jax.Array]:
-    """Allocate a contiguous batch of exactly ``n`` ids (static n) —
-    the paper's batch-granularity transfer.  Returns ids[n] (all NULL if
-    the pool holds fewer than n)."""
+    """Take a contiguous batch of exactly ``n`` free ids (static n) —
+    the paper's batch-granularity shared-pool transfer.  Returns ids[n]
+    (all NULL if the pool holds fewer than n).  Pool-internal: the
+    blocks stay free (refcount untouched)."""
     ok = pool.top >= n
     start = jnp.maximum(pool.top - n, 0)
     ids = jax.lax.dynamic_slice(pool.free_ids, (start,), (n,))
     ids = jnp.where(ok, ids, NULL)
     new_top = jnp.where(ok, pool.top - n, pool.top)
-    return BlockPool(pool.free_ids, new_top), ids.astype(jnp.int32)
+    return pool._replace(top=new_top), ids.astype(jnp.int32)
 
 
 def free_batch(pool: BlockPool, ids: jax.Array) -> BlockPool:
-    """Return a full batch (static length; all ids valid or all NULL)."""
+    """Return a full batch of free blocks (static length; all ids valid
+    or all NULL).  Pool-internal: refcounts untouched."""
     n = ids.shape[0]
     ok = ids[0] >= 0
     updated = jax.lax.dynamic_update_slice(pool.free_ids, ids, (pool.top,))
     free_ids = jnp.where(ok, updated, pool.free_ids)
     new_top = jnp.where(ok, pool.top + n, pool.top)
-    return BlockPool(free_ids, new_top)
+    return pool._replace(free_ids=free_ids, top=new_top)

@@ -1,21 +1,34 @@
 """Two-level (private / shared) block pool — the paper's structure in SPMD.
 
-Each *lane* (a serving request slot or a data-parallel shard) owns a
-private stack of block ids with capacity ``3 * ell``; a shared pool
-(:mod:`block_pool`) holds the rest.  Exactly as in the paper:
+Each *lane* (a serving request slot) owns a private stack of block ids
+with capacity ``3 * ell``; a shared pool (:mod:`block_pool`) holds the
+rest.  Exactly as in the paper:
 
-* ``alloc`` / ``free`` touch **only the lane's private stack** — O(1)
-  array ops per lane, fully vectorized across lanes, no cross-lane
-  coordination (the common case);
+* ``alloc`` / ``alloc_n`` / ``free`` / ``free_n`` touch **only the
+  lane's private stack** — O(1)/O(K) array ops per lane, fully
+  vectorized across lanes, no cross-lane coordination (the common
+  case);
 * ``rebalance`` is the deamortized shared-pool traffic: lanes whose
   private pool dropped below ``ell`` pull a batch of ``ell`` blocks from
-  the shared pool, lanes that exceed ``3*ell - ell`` push a batch back.
-  It is called once per engine step, off the per-token critical path —
-  the moral equivalent of ``run_delayed_step``.
+  the shared pool, lanes that exceed ``2*ell`` push a batch back.  It is
+  called once per engine step, off the per-token critical path — the
+  moral equivalent of ``run_delayed_step``.  Both phases are one
+  fixed-shape gather/scatter across all lanes (no per-lane loop);
+  drains run first so their batches can serve the same call's refills.
 
 Invariant (paper section 4.2): with ell >= max per-step demand, a lane's
 private pool never runs dry between rebalances, so ``alloc`` never needs
 the shared pool synchronously.
+
+Reference counting rides on the shared :class:`BlockPool`'s per-block
+``refcount`` (blocks parked in private lanes are free, refcount 0):
+user grants stamp refcount 1, :func:`addref` registers prefix sharers,
+and ``free_n`` only returns a block to a stack when its count reaches
+zero — release decrements instead of frees.
+
+Serving state carries one HierPool per DP shard (leaves get a leading
+``[DP, ...]`` axis); the ``*_dp`` wrappers vmap every operation over
+that axis so page ids stay shard-local.
 """
 
 from __future__ import annotations
@@ -30,34 +43,47 @@ from .block_pool import BlockPool, NULL
 
 
 class HierPool(NamedTuple):
-    shared: BlockPool
+    shared: BlockPool         # shared stack + the pool-wide refcounts
     private_ids: jax.Array    # int32[L, 3*ell] — per-lane stacks
     private_top: jax.Array    # int32[L]
-    ell: jax.Array            # int32 scalar — batch size (static-ish)
+
+    # ell is not stored: the lane capacity encodes it (3*ell), and every
+    # consumer derives it statically via ``lane_ell`` — no redundant
+    # state to disagree with the shapes.
 
 
 def create(num_blocks: int, num_lanes: int, ell: int) -> HierPool:
-    """All blocks start in the shared pool except one warm batch per lane."""
+    """All blocks start in the shared pool except one warm batch per lane.
+
+    The warm-up is ONE batched carve of ``num_lanes * ell`` ids off the
+    shared stack (lane i receives exactly the batch the old sequential
+    ``alloc_batch`` loop handed it) — O(1) compiled ops, not O(lanes)
+    loop iterations.
+    """
     cap = 3 * ell
     assert num_blocks >= num_lanes * ell, "need >= one batch per lane"
     shared = block_pool.create(num_blocks)
+    n = num_lanes * ell
+    carve = shared.free_ids[num_blocks - n:]
     private_ids = jnp.full((num_lanes, cap), NULL, dtype=jnp.int32)
-    private_top = jnp.zeros((num_lanes,), dtype=jnp.int32)
-    pool = HierPool(shared, private_ids, private_top, jnp.int32(ell))
-    # warm every lane with one batch (sequential init, not on hot path)
-    def warm(i, pool):
-        shared, ids = block_pool.alloc_batch(pool.shared, ell)
-        private_ids = jax.lax.dynamic_update_slice(
-            pool.private_ids, ids[None, :], (i, 0))
-        private_top = pool.private_top.at[i].set(ell)
-        return HierPool(shared, private_ids, private_top, pool.ell)
-    return jax.lax.fori_loop(0, num_lanes, warm, pool)
+    # lane i gets carve slice [n - (i+1)*ell : n - i*ell] == reversed rows
+    private_ids = private_ids.at[:, :ell].set(
+        carve.reshape(num_lanes, ell)[::-1])
+    private_top = jnp.full((num_lanes,), ell, dtype=jnp.int32)
+    shared = shared._replace(top=shared.top - n)
+    return HierPool(shared, private_ids, private_top)
+
+
+def lane_ell(pool: HierPool) -> int:
+    """The lane batch size, derived from the (static) lane capacity."""
+    return pool.private_ids.shape[-1] // 3
 
 
 def alloc(pool: HierPool, want: jax.Array) -> Tuple[HierPool, jax.Array]:
     """Per-lane allocate: want bool[L] -> ids int32[L] (NULL if denied).
 
     Touches only private state: one gather + one subtract per lane.
+    Granted blocks are stamped refcount 1.
     """
     want = want.astype(jnp.int32)
     have = pool.private_top > 0
@@ -66,7 +92,9 @@ def alloc(pool: HierPool, want: jax.Array) -> Tuple[HierPool, jax.Array]:
     ids = jnp.take_along_axis(pool.private_ids, idx[:, None], axis=1)[:, 0]
     ids = jnp.where(take, ids, NULL)
     new_top = pool.private_top - take.astype(jnp.int32)
-    return pool._replace(private_top=new_top), ids
+    shared = pool.shared._replace(
+        refcount=block_pool._set_ref(pool.shared.refcount, ids, 1))
+    return pool._replace(shared=shared, private_top=new_top), ids
 
 
 def alloc_n(pool: HierPool, counts: jax.Array,
@@ -77,7 +105,8 @@ def alloc_n(pool: HierPool, counts: jax.Array,
     needs up to ceil(C / page_size) blocks at once.  All-or-nothing per
     lane, private-stack only — with the §4.2 invariant ``ell >= max
     per-step demand`` a lane's private pool never runs dry between
-    rebalances, so this never touches the shared pool.  O(L * K) work.
+    rebalances, so this never touches the shared pool.  Granted blocks
+    are stamped refcount 1.  O(L * K) work.
     """
     counts = jnp.clip(counts.astype(jnp.int32), 0, max_per_lane)
     ok = counts <= pool.private_top
@@ -87,76 +116,200 @@ def alloc_n(pool: HierPool, counts: jax.Array,
     idx = jnp.maximum(pool.private_top[:, None] - 1 - k, 0)
     ids = jnp.take_along_axis(pool.private_ids, idx, axis=1)
     ids = jnp.where(want, ids, NULL)
-    return pool._replace(private_top=pool.private_top - n), ids
+    shared = pool.shared._replace(
+        refcount=block_pool._set_ref(pool.shared.refcount, ids, 1))
+    return pool._replace(shared=shared,
+                         private_top=pool.private_top - n), ids
+
+
+def alloc_or_shared(pool: HierPool, want: jax.Array
+                    ) -> Tuple[HierPool, jax.Array]:
+    """Lane-first allocate with a synchronous shared-pool fallback.
+
+    The paper's general algorithm: an empty private pool pulls from the
+    shared pool.  The serving hot path never needs the fallback (§4.2
+    sizing + the per-step rebalance keep lanes stocked), but callers
+    looping raw ``decode_step`` without a rebalance must degrade to the
+    shared pool rather than silently corrupt KV once a lane's warm
+    stock is gone."""
+    pool, ids = alloc(pool, want)
+    miss = want & (ids < 0)
+    shared, got = block_pool.alloc(pool.shared, miss)
+    ids = jnp.where(miss, got, ids)
+    return pool._replace(shared=shared), ids
+
+
+def alloc_from_shared(pool: HierPool, counts: jax.Array,
+                      max_per_lane: int) -> Tuple[HierPool, jax.Array]:
+    """Bulk user grants straight from the shared pool — the admission /
+    prefill-loading path, off the per-token hot path (a lane's 3*ell
+    stack cannot hold a whole prompt).  Prefix-grant semantics and
+    refcount stamping as :func:`block_pool.alloc_n`."""
+    shared, ids = block_pool.alloc_n(pool.shared, counts, max_per_lane)
+    return pool._replace(shared=shared), ids
+
+
+def addref(pool: HierPool, ids: jax.Array) -> HierPool:
+    """Register one extra reference per valid id (prefix sharing)."""
+    return pool._replace(shared=block_pool.addref(pool.shared, ids))
+
+
+def free_n(pool: HierPool, ids: jax.Array) -> HierPool:
+    """Per-lane batched free: ids int32[L, K] (NULL entries = no-op).
+
+    Drops one reference per valid id; blocks whose refcount reaches
+    zero return to the owning lane's private stack (up to capacity),
+    the overflow spilling to the shared stack — so a whole sequence's
+    pages release in one fixed-shape call with nothing lost: every
+    block released in this call lands on exactly one stack, duplicate
+    ids (two lanes releasing a shared page together) release once, and
+    still-referenced blocks stay off both stacks.
+    """
+    L, K = ids.shape
+    cap = pool.private_ids.shape[1]
+    refcount, released = block_pool.release_plan(
+        pool.shared.refcount, ids.reshape(-1))
+    released = released.reshape(L, K)
+    rel_ids = jnp.where(released, ids, NULL)
+    # push to the lane: rank the released entries within each lane
+    rank = jnp.cumsum(released.astype(jnp.int32), axis=1)       # 1-based
+    pos = pool.private_top[:, None] + rank - 1
+    to_lane = released & (pos < cap)
+    lane_pos = jnp.where(to_lane, pos, cap)                     # cap => drop
+    rows = jnp.arange(L)[:, None]
+    private_ids = pool.private_ids.at[rows, lane_pos].set(
+        rel_ids, mode="drop")
+    private_top = pool.private_top + jnp.sum(
+        to_lane.astype(jnp.int32), axis=1)
+    spill = jnp.where(released & ~to_lane, rel_ids, NULL).reshape(-1)
+    shared = block_pool._push(pool.shared._replace(refcount=refcount), spill)
+    return HierPool(shared, private_ids, private_top)
 
 
 def free(pool: HierPool, ids: jax.Array) -> HierPool:
     """Per-lane free: ids int32[L] (NULL = no-op for that lane).
 
-    Frees go to the lane's own private pool, as in the paper.  If a
-    private stack is at capacity the block spills directly to the shared
-    pool (bounded leak path; rebalance keeps this rare).
+    Frees go to the lane's own private pool, as in the paper, spilling
+    to the shared pool when the lane stack is full.  One-column case of
+    :func:`free_n` (same refcount semantics).
     """
-    valid = ids >= 0
-    cap = pool.private_ids.shape[1]
-    fits = pool.private_top < cap
-    local = valid & fits
-    pos = jnp.where(local, pool.private_top, 0)
-    rows = jnp.arange(ids.shape[0])
-    private_ids = pool.private_ids.at[rows, pos].set(
-        jnp.where(local, ids, pool.private_ids[rows, pos]))
-    private_top = pool.private_top + local.astype(jnp.int32)
-    spill = jnp.where(valid & ~fits, ids, NULL)
-    shared = block_pool.free(pool.shared, spill)
-    return HierPool(shared, private_ids, private_top, pool.ell)
+    return free_n(pool, ids[:, None])
+
+
+def rebalance_drain(pool: HierPool) -> HierPool:
+    """Phase 1 of the deamortized shared-pool traffic: every lane above
+    ``2*ell`` pushes its top ``ell`` blocks to the shared pool in one
+    fixed-shape scatter (2*ell keeps headroom for a full step of frees,
+    mirroring the paper's ell >= 3p slack)."""
+    L, cap = pool.private_ids.shape
+    ell = cap // 3
+    k = jnp.arange(ell, dtype=jnp.int32)[None, :]
+    drain = pool.private_top > 2 * ell
+    idx = jnp.maximum(pool.private_top[:, None] - 1 - k, 0)
+    dids = jnp.take_along_axis(pool.private_ids, idx, axis=1)
+    dids = jnp.where(drain[:, None], dids, NULL)
+    shared = block_pool._push(pool.shared, dids.reshape(-1))
+    private_top = pool.private_top - jnp.where(drain, ell, 0)
+    return pool._replace(shared=shared, private_top=private_top)
+
+
+def rebalance_refill(pool: HierPool) -> HierPool:
+    """Phase 2: every lane below ``ell`` pulls one batch of ``ell``
+    blocks from the shared pool — one prefix-granting
+    :func:`block_pool._take_n` across all lanes (all-or-nothing per
+    lane in lane order when the shared pool cannot serve everyone)."""
+    L, cap = pool.private_ids.shape
+    ell = cap // 3
+    k = jnp.arange(ell, dtype=jnp.int32)[None, :]
+    refill = pool.private_top < ell
+    counts = jnp.where(refill, ell, 0)
+    shared, got = block_pool._take_n(pool.shared, counts, ell)
+    granted = block_pool.granted_mask(got, counts) & refill
+    place = jnp.where(granted[:, None],
+                      pool.private_top[:, None] + k, cap)   # cap => drop
+    rows = jnp.arange(L)[:, None]
+    private_ids = pool.private_ids.at[rows, place].set(got, mode="drop")
+    private_top = pool.private_top + jnp.where(granted, ell, 0)
+    return HierPool(shared, private_ids, private_top)
 
 
 def rebalance(pool: HierPool) -> HierPool:
     """Deamortized shared-pool traffic (one call per engine step).
 
     Each lane moves at most one batch of ``ell`` blocks per call:
-      * refill if private_top <  ell      (paper: pop a batch)
-      * drain  if private_top > 2*ell     (paper: push a batch at 3*ell;
-        2*ell keeps headroom for a full step of frees, mirroring the
-        paper's ell >= 3p slack)
-    Work is O(L * ell) per call, independent of pool size m.
+    drains first (lanes above 2*ell push a batch), then refills (lanes
+    below ell pull a batch) — ordering that lets this call's drains
+    supply this call's refills, so whenever the pool-wide slack is at
+    least ``3*ell*L`` every lane leaves with >= ell blocks (§4.2 holds
+    by construction).  Work is O(L * ell) per call in two fixed-shape
+    scatters, independent of the pool size m — no per-lane loop.
     """
-    L, cap = pool.private_ids.shape
-
-    def lane_step(i, pool):
-        ell = pool.ell
-        top = pool.private_top[i]
-
-        def refill(pool):
-            shared, ids = block_pool.alloc_batch(
-                pool.shared, int(pool.private_ids.shape[1]) // 3)
-            got = ids[0] >= 0
-            top = pool.private_top[i]
-            # place batch above current top
-            updated = jax.lax.dynamic_update_slice(
-                pool.private_ids[i], ids, (top,))
-            private_ids = pool.private_ids.at[i].set(
-                jnp.where(got, updated, pool.private_ids[i]))
-            private_top = pool.private_top.at[i].add(
-                jnp.where(got, ids.shape[0], 0))
-            return HierPool(shared, private_ids, private_top, pool.ell)
-
-        def drain(pool):
-            n = int(pool.private_ids.shape[1]) // 3
-            top = pool.private_top[i]
-            start = top - n
-            ids = jax.lax.dynamic_slice(pool.private_ids[i], (start,), (n,))
-            shared = block_pool.free_batch(pool.shared, ids)
-            private_top = pool.private_top.at[i].add(-n)
-            return HierPool(shared, pool.private_ids, private_top, pool.ell)
-
-        pool = jax.lax.cond(top < ell, refill, lambda p: p, pool)
-        top2 = pool.private_top[i]
-        pool = jax.lax.cond(top2 > 2 * ell, drain, lambda p: p, pool)
-        return pool
-
-    return jax.lax.fori_loop(0, L, lane_step, pool)
+    return rebalance_refill(rebalance_drain(pool))
 
 
 def total_free(pool: HierPool) -> jax.Array:
-    return pool.shared.top + jnp.sum(pool.private_top)
+    return jnp.sum(pool.shared.top) + jnp.sum(pool.private_top)
+
+
+def num_live(pool: HierPool) -> jax.Array:
+    """Blocks with at least one reference (each counted once)."""
+    return jnp.sum((pool.shared.refcount > 0).astype(jnp.int32))
+
+
+# ---------------------------------------------------------- DP-sharded ops
+#
+# The serving DecodeState holds one HierPool per DP shard: every leaf
+# carries a leading [DP, ...] axis and block ids are shard-local.  The
+# wrappers below vmap the single-shard ops over that axis (no
+# cross-shard gathers ever appear in the HLO — DESIGN.md §5).
+
+DP_AXES = HierPool(
+    shared=BlockPool(free_ids=0, top=0, refcount=0),
+    private_ids=0, private_top=0)
+
+
+def create_dp(dp: int, num_blocks: int, num_lanes: int, ell: int) -> HierPool:
+    """One identical HierPool per DP shard (ids are shard-local)."""
+    pool = create(num_blocks, num_lanes, ell)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (dp,) + a.shape), pool)
+
+
+def alloc_dp(pool: HierPool, want: jax.Array
+             ) -> Tuple[HierPool, jax.Array]:
+    """want bool[DP, L] -> ids int32[DP, L]."""
+    return jax.vmap(alloc, in_axes=(DP_AXES, 0))(pool, want)
+
+
+def alloc_or_shared_dp(pool: HierPool, want: jax.Array
+                       ) -> Tuple[HierPool, jax.Array]:
+    """want bool[DP, L] -> ids int32[DP, L] (lane-first, shared fallback)."""
+    return jax.vmap(alloc_or_shared, in_axes=(DP_AXES, 0))(pool, want)
+
+
+def alloc_n_dp(pool: HierPool, counts: jax.Array,
+               max_per_lane: int) -> Tuple[HierPool, jax.Array]:
+    """counts int32[DP, L] -> ids int32[DP, L, K]."""
+    return jax.vmap(lambda p, c: alloc_n(p, c, max_per_lane),
+                    in_axes=(DP_AXES, 0))(pool, counts)
+
+
+def alloc_from_shared_dp(pool: HierPool, counts: jax.Array,
+                         max_per_lane: int) -> Tuple[HierPool, jax.Array]:
+    """counts int32[DP, L] -> ids int32[DP, L, K] (bulk, off hot path)."""
+    return jax.vmap(lambda p, c: alloc_from_shared(p, c, max_per_lane),
+                    in_axes=(DP_AXES, 0))(pool, counts)
+
+
+def addref_dp(pool: HierPool, ids: jax.Array) -> HierPool:
+    """ids int32[DP, ...] — shard-local extra references."""
+    return jax.vmap(addref, in_axes=(DP_AXES, 0))(pool, ids)
+
+
+def free_n_dp(pool: HierPool, ids: jax.Array) -> HierPool:
+    """ids int32[DP, L, K] — per-lane batched release per shard."""
+    return jax.vmap(free_n, in_axes=(DP_AXES, 0))(pool, ids)
+
+
+def rebalance_dp(pool: HierPool) -> HierPool:
+    return jax.vmap(rebalance, in_axes=(DP_AXES,))(pool)

@@ -140,8 +140,11 @@ def append_chunk(cache: PagedKVCache, k: jax.Array, v: jax.Array,
 
 
 def release(cache: PagedKVCache, seq_mask: jax.Array) -> PagedKVCache:
-    """Free all pages of the masked sequences (one batch-free per call).
+    """Release all pages of the masked sequences (one batch call).
 
+    Each page loses one reference; pages still mapped by a
+    prefix-sharing sibling stay live (release decrements instead of
+    frees — :func:`block_pool.free`'s refcount semantics).
     O(max_seqs * max_pages_per_seq) scatter — independent of num_pages.
     """
     S, P = cache.page_tables.shape
@@ -151,6 +154,57 @@ def release(cache: PagedKVCache, seq_mask: jax.Array) -> PagedKVCache:
     seq_lens = jnp.where(seq_mask, 0, cache.seq_lens)
     return PagedKVCache(pool, cache.k_pages, cache.v_pages,
                         page_tables, seq_lens)
+
+
+def share_prefix(cache: PagedKVCache, dst: int, src: int,
+                 n_tokens: jax.Array) -> Tuple["PagedKVCache", jax.Array]:
+    """Map ``n_tokens`` of seq ``src``'s prefix into seq ``dst`` (static
+    dst/src, traced n_tokens) — the refcount/COW protocol at the cache
+    level (the serving engine runs the same protocol over the
+    DecodeState's layer stack, see serving/prefix_cache.py).
+
+    Full pages are shared: dst's table points at src's pages and each
+    gains a reference (:func:`block_pool.addref`).  A partial tail page
+    is copied-on-write: one fresh page from the pool, src's page
+    content copied, so dst's first divergent append never touches the
+    shared page.  seq_lens[dst] = n_tokens.  Returns (cache, ok) — ok
+    False (nothing changed) if the COW allocation was denied or src's
+    prefix is not resident.
+    """
+    psz = page_size(cache)
+    maxp = cache.page_tables.shape[1]
+    num_pages = cache.k_pages.shape[0]
+    n_tokens = jnp.asarray(n_tokens, jnp.int32)
+    fp = n_tokens // psz
+    partial = n_tokens % psz
+    src_row = cache.page_tables[src]
+    np_needed = (n_tokens + psz - 1) // psz
+    donor_ok = ((cache.seq_lens[src] >= n_tokens) &
+                (src_row[jnp.clip(np_needed - 1, 0, maxp - 1)] >= 0))
+
+    want = jnp.zeros((cache.seq_lens.shape[0],), bool).at[dst].set(
+        (partial > 0) & donor_ok)
+    pool, fresh = block_pool.alloc(cache.pool, want)
+    fresh_id = fresh[dst]
+    ok = donor_ok & ((partial == 0) | (fresh_id >= 0))
+
+    k = jnp.arange(maxp, dtype=jnp.int32)
+    shared_ids = jnp.where((k < fp) & ok, src_row, NULL)
+    pool = block_pool.addref(pool, shared_ids)
+    row = jnp.where(k < fp, src_row, cache.page_tables[dst])
+    row = jnp.where((k == fp) & (partial > 0) & (fresh_id >= 0),
+                    fresh_id, row)
+    page_tables = cache.page_tables.at[dst].set(
+        jnp.where(ok, row, cache.page_tables[dst]))
+
+    src_pid = jnp.maximum(src_row[jnp.clip(fp, 0, maxp - 1)], 0)
+    tgt = jnp.where(ok & (partial > 0) & (fresh_id >= 0), fresh_id,
+                    num_pages)                     # out-of-range => drop
+    k_pages = cache.k_pages.at[tgt].set(cache.k_pages[src_pid], mode="drop")
+    v_pages = cache.v_pages.at[tgt].set(cache.v_pages[src_pid], mode="drop")
+    seq_lens = cache.seq_lens.at[dst].set(
+        jnp.where(ok, n_tokens, cache.seq_lens[dst]))
+    return PagedKVCache(pool, k_pages, v_pages, page_tables, seq_lens), ok
 
 
 def gather_kv(cache: PagedKVCache, seq_id: int | jax.Array,

@@ -1,6 +1,6 @@
 """Linearizability / safety checkers.
 
-Two checkers:
+Three checkers:
 
 1. :func:`check_alloc_history` — allocator-specific safety on a recorded
    history: a linearizable fixed-size allocator must admit a sequential
@@ -10,7 +10,14 @@ Two checkers:
    (allocations of a block must strictly interleave with its frees), which
    we verify directly — no exponential search needed.
 
-2. :class:`WGStackChecker` — a small Wing & Gong style exhaustive
+2. :func:`check_batch_alloc_history` — the batch-granular variant for
+   the device pool's ``alloc_n`` / ``free_n`` (and rebalance) histories:
+   a batch grant linearizes iff the per-block expansion does — an
+   ``alloc_n`` returning K blocks is K allocations sharing one
+   invocation/response interval, a ``free_n`` is the symmetric batch of
+   frees (:func:`expand_batch_history` performs the expansion).
+
+3. :class:`WGStackChecker` — a small Wing & Gong style exhaustive
    linearizability checker for stack histories (used on the P-SIM shared
    stack with small histories).
 """
@@ -18,7 +25,7 @@ Two checkers:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 from .sim import OpRecord
 
@@ -72,6 +79,54 @@ def check_alloc_history(history: Sequence[OpRecord]) -> List[str]:
                 live = False
                 prev = op
     return errs
+
+
+# ------------------------------------------------------------- batch ops
+
+def expand_batch_history(history: Sequence[OpRecord]) -> List[OpRecord]:
+    """Expand batch operations into per-block ops for the safety check.
+
+    * ``alloc_n`` (result = iterable of granted block ids) becomes one
+      ``allocate`` per id;
+    * ``free_n`` (arg = iterable of released block ids) becomes one
+      ``free`` per id;
+    * ``allocate`` / ``free`` pass through unchanged.
+
+    Every expanded op inherits the batch op's invocation/response
+    interval (the grant is one atomic step of the lane), so the
+    interval reasoning of :func:`check_alloc_history` applies verbatim:
+    batch grants must linearize exactly like their sequential
+    expansion.  Rebalance moves *free* blocks between stacks and is
+    invisible to the allocate/free history — conservation checks cover
+    it (see tests).
+    """
+    out: List[OpRecord] = []
+    serial = 10 ** 6      # expanded opids stay unique and ordered
+    for op in history:
+        if op.name == "alloc_n":
+            ids = [b for b in (op.result or []) if b is not None and b >= 0]
+            for j, b in enumerate(ids):
+                out.append(OpRecord(
+                    opid=op.opid * serial + j, pid=op.pid, name="allocate",
+                    arg=None, invoke_step=op.invoke_step, steps=op.steps,
+                    result=b, response_step=op.response_step))
+        elif op.name == "free_n":
+            ids = [b for b in (op.arg or []) if b is not None and b >= 0]
+            for j, b in enumerate(ids):
+                out.append(OpRecord(
+                    opid=op.opid * serial + j, pid=op.pid, name="free",
+                    arg=b, invoke_step=op.invoke_step, steps=op.steps,
+                    result=None, response_step=op.response_step))
+        else:
+            out.append(op)
+    return out
+
+
+def check_batch_alloc_history(history: Sequence[OpRecord]) -> List[str]:
+    """Safety check for histories containing batch ``alloc_n``/``free_n``
+    ops (the two-level device pool's operations): expand batches to
+    per-block ops, then run :func:`check_alloc_history`."""
+    return check_alloc_history(expand_batch_history(history))
 
 
 # ---------------------------------------------------------------- WG checker

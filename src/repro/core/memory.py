@@ -21,7 +21,7 @@ from __future__ import annotations
 
 from typing import Generator, List
 
-from .sim import NULL, SimContext, Step
+from .sim import SimContext, Step
 
 
 class BlockMemory:

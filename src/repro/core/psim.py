@@ -31,11 +31,11 @@ record copies exactly as in P-SIM.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Generator, List, Optional, Tuple
 
 from .memory import BlockMemory
-from .sim import LLSC, NULL, Register, RegisterArray, SimContext, Step
+from .sim import LLSC, NULL, RegisterArray, SimContext, Step
 
 # Node layout inside a k>=2-word block (see memory.py):
 NODE_DATA = 0   # word 0: data (pointer to the batch's first block)

@@ -20,7 +20,7 @@ completes in bounded own-steps.
 from __future__ import annotations
 
 import random
-from typing import Callable, Dict, Generator, List, Optional, Sequence
+from typing import Callable, Dict, Generator, List, Optional
 
 
 class Scheduler:

@@ -12,11 +12,10 @@ state, which is what makes checkpoint/restart and elastic scaling exact.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)

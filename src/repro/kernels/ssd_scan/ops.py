@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import ssd_scan as _kernel
 from .ref import ssd_scan_ref as _ref

@@ -30,7 +30,6 @@ import jax
 
 from .. import models
 from ..configs import SHAPES, get_config, list_archs
-from ..configs.base import base_kind
 from . import roofline as rf
 from . import steps as steps_mod
 from .mesh import make_production_mesh

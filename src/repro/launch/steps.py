@@ -5,20 +5,21 @@ trainer, and the serving engine.  All specs are mesh-aware:
 
 * train/prefill: tokens [B, S] sharded over the batch axes;
 * decode: [DP, B_local] layout with DP = min(#batch-shards, B); paged KV
-  pools are per-DP-shard private pools (see DESIGN.md / transformer.py).
+  pages live in a per-DP-shard two-level HierPool with per-slot private
+  lanes (see DESIGN.md §7 / transformer.py).
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import models
-from ..configs.base import ModelConfig, ShapeConfig, SHAPES, base_kind
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core import block_pool, hier_pool
 from ..models import transformer as tfm
 from ..optim import adamw
 from ..parallel import partition
@@ -114,8 +115,13 @@ def decode_state_shardings(cfg: ModelConfig, state_defs: tfm.DecodeState,
         kv_pages=kv_pages, rings=rings, rec=rec,
         page_tables=_ns(mesh, P(dpa, None, None)),
         seq_lens=_ns(mesh, P(dpa, None)),
-        pool_ids=_ns(mesh, P(dpa, None)),
-        pool_top=_ns(mesh, P(dpa)),
+        pool=hier_pool.HierPool(
+            shared=block_pool.BlockPool(
+                free_ids=_ns(mesh, P(dpa, None)),
+                top=_ns(mesh, P(dpa)),
+                refcount=_ns(mesh, P(dpa, None))),
+            private_ids=_ns(mesh, P(dpa, None, None)),
+            private_top=_ns(mesh, P(dpa, None))),
         enc_kv=enc_kv)
 
 

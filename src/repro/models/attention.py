@@ -10,7 +10,7 @@ TPU execution path validated against these same semantics.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

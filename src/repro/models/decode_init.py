@@ -7,18 +7,22 @@ them.  Layouts match :class:`repro.models.transformer.DecodeState`.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import hier_pool
 from .transformer import DecodeState, decode_state_defs, _positions
 
 
-def empty_decode_state(cfg, dp: int, b_local: int, max_len: int) -> DecodeState:
-    """Concrete zero state with full per-shard page pools."""
-    defs = decode_state_defs(cfg, dp, b_local, max_len)
+def empty_decode_state(cfg, dp: int, b_local: int, max_len: int,
+                       chunk: int | None = None) -> DecodeState:
+    """Concrete zero state; pages live in a per-shard two-level pool
+    with one private lane per slot (``chunk`` sizes the lane batch
+    ``ell`` — see :func:`repro.models.transformer.pool_ell`)."""
+    defs = decode_state_defs(cfg, dp, b_local, max_len, chunk=chunk)
 
     def zeros(sds):
         return jnp.zeros(sds.shape, sds.dtype)
@@ -26,15 +30,14 @@ def empty_decode_state(cfg, dp: int, b_local: int, max_len: int) -> DecodeState:
     kv_pages = jax.tree.map(zeros, defs.kv_pages)
     rings = jax.tree.map(zeros, defs.rings)
     rec = jax.tree.map(zeros, defs.rec)
-    pages_local = defs.pool_ids.shape[1]
-    pool_ids = jnp.broadcast_to(
-        jnp.arange(pages_local - 1, -1, -1, jnp.int32)[None], (dp, pages_local))
-    pool_top = jnp.full((dp,), pages_local, jnp.int32)
+    pages_local = defs.pool.shared.free_ids.shape[1]
+    ell = defs.pool.private_ids.shape[2] // 3
+    pool = hier_pool.create_dp(dp, pages_local, b_local, ell)
     page_tables = jnp.full(defs.page_tables.shape, -1, jnp.int32)
     seq_lens = jnp.zeros(defs.seq_lens.shape, jnp.int32)
     enc_kv = jax.tree.map(zeros, defs.enc_kv) if defs.enc_kv is not None else None
     return DecodeState(kv_pages, rings, rec, page_tables, seq_lens,
-                       pool_ids, pool_top, enc_kv)
+                       pool, enc_kv)
 
 
 def empty_serve_arrays(dp: int, b_local: int):
@@ -57,8 +60,11 @@ def load_prefill(cfg, state: DecodeState, caches: Dict[str, Any],
 
     caches: output of ``forward_prefill`` — attention caches are dense
     (k, v) of [n_groups, B, S, KH, hd]; recurrent caches are final
-    states.  All B sequences share prompt_len.  Pages are taken from
-    each DP shard's private pool (sequentially — engine-side op).
+    states.  All B sequences share prompt_len.  Pages come straight
+    from each shard's shared pool in one batched
+    :func:`hier_pool.alloc_from_shared` grant (bulk admission — a whole
+    prompt never fits a 3*ell lane, and this path is off the per-token
+    hot path by construction).
     """
     dp, b_local, max_pages = state.page_tables.shape
     psz = cfg.page_size
@@ -75,15 +81,13 @@ def load_prefill(cfg, state: DecodeState, caches: Dict[str, Any],
     def cross_kv(pos):
         return caches[pos][1]
 
-    # --- page allocation: per shard, first b_local * n_pages pool entries
-    pool_ids = np.array(state.pool_ids)
-    pool_top = np.array(state.pool_top)
+    # --- page allocation: one batched shared-pool grant per shard
+    counts = jnp.full((dp, b_local), n_pages, jnp.int32)
+    pool, ids = hier_pool.alloc_from_shared_dp(
+        state.pool, counts, max(n_pages, 1))
+    assert bool(jnp.all(ids[..., :n_pages] >= 0)), "prefill pool exhausted"
     tables = np.full((dp, b_local, max_pages), -1, np.int32)
-    for d in range(dp):
-        for b in range(b_local):
-            for pg in range(n_pages):
-                pool_top[d] -= 1
-                tables[d, b, pg] = pool_ids[d, pool_top[d]]
+    tables[:, :, :n_pages] = np.asarray(ids)[:, :, :n_pages]
 
     new_kv_pages = {}
     for pos, (kp, vp) in state.kv_pages.items():
@@ -157,5 +161,5 @@ def load_prefill(cfg, state: DecodeState, caches: Dict[str, Any],
         kv_pages=new_kv_pages, rings=new_rings, rec=new_rec,
         page_tables=jnp.asarray(tables),
         seq_lens=jnp.full((dp, b_local), prompt_len, jnp.int32),
-        pool_ids=jnp.asarray(pool_ids), pool_top=jnp.asarray(pool_top),
+        pool=pool,
         enc_kv=enc_kv)

@@ -3,16 +3,15 @@
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from .layers import (ParamDef, chunked_softmax_xent, init_tree, is_def,
-                     logits_apply, shape_tree)
-from .transformer import (DecodeState, decode_state_defs, forward_decode,
-                          forward_decode_chunk, forward_prefill,
-                          forward_train, model_defs)
+from .layers import (chunked_softmax_xent, init_tree, is_def, logits_apply,
+                     shape_tree)
+from .transformer import (DecodeState, forward_decode, forward_decode_chunk,
+                          forward_prefill, forward_train, model_defs)
 
 
 def param_defs(cfg):

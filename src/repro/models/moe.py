@@ -19,7 +19,7 @@ logical axis (expert parallelism = model axis).
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ RG-LRU) -> output projection.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ kernel (kernels/ssd_scan) tiles the same computation for VMEM.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

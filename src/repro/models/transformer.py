@@ -14,9 +14,10 @@ Three entry points:
 
 Decode state (the paper's technique lives here):
   * global-attention layers use **paged KV** (block tables +
-    fixed-size pages from :mod:`repro.core.block_pool` — constant-time
-    alloc/free, per-DP-shard private pools exactly like the paper's
-    private pools);
+    fixed-size pages from the two-level :mod:`repro.core.hier_pool` —
+    constant-time alloc/free from per-*slot* private lanes exactly like
+    the paper's private pools, with the shared pool behind them and the
+    deamortized ``rebalance`` once per engine step);
   * local/SWA layers use fixed-size **ring slabs** (bounded state needs
     no paging — it is a fixed-size block handed out at admission);
   * SSD / RG-LRU layers carry fixed-size recurrent state slabs.
@@ -35,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import base_kind, is_moe_kind
-from ..core import block_pool
+from ..core import block_pool, hier_pool
 from ..kernels.paged_attention.ops import paged_attention_chunk
 from ..parallel.partition import constrain_batch
 from . import attention as attn
@@ -226,8 +227,9 @@ class DecodeState(NamedTuple):
     rec:         dict pos -> pytree of recurrent states [n_stack, DP, Bl, ...]
     page_tables: int32 [DP, Bl, max_pages]   (shared by all paged layers)
     seq_lens:    int32 [DP, Bl]
-    pool_ids:    int32 [DP, pages_local]     (per-shard private free stacks)
-    pool_top:    int32 [DP]
+    pool:        HierPool with leading-[DP] leaves — per-slot private
+                 lanes of capacity 3*ell over a per-shard shared pool
+                 (page ids shard-local; all mutation via hier_pool.*)
     enc_kv:      optional (k, v) [n_enc_stack?, ...] cross-attn KV (encdec)
     """
     kv_pages: Dict[str, Tuple[jax.Array, jax.Array]]
@@ -235,8 +237,7 @@ class DecodeState(NamedTuple):
     rec: Dict[str, Any]
     page_tables: jax.Array
     seq_lens: jax.Array
-    pool_ids: jax.Array
-    pool_top: jax.Array
+    pool: hier_pool.HierPool
     enc_kv: Any
 
 
@@ -254,15 +255,32 @@ def _positions(cfg) -> Dict[str, list]:
     return kinds
 
 
-def decode_state_defs(cfg, dp: int, b_local: int, max_len: int):
-    """ShapeDtypeStruct tree for the decode state (dry-run input)."""
+def pool_ell(cfg, chunk: Optional[int] = None) -> int:
+    """Lane batch size: ell >= the max pages one chunk can demand
+    (ceil(chunk / page_size)), so the §4.2 never-dry invariant holds by
+    construction — a slot's private lane always covers the next step's
+    worst-case demand between rebalances."""
+    chunk = chunk if chunk is not None else 2 * cfg.page_size
+    return max(-(-int(chunk) // cfg.page_size), 2)
+
+
+def decode_state_defs(cfg, dp: int, b_local: int, max_len: int,
+                      chunk: Optional[int] = None):
+    """ShapeDtypeStruct tree for the decode state (dry-run input).
+
+    ``chunk`` is the serving engine's max tokens per step per sequence;
+    it sizes the private-lane batch ``ell`` (see :func:`pool_ell`).
+    """
     psz = cfg.page_size
     KH, hd = cfg.n_kv_heads, cfg.hd
     dt = cfg.jdtype
     ng = cfg.n_groups
     max_pages = max(max_len // psz, 1)
-    # per-shard page pool: enough for all local sequences + slack batch
-    pages_local = b_local * max_pages + 2 * max(b_local, 8)
+    ell = pool_ell(cfg, chunk)
+    # per-shard page pool: enough for all local sequences at max length
+    # PLUS fully-stocked lanes (3*ell per slot) — so rebalance can keep
+    # every lane at >= ell free blocks even at peak global occupancy
+    pages_local = b_local * max_pages + 3 * ell * b_local
     kv_pages, rings, rec = {}, {}, {}
 
     def entry(pos, kind, stack):
@@ -301,12 +319,19 @@ def decode_state_defs(cfg, dp: int, b_local: int, max_len: int):
                cfg.enc_len, cfg.n_kv_heads, cfg.hd)
         enc_kv = (jax.ShapeDtypeStruct(shp, dt), jax.ShapeDtypeStruct(shp, dt))
 
+    pool = hier_pool.HierPool(
+        shared=block_pool.BlockPool(
+            free_ids=jax.ShapeDtypeStruct((dp, pages_local), jnp.int32),
+            top=jax.ShapeDtypeStruct((dp,), jnp.int32),
+            refcount=jax.ShapeDtypeStruct((dp, pages_local), jnp.int16)),
+        private_ids=jax.ShapeDtypeStruct((dp, b_local, 3 * ell), jnp.int32),
+        private_top=jax.ShapeDtypeStruct((dp, b_local), jnp.int32))
+
     return DecodeState(
         kv_pages=kv_pages, rings=rings, rec=rec,
         page_tables=jax.ShapeDtypeStruct((dp, b_local, max_pages), jnp.int32),
         seq_lens=jax.ShapeDtypeStruct((dp, b_local), jnp.int32),
-        pool_ids=jax.ShapeDtypeStruct((dp, pages_local), jnp.int32),
-        pool_top=jax.ShapeDtypeStruct((dp,), jnp.int32),
+        pool=pool,
         enc_kv=enc_kv,
     )
 
@@ -476,10 +501,13 @@ def forward_decode(cfg, params, tokens, state: DecodeState, active=None):
     in a continuous-batching engine stay inert.
 
     Page allocation: sequences crossing a page boundary take one page
-    from their DP shard's private free stack (block_pool.alloc — O(1),
-    the paper's operation).  The serving engine refills/drains these
-    private pools against the host-side shared pool off the hot path
-    (hier_pool.rebalance / the paper's deamortized transfers).
+    from their slot's private lane (hier_pool.alloc — O(1), the paper's
+    operation, lane-local state only), falling back to the shard's
+    shared pool when the lane is dry — the serving engine's per-step
+    rebalance makes the fallback dead code on its path (§4.2), but a
+    caller looping raw decode_step without rebalancing must degrade to
+    the shared pool rather than silently write through a NULL page id
+    once the lane's warm stock is gone.
     """
     DP, Bl = tokens.shape
     if active is None:
@@ -488,25 +516,16 @@ def forward_decode(cfg, params, tokens, state: DecodeState, active=None):
     positions = state.seq_lens                       # current write position
 
     # --- page allocation for this step (once, shared by all paged layers)
-    new_tables, pool_ids, pool_top = state.page_tables, state.pool_ids, state.pool_top
     if state.kv_pages:
         psz = cfg.page_size
         needs = ((positions % psz) == 0) & active
-
-        def alloc_shard(ids, top, need):
-            pool = block_pool.BlockPool(ids, top)
-            pool, got = block_pool.alloc(pool, need)
-            return pool.free_ids, pool.top, got
-
-        pool_ids, pool_top, got = jax.vmap(alloc_shard)(
-            state.pool_ids, state.pool_top, needs)
+        pool, got = hier_pool.alloc_or_shared_dp(state.pool, needs)
         page_idx = positions // psz
         dp_i = jnp.arange(DP)[:, None]
         bl_i = jnp.arange(Bl)[None, :]
         new_tables = state.page_tables.at[dp_i, bl_i, page_idx].set(
             jnp.where(needs, got, state.page_tables[dp_i, bl_i, page_idx]))
-    state = state._replace(page_tables=new_tables, pool_ids=pool_ids,
-                           pool_top=pool_top)
+        state = state._replace(page_tables=new_tables, pool=pool)
 
     st_kinds = _positions(cfg)
     has_x = cfg.arch_kind == "encdec"
@@ -592,7 +611,7 @@ def forward_decode(cfg, params, tokens, state: DecodeState, active=None):
         kv_pages=kv_pages, rings=rings, rec=rec,
         page_tables=state.page_tables,
         seq_lens=state.seq_lens + active.astype(jnp.int32),
-        pool_ids=state.pool_ids, pool_top=state.pool_top,
+        pool=state.pool,
         enc_kv=state.enc_kv)
 
     if "final_norm" in params:
@@ -816,12 +835,13 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
     [DP, Bl, T, d], new DecodeState) with seq_lens advanced by lens.
 
     Pages for the WHOLE chunk (up to ceil(T/psz) per sequence) come
-    from the shard's private free stack in one :func:`block_pool.
-    alloc_n` call — the paper's batch-granularity transfer absorbing
-    multi-page demand per step in O(Bl * T) work, independent of the
-    pool size.  With T == 1 and lens == active this computes exactly
-    what :func:`forward_decode` computes (the serving engine's
-    steady-state decode path).
+    from each slot's private lane in one :func:`hier_pool.alloc_n`
+    call — the paper's batch-granularity transfer absorbing multi-page
+    demand per step in O(Bl * T) lane-local work, independent of the
+    pool size (the §4.2 sizing rule ``ell >= ceil(T/psz)`` keeps the
+    lanes never-dry between rebalances).  With T == 1 and lens ==
+    active this computes exactly what :func:`forward_decode` computes
+    (the serving engine's steady-state decode path).
     """
     DP, Bl, T = tokens.shape
     if active is None:
@@ -841,14 +861,7 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
         kmax = -(-T // psz)
         lens, pages_before, counts = block_pool.chunk_page_plan(
             base, lens, psz, maxp)
-
-        def alloc_shard(ids, top, cnt):
-            pool = block_pool.BlockPool(ids, top)
-            pool, got = block_pool.alloc_n(pool, cnt, kmax)
-            return pool.free_ids, pool.top, got
-
-        pool_ids, pool_top, got = jax.vmap(alloc_shard)(
-            state.pool_ids, state.pool_top, counts)
+        pool, got = hier_pool.alloc_n_dp(state.pool, counts, kmax)
         lens = jnp.where(block_pool.granted_mask(got, counts), lens, 0)
         dp_i = jnp.arange(DP)[:, None, None]
         bl_i = jnp.arange(Bl)[None, :, None]
@@ -858,8 +871,7 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
         slot = jnp.where(new_page, slot, maxp)       # out-of-range => drop
         new_tables = state.page_tables.at[dp_i, bl_i, slot].set(
             got, mode="drop")
-        state = state._replace(page_tables=new_tables, pool_ids=pool_ids,
-                               pool_top=pool_top)
+        state = state._replace(page_tables=new_tables, pool=pool)
 
     positions = base[..., None] + jnp.arange(T, dtype=jnp.int32)[None, None]
     tok_valid = jnp.arange(T)[None, None, :] < lens[..., None]
@@ -937,7 +949,7 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
         kv_pages=kv_pages, rings=rings, rec=rec,
         page_tables=state.page_tables,
         seq_lens=base + lens,
-        pool_ids=state.pool_ids, pool_top=state.pool_top,
+        pool=state.pool,
         enc_kv=state.enc_kv)
 
     if "final_norm" in params:

@@ -7,8 +7,7 @@ state is a pytree matching the param tree.
 
 from __future__ import annotations
 
-import math
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

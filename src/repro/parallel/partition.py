@@ -19,7 +19,7 @@ Alternate rule sets are first-class for the §Perf hillclimb:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

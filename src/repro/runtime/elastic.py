@@ -14,7 +14,7 @@ accumulation so optimization dynamics are unchanged.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,10 +8,20 @@ Two allocator integrations (DESIGN.md §2b):
   admission/release is O(1) regardless of fleet size, so request
   scheduling never stalls behind a global lock (the paper's claim,
   live in the control plane).
-* **device (SPMD)**: KV pages come from per-DP-shard private pools
-  (block_pool inside the jitted step) — one O(R) ``alloc_n`` batch per
-  step regardless of how many pages the chunk needs, exactly the
-  private-pool fast path at batch granularity.
+* **device (SPMD)**: KV pages come from the two-level
+  :mod:`~repro.core.hier_pool` threaded through ``DecodeState`` — one
+  private lane of capacity ``3*ell`` per serving slot, a shared pool
+  per DP shard behind them, and one deamortized ``rebalance`` fused
+  into the jitted step (off the per-token path), so per-step alloc and
+  free touch only lane-local state: exactly the paper's structure at
+  batch granularity.
+
+Prefix sharing (DESIGN.md §7): a host-side radix trie over live
+prompts (:mod:`.prefix_cache`) maps identical prompt prefixes from
+concurrent requests onto the same physical pages.  Shared pages carry
+an int16 refcount in the pool; a copy-on-write step at admission gives
+each slot a private copy of the one partial page it will append into,
+and release inside the jitted step decrements instead of frees.
 
 The token hot path is fully device-resident (DESIGN.md §6): one jitted
 ``_serve_step`` embeds the forward pass, chunked prefill, greedy
@@ -33,17 +43,18 @@ import functools
 import itertools
 import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .. import models
-from ..core import NULL, SimContext, WaitFreeAllocator
+from ..core import NULL, SimContext, WaitFreeAllocator, hier_pool
 from ..models.decode_init import empty_decode_state, empty_serve_arrays
 from ..models.layers import logits_apply
 from ..models.transformer import DecodeState, forward_decode_chunk
+from .prefix_cache import PrefixCache, share_prefix_step
 
 
 @dataclasses.dataclass
@@ -59,23 +70,16 @@ class Request:
 
 
 def _release_slots(state: DecodeState, mask):
-    """Jit-able: free all pages of masked slots, zero their state.
+    """Jit-able: release all pages of masked slots, zero their state.
 
-    mask: bool[DP, Bl].
+    mask: bool[DP, Bl].  One :func:`hier_pool.free_n` per shard — each
+    page loses one reference; pages still mapped by a prefix-sharing
+    sibling stay live (release decrements instead of frees), the rest
+    return to the slot's lane / the shared pool.
     """
     dp, bl, maxp = state.page_tables.shape
-
-    def free_shard(ids, top, table, m):
-        # push freed page ids back onto the shard stack
-        flat = jnp.where(m[:, None], table, NULL).reshape(-1)
-        valid = flat >= 0
-        rank = jnp.cumsum(valid.astype(jnp.int32)) * valid
-        pos = jnp.where(valid, top + rank - 1, ids.shape[0])
-        ids = ids.at[pos].set(flat, mode="drop")
-        return ids, top + jnp.sum(valid.astype(jnp.int32))
-
-    pool_ids, pool_top = jax.vmap(free_shard)(
-        state.pool_ids, state.pool_top, state.page_tables, mask)
+    to_free = jnp.where(mask[:, :, None], state.page_tables, NULL)
+    pool = hier_pool.free_n_dp(state.pool, to_free)
     page_tables = jnp.where(mask[:, :, None], NULL, state.page_tables)
     seq_lens = jnp.where(mask, 0, state.seq_lens)
 
@@ -90,14 +94,14 @@ def _release_slots(state: DecodeState, mask):
     rings = zero_masked(state.rings)
     rec = zero_masked(state.rec)
     return state._replace(page_tables=page_tables, seq_lens=seq_lens,
-                          pool_ids=pool_ids, pool_top=pool_top,
-                          rings=rings, rec=rec)
+                          pool=pool, rings=rings, rec=rec)
 
 
 # Packed per-step status rows (the step's single device->host transfer).
 STATUS_TOKEN = 0     # sampled token id (-1 where nothing was emitted)
 STATUS_EMITTED = 1   # 1 iff the slot produced an output token this step
 STATUS_DONE = 2      # 1 iff the slot finished (pages already released)
+STATUS_PAGES = 3     # pages-in-use on the slot's DP shard (broadcast row)
 
 
 def _serve_step(cfg, max_len, eos_id, params, state, last_tok, out_count,
@@ -111,9 +115,13 @@ def _serve_step(cfg, max_len, eos_id, params, state, last_tok, out_count,
     produces an output token this step (host knows this statically —
     it's "prompt exhausted by this chunk" or "generating").
 
-    Folds greedy sampling, EOS/length done-detection, and page release
-    into the step so the host syncs exactly once, on the returned
-    packed status int32[3, DP, Bl] (see STATUS_* row indices).
+    Folds greedy sampling, EOS/length done-detection, page release for
+    finished slots, and the once-per-step :func:`hier_pool.rebalance`
+    (the paper's deamortized shared-pool traffic, off the per-token
+    path) into the step so the host syncs exactly once, on the returned
+    packed status int32[4, DP, Bl] (see STATUS_* row indices; the PAGES
+    row carries per-shard pages-in-use so occupancy tracking costs no
+    extra transfer).
     """
     DP, Bl, T = prompt_toks.shape
     gen_col = jnp.zeros((DP, Bl, T), jnp.int32).at[:, :, 0].set(last_tok)
@@ -135,10 +143,17 @@ def _serve_step(cfg, max_len, eos_id, params, state, last_tok, out_count,
                      (emit & (nxt == eos_id)))
     last_tok = jnp.where(emit, nxt, last_tok)
     state = _release_slots(state, done)
+    # deamortized shared<->lane traffic: once per step, off the
+    # per-token path (the paper's run_delayed_step)
+    state = state._replace(pool=hier_pool.rebalance_dp(state.pool))
 
+    pages_local = state.pool.shared.free_ids.shape[1]
+    free_now = state.pool.shared.top + jnp.sum(state.pool.private_top, axis=1)
+    pages_used = (pages_local - free_now).astype(jnp.int32)      # [DP]
     status = jnp.stack([jnp.where(emit, nxt, -1),
                         emit.astype(jnp.int32),
-                        done.astype(jnp.int32)])
+                        done.astype(jnp.int32),
+                        jnp.broadcast_to(pages_used[:, None], (DP, Bl))])
     return state, last_tok, out_count, status
 
 
@@ -146,14 +161,16 @@ class ServingEngine:
     def __init__(self, cfg, params, dp: int = 1, b_local: int = 4,
                  max_len: int = 512, scheduler_lanes: int = 2,
                  greedy: bool = True, chunk_size: int = 8,
-                 eos_id: Optional[int] = None, legacy: bool = False):
+                 eos_id: Optional[int] = None, legacy: bool = False,
+                 prefix_sharing: bool = True):
         self.cfg = cfg
         self.params = params
         self.dp, self.bl = dp, b_local
         self.max_len = max_len
         self.chunk = max(int(chunk_size), 1)
         self.legacy = legacy
-        self.state = empty_decode_state(cfg, dp, b_local, max_len)
+        self.state = empty_decode_state(cfg, dp, b_local, max_len,
+                                        chunk=self.chunk)
         self.last_tok, self.out_count, self.budget = \
             empty_serve_arrays(dp, b_local)
         self.greedy = greedy
@@ -172,11 +189,26 @@ class ServingEngine:
             functools.partial(_serve_step, cfg, self.capacity,
                               -1 if eos_id is None else int(eos_id)),
             donate_argnums=(1, 2, 3))
-        # pre-refactor single-token path (A/B benchmarking)
-        self._decode = jax.jit(
-            lambda p, t, s, a: models.decode_step(cfg, p, t, s, active=a),
-            donate_argnums=(2,))
+        # pre-refactor single-token path (A/B benchmarking); the
+        # once-per-step lane rebalance rides inside its jit as well
+        def _legacy_step(p, t, s, a):
+            logits, s = models.decode_step(cfg, p, t, s, active=a)
+            return logits, s._replace(pool=hier_pool.rebalance_dp(s.pool))
+
+        self._decode = jax.jit(_legacy_step, donate_argnums=(2,))
         self._release = jax.jit(_release_slots, donate_argnums=(0,))
+
+        # prefix sharing: only sound when the whole decode state is
+        # paged (ring / recurrent layers would need donor state at the
+        # match point); page ids are shard-local, so matches are too
+        self.prefix_cache: Optional[PrefixCache] = None
+        if (prefix_sharing and not legacy and self.state.kv_pages
+                and not self.state.rings and not self.state.rec
+                and self.state.enc_kv is None):
+            self.prefix_cache = PrefixCache(cfg.page_size)
+            self._share = jax.jit(
+                functools.partial(share_prefix_step, cfg.page_size),
+                donate_argnums=(0,))
 
         # host-side wait-free slot allocator: slots are fixed-size blocks.
         n_slots = dp * b_local
@@ -194,13 +226,26 @@ class ServingEngine:
         self.active: Dict[int, Request] = {}     # slot -> request
         self.pending_tokens: Dict[int, List[int]] = {}
         self.stats = {"steps": 0, "tokens_out": 0, "admitted": 0,
-                      "prompt_tokens": 0, "alloc_steps_max": 0}
+                      "prompt_tokens": 0, "alloc_steps_max": 0,
+                      "prefix_shared_tokens": 0, "prefix_shared_reqs": 0,
+                      "pages_peak": 0, "pages_sum": 0}
 
     # ------------------------------------------------------------ control
-    def _host_alloc_slot(self) -> Optional[int]:
-        """O(1) wait-free admission through the paper's allocator."""
+    def _host_alloc_slot(self, preferred_shard: Optional[int] = None
+                         ) -> Optional[int]:
+        """O(1) wait-free admission through the paper's allocator.
+
+        ``preferred_shard`` steers placement next to a prefix-sharing
+        donor (page ids are shard-local, so only same-shard slots can
+        map the donor's pages)."""
         if not self._free_slots:
             return None
+        if preferred_shard is not None:
+            for s in self._free_slots:
+                if s // self.bl == preferred_shard:
+                    self._free_slots.remove(s)
+                    self._free_slots.appendleft(s)
+                    break
         lane = next(self.lanes)
         gen = self.slot_alloc.allocate(lane)
         try:
@@ -234,20 +279,48 @@ class ServingEngine:
 
     def _admit(self) -> None:
         while self.queue and self._free_slots:
-            slot = self._host_alloc_slot()
+            # empty prompts degrade to the legacy BOS=1 convention
+            prompt = list(self.queue[0].prompt) or [1]
+            match = (self.prefix_cache.match(prompt)
+                     if self.prefix_cache is not None else None)
+            slot = self._host_alloc_slot(match.shard if match else None)
             if slot is None:
                 break
             req = self.queue.popleft()
             req.slot = slot
             self.active[slot] = req
-            # empty prompts degrade to the legacy BOS=1 convention
-            self.pending_tokens[slot] = list(req.prompt) or [1]
-            self._fed[slot] = 0
+            d, b = divmod(slot, self.bl)
+            shared_n = 0
+            if match is not None and d == match.shard:
+                shared_n = self._try_share(slot, match, len(prompt))
+            self.pending_tokens[slot] = prompt[shared_n:]
+            self._fed[slot] = shared_n
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert(slot, d, prompt)
+                self.prefix_cache.update_progress(slot, shared_n)
             if not self.legacy:
-                d, b = divmod(slot, self.bl)
                 self.budget = self.budget.at[d, b].set(req.max_new_tokens)
                 self.out_count = self.out_count.at[d, b].set(0)
             self.stats["admitted"] += 1
+
+    def _try_share(self, slot: int, match, prompt_len: int) -> int:
+        """Map the matched prefix onto the donor's pages (device-side,
+        one jitted call, off the per-token path).  Returns the number of
+        tokens now resident in the slot's KV (0 = no sharing)."""
+        n = min(match.n_tokens, prompt_len - 1, self.capacity - 1)
+        if n < self.cfg.page_size:
+            return 0
+        dst = np.zeros((self.dp, self.bl), bool)
+        src = np.zeros((self.dp, self.bl), bool)
+        dst[slot // self.bl, slot % self.bl] = True
+        src[match.slot // self.bl, match.slot % self.bl] = True
+        self.state, ok = self._share(self.state, jnp.asarray(dst),
+                                     jnp.asarray(src), jnp.int32(n))
+        if not bool(ok):       # lane dry for the COW page — admit unshared
+            return 0
+        self.stats["prefix_shared_tokens"] += n
+        self.stats["prefix_shared_reqs"] += 1
+        return n
 
     # -------------------------------------------------------------- step
     def step(self) -> None:
@@ -291,6 +364,10 @@ class ServingEngine:
         self.stats["steps"] += 1
         status = np.asarray(status)      # the step's ONE device->host sync
 
+        pages_now = int(status[STATUS_PAGES, :, 0].sum())
+        self.stats["pages_peak"] = max(self.stats["pages_peak"], pages_now)
+        self.stats["pages_sum"] += pages_now
+
         for slot, req in list(self.active.items()):
             d, b = divmod(slot, self.bl)
             if status[STATUS_EMITTED, d, b]:
@@ -302,7 +379,13 @@ class ServingEngine:
                 req.finished_at = time.time()
                 self.active.pop(slot)
                 self.pending_tokens.pop(slot, None)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.remove(slot)
                 self._host_free_slot(slot)
+            elif self.prefix_cache is not None:
+                # this step's feed is now in device KV: the slot can
+                # donate that much of its prompt to future admissions
+                self.prefix_cache.update_progress(slot, self._fed[slot])
 
     def _step_legacy(self) -> None:
         """Pre-refactor path: one token per step, host-side argmax."""
@@ -361,7 +444,15 @@ class ServingEngine:
             self.step()
 
     # ------------------------------------------------------------ metrics
+    def pages_in_use(self) -> int:
+        """Physical pages currently referenced (shared pages count once)."""
+        total = self.state.pool.shared.free_ids.shape[1] * self.dp
+        return total - int(hier_pool.total_free(self.state.pool))
+
     def page_occupancy(self) -> float:
-        total = self.state.pool_ids.shape[1] * self.dp
-        free = int(jnp.sum(self.state.pool_top))
-        return 1.0 - free / total
+        total = self.state.pool.shared.free_ids.shape[1] * self.dp
+        return self.pages_in_use() / total
+
+    def pages_mean(self) -> float:
+        """Mean pages-in-use per step (from the packed status row)."""
+        return self.stats["pages_sum"] / max(self.stats["steps"], 1)

@@ -1,0 +1,234 @@
+"""Prefix sharing: host-side radix trie + device-side share/COW step.
+
+Identical prompt prefixes from concurrent requests map onto the same
+physical KV pages (the dominant memory win under production request
+rates — a hot system prompt is stored once, not once per slot).
+
+Split of responsibilities (DESIGN.md §7):
+
+* :class:`PrefixCache` — a **host-side** radix trie over the prompts of
+  *live* slots, at page granularity (one trie level per ``page_size``
+  tokens).  It matches an incoming prompt against live prefixes and
+  answers with a donor slot and a token count — never a page id: page
+  ids stay device-resident (the host performs one sync per serving
+  step and never reads tables back).
+* :func:`share_prefix_step` — a **jitted device step**, called once per
+  admission-with-match (off the per-token hot path).  It copies the
+  donor's full-page table entries into the new slot's table and
+  registers the extra references (``hier_pool.addref`` on the pool's
+  int16 refcounts), and performs the copy-on-write for the one partial
+  page the new slot will append into: a fresh page from the slot's
+  private lane, the donor's page content copied across all paged
+  layers.  The per-token step then needs no sharing logic at all —
+  appends only ever write at positions >= seq_lens (never into a
+  shared page), and release decrements refcounts instead of freeing
+  (:func:`hier_pool.free_n`).
+
+Matches are shard-local by construction (page ids are private to a DP
+shard), so the trie is kept per shard and the engine prefers placing a
+request on its donor's shard.
+
+Only models whose whole decode state is paged can share (ring /
+recurrent layers would need their donor's state *at the match point*,
+which no longer exists); the engine auto-disables sharing otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hier_pool
+from ..core.block_pool import NULL
+
+
+# ------------------------------------------------------------- host trie
+
+@dataclasses.dataclass
+class Match:
+    slot: int        # donor slot (engine-global index)
+    shard: int       # DP shard both slots must live on
+    n_tokens: int    # shareable prefix length (tokens, host-verified)
+
+
+class _Node:
+    __slots__ = ("children", "slots")
+
+    def __init__(self):
+        self.children: Dict[tuple, _Node] = {}
+        self.slots: set = set()
+
+
+class PrefixCache:
+    """Radix trie of live prompt prefixes, one level per page.
+
+    ``completed[slot]`` tracks how many prompt tokens of a slot are
+    actually in device KV (fed through completed steps); matches never
+    exceed it, so a donor mid-prefill only donates what it has written.
+    Entries leave the trie when their request finishes — pages a sharer
+    still maps stay alive through their refcount, and the sharer itself
+    remains a donor for the common prefix.
+    """
+
+    def __init__(self, page_size: int):
+        self.psz = int(page_size)
+        self.roots: Dict[int, _Node] = {}
+        self.tokens: Dict[int, List[int]] = {}
+        self.shard_of: Dict[int, int] = {}
+        self.completed: Dict[int, int] = {}
+
+    # -- bookkeeping ----------------------------------------------------
+    def _pages(self, tokens: Sequence[int]):
+        for i in range(len(tokens) // self.psz):
+            yield tuple(tokens[i * self.psz:(i + 1) * self.psz])
+
+    def insert(self, slot: int, shard: int, tokens: Sequence[int]) -> None:
+        self.tokens[slot] = list(tokens)
+        self.shard_of[slot] = shard
+        self.completed[slot] = 0
+        node = self.roots.setdefault(shard, _Node())
+        for key in self._pages(tokens):
+            node = node.children.setdefault(key, _Node())
+            node.slots.add(slot)
+
+    def update_progress(self, slot: int, n_in_kv: int) -> None:
+        if slot in self.completed:
+            n = min(int(n_in_kv), len(self.tokens[slot]))
+            self.completed[slot] = max(self.completed[slot], n)
+
+    def remove(self, slot: int) -> None:
+        tokens = self.tokens.pop(slot, None)
+        if tokens is None:
+            return
+        shard = self.shard_of.pop(slot)
+        self.completed.pop(slot, None)
+        node = self.roots.get(shard)
+        path = []
+        for key in self._pages(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.slots.discard(slot)
+            path.append((node, key, child))
+            node = child
+        for parent, key, child in reversed(path):   # prune empty branches
+            if not child.slots and not child.children:
+                del parent.children[key]
+
+    def live_slots(self) -> int:
+        return len(self.tokens)
+
+    # -- matching -------------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> Optional[Match]:
+        """Longest shareable prefix of ``tokens`` among live prompts.
+
+        Walks the trie page-by-page, then extends into the donor's
+        partial page token-by-token.  The result is capped at the
+        donor's completed (in-KV) length and at ``len(tokens) - 1`` —
+        the final prompt token is always fed normally so the new slot
+        has a live position to sample its first output from.  Returns
+        None below one full page (a COW copy wouldn't pay for itself).
+        """
+        limit = len(tokens) - 1
+        if limit < self.psz:
+            return None
+        best: Optional[Match] = None
+        for shard, root in self.roots.items():
+            depth_of: Dict[int, int] = {}       # slot -> deepest page match
+            node = root
+            for i, key in enumerate(self._pages(tokens)):
+                node = node.children.get(key)
+                if node is None:
+                    break
+                for s in node.slots:
+                    depth_of[s] = i + 1
+            for s, d in depth_of.items():
+                ent = self.tokens[s]
+                n = d * self.psz
+                while n < len(tokens) and n < len(ent) and tokens[n] == ent[n]:
+                    n += 1
+                n = min(n, self.completed[s], limit)
+                if best is None or n > best.n_tokens:
+                    best = Match(slot=s, shard=shard, n_tokens=n)
+        if best is None or best.n_tokens < self.psz:
+            return None
+        return best
+
+
+# --------------------------------------------------------- device step
+
+def share_prefix_step(psz: int, state, dst_oh, src_oh, n_tokens):
+    """Map ``n_tokens`` of the src slot's prefix into the dst slot.
+
+    dst_oh / src_oh: bool[DP, Bl] one-hots on the SAME shard;
+    n_tokens: int32 scalar (>= 1, host-capped at the donor's completed
+    length and the page-table capacity).  Jitted once; called per
+    admission-with-match, off the per-token path.
+
+    Protocol (all-or-nothing, ``ok`` reports the outcome):
+      1. full pages [0, n_tokens // psz) of the donor's table are
+         copied into the dst row and each gains a reference;
+      2. if the prefix ends mid-page, a fresh page is allocated from
+         the SHARED pool (admission-time bulk, like prefill loading —
+         never from the slot's private lane, whose >= ell stock is the
+         §4.2 never-dry budget for the next chunk) and the donor's
+         partial page is copied into it across every paged layer
+         (copy-on-write at the first divergent append — the dst slot
+         appends into its private copy, never into the shared page);
+      3. seq_lens[dst] = n_tokens, so the engine feeds only the
+         remaining prompt suffix.
+    """
+    DP, Bl, maxp = state.page_tables.shape
+    n_tokens = jnp.asarray(n_tokens, jnp.int32)
+    fp = n_tokens // psz                          # full pages shared
+    partial = n_tokens % psz                      # tokens in the COW page
+    k = jnp.arange(maxp, dtype=jnp.int32)
+    src_row = jnp.sum(jnp.where(src_oh[..., None], state.page_tables, 0),
+                      axis=(0, 1))                                 # [maxp]
+    np_needed = (n_tokens + psz - 1) // psz
+    donor_ok = src_row[jnp.clip(np_needed - 1, 0, maxp - 1)] >= 0
+    shard_mask = jnp.any(dst_oh, axis=1)                           # [DP]
+
+    # COW page for the partial tail, from the SHARED pool (off the hot
+    # path; taking it from the slot's lane would eat into the lane's
+    # never-dry stock and silently deny the slot's next chunk)
+    want = dst_oh & (partial > 0) & donor_ok
+    pool, fresh = hier_pool.alloc_from_shared_dp(
+        state.pool, want.astype(jnp.int32), 1)
+    fresh = fresh[..., 0]                                          # [DP, Bl]
+    ok = donor_ok & ((partial == 0) | jnp.any(fresh >= 0))
+
+    # register the extra references on the donor's full pages
+    shared_ids = jnp.where((k < fp) & ok, src_row, NULL)
+    ids_dp = jnp.where(shard_mask[:, None], shared_ids[None, :], NULL)
+    pool = hier_pool.addref_dp(pool, ids_dp)
+
+    # dst table row: donor's full pages, then the fresh partial copy
+    row = jnp.where(k[None, None, :] < fp, src_row[None, None, :],
+                    state.page_tables)
+    row = jnp.where((k[None, None, :] == fp) & (partial > 0) &
+                    (fresh[..., None] >= 0), fresh[..., None], row)
+    page_tables = jnp.where(dst_oh[..., None] & ok, row, state.page_tables)
+
+    # copy the donor's partial page into the fresh page (every layer)
+    src_pid = jnp.maximum(src_row[jnp.clip(fp, 0, maxp - 1)], 0)
+    fresh_shard = jnp.max(jnp.where(want, fresh, NULL), axis=1)    # [DP]
+    any_pages = next(iter(state.kv_pages.values()))[0]
+    P = any_pages.shape[2]
+    tgt = jnp.where(shard_mask & ok & (partial > 0) & (fresh_shard >= 0),
+                    fresh_shard, P)                                # P => drop
+
+    def copy_pages(pages):                        # [S, DP, P, psz, KH, hd]
+        def per_shard(pg, t):
+            return pg.at[:, t].set(pg[:, src_pid], mode="drop")
+        return jax.vmap(per_shard, in_axes=(1, 0), out_axes=1)(pages, tgt)
+
+    kv_pages = {pos: (copy_pages(kp), copy_pages(vp))
+                for pos, (kp, vp) in state.kv_pages.items()}
+    seq_lens = jnp.where(dst_oh & ok, n_tokens, state.seq_lens)
+    state = state._replace(kv_pages=kv_pages, page_tables=page_tables,
+                           seq_lens=seq_lens, pool=pool)
+    return state, ok

@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ModuleNotFoundError:              # container image lacks hypothesis
@@ -270,6 +269,163 @@ class TestHierPool:
                 pool = reb(pool)
             assert int(hier_pool.total_free(pool)) + len(live) == total
             assert len(set(live)) == len(live)
+
+
+class TestHierPoolFreeN:
+    def test_free_n_returns_to_lane_with_spill(self):
+        pool = hier_pool.create(num_blocks=128, num_lanes=2, ell=2)  # cap 6
+        total0 = int(hier_pool.total_free(pool))
+        # grab 10 blocks for lane 0 via bulk (lane holds only 2)
+        pool, ids = hier_pool.alloc_from_shared(
+            pool, jnp.asarray([10, 0]), 10)
+        assert (np.asarray(ids)[0] >= 0).all()
+        top_before = int(pool.private_top[0])
+        shared_before = int(pool.shared.top)
+        pool = hier_pool.free_n(pool, ids)
+        # lane takes what fits (cap 6), the rest spills to shared
+        assert int(pool.private_top[0]) == 6
+        assert int(pool.shared.top) == shared_before + 10 - (6 - top_before)
+        assert int(hier_pool.total_free(pool)) == total0
+        assert int(hier_pool.num_live(pool)) == 0
+
+    def test_free_n_shared_page_released_once(self):
+        """Two lanes releasing a shared block in ONE call: refcount 2
+        drops to 0 and the block returns to exactly one stack."""
+        pool = hier_pool.create(num_blocks=64, num_lanes=2, ell=2)
+        total0 = int(hier_pool.total_free(pool))
+        pool, got = hier_pool.alloc(pool, jnp.asarray([True, False]))
+        b = int(got[0])
+        pool = hier_pool.addref(pool, got)             # second reference
+        assert int(hier_pool.total_free(pool)) == total0 - 1
+        pool = hier_pool.free_n(pool, jnp.asarray([[b], [b]], jnp.int32))
+        assert int(hier_pool.total_free(pool)) == total0
+        assert int(hier_pool.num_live(pool)) == 0
+        # and a partial release keeps the block off every stack
+        pool, got = hier_pool.alloc(pool, jnp.asarray([True, False]))
+        b = int(got[0])
+        pool = hier_pool.addref(pool, got)
+        pool = hier_pool.free_n(pool, jnp.asarray([[b], [NULL]], jnp.int32))
+        assert int(hier_pool.total_free(pool)) == total0 - 1
+        assert int(pool.shared.refcount[b]) == 1
+        pool = hier_pool.free_n(pool, jnp.asarray([[b], [NULL]], jnp.int32))
+        assert int(hier_pool.total_free(pool)) == total0
+
+    def test_create_vectorized_matches_sequential_carve(self):
+        """The one-shot warm-up hands lane i exactly the batch the old
+        per-lane alloc_batch loop would have."""
+        pool = hier_pool.create(num_blocks=32, num_lanes=3, ell=4)
+        ref = block_pool.create(32)
+        for lane in range(3):
+            ref, batch = block_pool.alloc_batch(ref, 4)
+            assert np.asarray(pool.private_ids)[lane, :4].tolist() == \
+                np.asarray(batch).tolist()
+        assert int(pool.shared.top) == int(ref.top)
+
+    def test_dp_wrappers_shard_local(self):
+        pool = hier_pool.create_dp(2, 64, 4, 2)
+        pool, ids = hier_pool.alloc_n_dp(pool, jnp.full((2, 4), 2), 2)
+        got = np.asarray(ids)
+        assert (got >= 0).all()
+        # shards carve identical (shard-local) id spaces independently
+        assert np.array_equal(got[0], got[1])
+        pool = hier_pool.free_n_dp(pool, ids)
+        pool = hier_pool.rebalance_dp(pool)
+        assert int(hier_pool.total_free(pool)) == 128
+        assert np.asarray(pool.private_top).min() >= 2
+
+
+class TestBatchHistoriesLinearize:
+    """Satellite: adversarial scheduler runs over the device pool's
+    batch ops, checked with the expanded-history linearizability test;
+    a crash between the two rebalance phases must conserve blocks."""
+
+    def _storm(self, seed, crash_rebalancer_at=None, crash_lane=None):
+        import random
+        from repro.core import (Scheduler, SimContext,
+                                check_batch_alloc_history)
+        L, ell, kmax = 3, 4, 4
+        st = {"pool": hier_pool.create(num_blocks=96, num_lanes=L, ell=ell),
+              "held": {lane: [] for lane in range(L)}}
+        total0 = int(hier_pool.total_free(st["pool"]))
+        ctx = SimContext(L + 1, seed=seed)
+        sched = Scheduler(seed=seed)
+
+        def lane_program(lane):
+            # intervals use the scheduler's step clock and straddle a
+            # yield, so ops genuinely overlap across lanes; the pool op
+            # itself is one atomic point inside the interval
+            rng = random.Random(seed * 31 + lane)
+            held = st["held"][lane]
+            for _ in range(25):
+                yield                                     # scheduling point
+                if not held or rng.random() < 0.55:
+                    want = rng.randint(1, kmax)
+                    counts = np.zeros(L, np.int32)
+                    counts[lane] = want
+                    rec = ctx.begin_op(lane, "alloc_n", arg=want)
+                    rec.invoke_step = sched.steps
+                    yield
+                    pool, ids = hier_pool.alloc_n(
+                        st["pool"], jnp.asarray(counts), kmax)
+                    st["pool"] = pool
+                    got = [int(i) for i in np.asarray(ids)[lane] if i >= 0]
+                    held.extend(got)
+                    yield
+                    ctx.end_op(rec, result=got)
+                    rec.response_step = sched.steps
+                else:
+                    k = rng.randint(1, min(len(held), kmax))
+                    back = held[-k:]                # peek — pop only at the
+                    ids = np.full((L, kmax), -1, np.int32)   # linearization
+                    ids[lane, :k] = back            # point below, atomically
+                    rec = ctx.begin_op(lane, "free_n", arg=back)
+                    rec.invoke_step = sched.steps
+                    yield
+                    st["pool"] = hier_pool.free_n(st["pool"],
+                                                  jnp.asarray(ids))
+                    del held[-k:]                   # atomic with the op: a
+                    yield                           # crash on either yield
+                    ctx.end_op(rec)                 # leaves ledger == pool
+                    rec.response_step = sched.steps
+
+        def rebalancer(pid):
+            for _ in range(40):
+                yield
+                st["pool"] = hier_pool.rebalance_drain(st["pool"])
+                yield                      # <-- crash window: torn rebalance
+                st["pool"] = hier_pool.rebalance_refill(st["pool"])
+
+        for lane in range(L):
+            sched.add(lane, lane_program(lane))
+        sched.add(L, rebalancer(L))
+        crash_at = {}
+        if crash_rebalancer_at is not None:
+            crash_at[L] = crash_rebalancer_at
+        if crash_lane is not None:
+            crash_at[crash_lane] = crash_rebalancer_at or 40
+        sched.run("bursty", crash_at=crash_at)
+
+        errs = check_batch_alloc_history(ctx.history)
+        assert errs == [], errs
+        live = sum(len(h) for h in st["held"].values())
+        assert int(hier_pool.total_free(st["pool"])) + live == total0, (
+            "blocks lost or duplicated (crashed holders counted live)")
+        assert int(hier_pool.num_live(st["pool"])) == live
+
+    def test_adversarial_batch_histories(self):
+        for seed in (0, 1, 2):
+            self._storm(seed)
+
+    def test_crash_mid_rebalance_conserves(self):
+        """The rebalancer dies between drain and refill: the drained
+        batch sits in the shared pool, nothing is lost, lanes keep
+        operating on their private stacks."""
+        self._storm(seed=5, crash_rebalancer_at=37)
+
+    def test_crash_lane_holding_blocks_conserves(self):
+        """A user lane crashes while holding live blocks: they stay
+        allocated (refcount 1) and conservation accounts for them."""
+        self._storm(seed=7, crash_rebalancer_at=None, crash_lane=1)
 
 
 class TestPagedKVCache:

@@ -22,7 +22,6 @@ from repro.core import (
     SimContext, WaitFreeAllocator, Scheduler, closed_loop,
     check_alloc_history, PoolExhausted,
 )
-from repro.core.sim import NULL
 
 POLICIES = ("random", "bursty", "round_robin", "stall_one")
 

@@ -1,7 +1,6 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 try:

@@ -1,0 +1,292 @@
+"""Prefix sharing: refcounted pages, COW partial pages, engine behavior.
+
+Covers the DESIGN.md §7 protocol at two levels:
+
+* core — ``kv_cache.share_prefix`` (table mapping + addref + COW copy)
+  and the pool's refcount conservation under mixed-order release;
+* serving — the engine's trie-driven sharing: exact page accounting for
+  two requests with a common prefix, token-identical outputs vs the
+  unshared path, and the >= 2x pages-in-use reduction on a hot-prefix
+  workload (the bench's pool-churn scenario in miniature).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import models
+from repro.configs import get_config, smoke_config
+from repro.core import block_pool, hier_pool, kv_cache
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.prefix_cache import PrefixCache
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = smoke_config(get_config("olmo-1b"))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _pool_invariants(pool, total_pages):
+    """free + live == total, and every stacked block has refcount 0."""
+    free = int(hier_pool.total_free(pool))
+    live = int(hier_pool.num_live(pool))
+    assert free + live == total_pages, "pages lost or duplicated"
+    return free, live
+
+
+# --------------------------------------------------------------- core level
+
+class TestKVCacheSharePrefix:
+    def _mk(self):
+        return kv_cache.create(num_pages=32, page_size=4, kv_heads=2,
+                               head_dim=8, max_seqs=3, max_pages_per_seq=8,
+                               dtype=jnp.float32)
+
+    def _fill(self, cache, seq_mask, toks):
+        """Append toks[t] (distinct per position) to masked seqs."""
+        for t in range(toks):
+            k = jnp.full((3, 2, 8), float(t + 1))
+            cache, ok = kv_cache.append(cache, k, k, jnp.asarray(seq_mask))
+            assert bool(jnp.all(jnp.asarray(ok)[np.asarray(seq_mask)]))
+        return cache
+
+    def test_share_maps_tables_and_refcounts(self):
+        cache = self._mk()
+        cache = self._fill(cache, [True, False, False], 10)   # 3 pages (psz 4)
+        used0 = 32 - int(cache.pool.top)
+        assert used0 == 3
+        cache, ok = kv_cache.share_prefix(cache, dst=1, src=0,
+                                          n_tokens=jnp.int32(10))
+        assert bool(ok)
+        # 2 full pages shared (same physical ids), 1 COW copy of page 2
+        t0 = np.asarray(cache.page_tables[0])
+        t1 = np.asarray(cache.page_tables[1])
+        assert t1[0] == t0[0] and t1[1] == t0[1]
+        assert t1[2] != t0[2] and t1[2] >= 0, "partial page must be COW'd"
+        assert int(cache.seq_lens[1]) == 10
+        rc = np.asarray(cache.pool.refcount)
+        assert rc[t0[0]] == 2 and rc[t0[1]] == 2       # shared
+        assert rc[t0[2]] == 1 and rc[t1[2]] == 1       # private
+        assert 32 - int(cache.pool.top) == 4           # 3 + 1 COW page
+        # COW copy holds the donor's partial-page content
+        np.testing.assert_array_equal(
+            np.asarray(cache.k_pages[t1[2]]), np.asarray(cache.k_pages[t0[2]]))
+
+    def test_mixed_order_release_conserves(self):
+        for first in (0, 1):                     # donor-first and sharer-first
+            cache = self._mk()
+            cache = self._fill(cache, [True, False, False], 10)
+            cache, ok = kv_cache.share_prefix(cache, dst=1, src=0,
+                                              n_tokens=jnp.int32(10))
+            assert bool(ok)
+            mask = np.zeros(3, bool)
+            mask[first] = True
+            cache = kv_cache.release(cache, jnp.asarray(mask))
+            rc = np.asarray(cache.pool.refcount)
+            # shared pages still live through the survivor's references
+            assert (rc == 1).sum() == 3 and (rc >= 2).sum() == 0
+            assert 32 - int(cache.pool.top) == 3
+            mask = np.zeros(3, bool)
+            mask[1 - first] = True
+            cache = kv_cache.release(cache, jnp.asarray(mask))
+            assert int(cache.pool.top) == 32, "pages leaked"
+            assert int(block_pool.num_live(cache.pool)) == 0
+
+    def test_share_denied_changes_nothing(self):
+        cache = self._mk()
+        cache = self._fill(cache, [True, False, False], 10)
+        drained = cache._replace(pool=cache.pool._replace(top=jnp.int32(0)))
+        shared, ok = kv_cache.share_prefix(drained, dst=1, src=0,
+                                           n_tokens=jnp.int32(10))
+        assert not bool(ok)                       # COW page unavailable
+        assert int(shared.seq_lens[1]) == 0
+        assert np.all(np.asarray(shared.page_tables[1]) == -1)
+        assert np.array_equal(np.asarray(shared.pool.refcount),
+                              np.asarray(drained.pool.refcount))
+
+
+# ------------------------------------------------------------ host trie
+
+class TestPrefixCacheTrie:
+    def test_match_page_granular_with_partial_extension(self):
+        pc = PrefixCache(page_size=4)
+        pc.insert(0, 0, list(range(100, 118)))            # 18 tokens
+        pc.update_progress(0, 18)
+        q = list(range(100, 114)) + [7, 7, 7, 7]          # lcp = 14
+        m = pc.match(q)
+        assert m is not None and m.slot == 0 and m.shard == 0
+        assert m.n_tokens == 14                           # 3 pages + 2 extra
+        # capped by the donor's completed length
+        pc2 = PrefixCache(page_size=4)
+        pc2.insert(0, 0, list(range(100, 118)))
+        pc2.update_progress(0, 9)
+        assert pc2.match(q).n_tokens == 9
+        # never the whole query (last token must be fed normally)
+        assert pc.match(list(range(100, 114))).n_tokens == 13
+
+    def test_remove_prunes_and_survivor_still_donates(self):
+        pc = PrefixCache(page_size=4)
+        pc.insert(0, 0, [1, 2, 3, 4, 5, 6, 7, 8, 9])
+        pc.update_progress(0, 9)
+        pc.insert(1, 0, [1, 2, 3, 4, 5, 6, 7, 8, 42])
+        pc.update_progress(1, 9)
+        pc.remove(0)
+        m = pc.match([1, 2, 3, 4, 5, 6, 7, 8, 77, 78])
+        assert m is not None and m.slot == 1 and m.n_tokens == 8
+        pc.remove(1)
+        assert pc.match([1, 2, 3, 4, 5, 6, 7, 8, 77]) is None
+        assert pc.live_slots() == 0
+
+    def test_no_cross_shard_match(self):
+        pc = PrefixCache(page_size=4)
+        pc.insert(0, 1, [1, 2, 3, 4, 5, 6, 7, 8])
+        pc.update_progress(0, 8)
+        m = pc.match([1, 2, 3, 4, 5, 6, 7, 99])
+        assert m.shard == 1                      # engine must place there
+
+
+# ------------------------------------------------------------ engine level
+
+class TestEnginePrefixSharing:
+    def test_exact_page_accounting_and_mixed_order_release(self, engine_setup):
+        """Two requests with a common prefix occupy shared + distinct
+        pages — exact counts, then refcount conservation as they finish
+        in donor-first order."""
+        cfg, params = engine_setup                       # psz = 8
+        psz = cfg.page_size
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=16)
+        total = eng.state.pool.shared.free_ids.shape[1]
+        pa = list(range(2, 22))                          # 20 tokens
+        ra = Request(0, prompt=list(pa), max_new_tokens=3)
+        eng.submit(ra)
+        eng.step(); eng.step()                           # prefill 16 + 4
+        assert eng.pages_in_use() == 3                   # ceil(20/8)
+        _pool_invariants(eng.state.pool, total)
+
+        pb = pa[:18] + [200, 201, 202, 203, 204, 205]    # lcp 18 = 2p + 2
+        rb = Request(1, prompt=list(pb), max_new_tokens=3)
+        eng.submit(rb)
+        eng.step()    # admits B: 2 shared pages + 1 COW; feeds B's tail
+        assert eng.stats["prefix_shared_reqs"] == 1
+        assert eng.stats["prefix_shared_tokens"] == 18
+        # A: 3 pages; B: 2 shared (not recounted) + 1 COW = 4 total
+        assert eng.pages_in_use() == 4
+        rc = np.asarray(eng.state.pool.shared.refcount)
+        assert (rc == 2).sum() == 2 and (rc == 1).sum() == 2
+        _pool_invariants(eng.state.pool, total)
+
+        eng.run(max_steps=50)                            # A finishes first
+        assert ra.done and rb.done
+        assert eng.pages_in_use() == 0 and eng.page_occupancy() == 0.0
+        assert int(hier_pool.num_live(eng.state.pool)) == 0
+        _pool_invariants(eng.state.pool, total)
+
+    def test_cow_divergence_keeps_donor_intact(self, engine_setup):
+        """The sharer's divergent tokens go to its private COW page; the
+        donor's outputs are bit-identical to a solo run."""
+        cfg, params = engine_setup
+        pa = list(range(3, 23))                          # 20 tokens
+
+        def run_solo():
+            eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                                chunk_size=16)
+            r = Request(0, prompt=list(pa), max_new_tokens=6)
+            eng.submit(r)
+            eng.run(max_steps=60)
+            return r.out_tokens
+
+        solo = run_solo()
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=16)
+        ra = Request(0, prompt=list(pa), max_new_tokens=6)
+        eng.submit(ra)
+        eng.step(); eng.step()
+        pb = pa[:18] + [230, 231, 232, 233]
+        rb = Request(1, prompt=list(pb), max_new_tokens=6)
+        eng.submit(rb)
+        eng.run(max_steps=60)
+        assert ra.done and rb.done
+        assert eng.stats["prefix_shared_reqs"] == 1
+        assert ra.out_tokens == solo, "sharer's appends corrupted the donor"
+        assert rb.out_tokens != solo or pb == pa         # truly divergent
+        assert eng.page_occupancy() == 0.0
+
+    def test_hot_prefix_halves_pages_with_identical_tokens(self, engine_setup):
+        """90%-shared-prefix workload: >= 2x fewer pages-in-use (mean
+        over steps), token-identical outputs vs the unshared path."""
+        cfg, params = engine_setup
+        rng = np.random.RandomState(0)
+        hot = list(rng.randint(1, 255, 68))              # 8.5 pages of 8
+        prompts = [hot + list(rng.randint(1, 255, 6)) for _ in range(12)]
+
+        def run(share):
+            eng = ServingEngine(cfg, params, dp=1, b_local=6, max_len=96,
+                                chunk_size=16, prefix_sharing=share)
+            reqs = [Request(0, prompt=list(prompts[0]), max_new_tokens=8)]
+            eng.submit(reqs[0])
+            for _ in range(5):                           # donor prefills
+                eng.step()
+            for i, p in enumerate(prompts[1:], 1):
+                r = Request(i, prompt=list(p), max_new_tokens=8)
+                reqs.append(r)
+                eng.submit(r)
+            eng.run(max_steps=500)
+            assert all(r.done for r in reqs)
+            assert eng.page_occupancy() == 0.0
+            return [r.out_tokens for r in reqs], eng
+
+        out_u, eng_u = run(False)
+        out_s, eng_s = run(True)
+        assert out_s == out_u, "prefix sharing changed emitted tokens"
+        assert eng_s.stats["prefix_shared_reqs"] >= 10
+        ratio = eng_u.pages_mean() / max(eng_s.pages_mean(), 1e-9)
+        assert ratio >= 2.0, (
+            f"pages-in-use only improved {ratio:.2f}x "
+            f"({eng_u.pages_mean():.1f} -> {eng_s.pages_mean():.1f})")
+
+    def test_long_prompt_suffix_after_share_is_never_denied(self, engine_setup):
+        """Regression (review finding): the COW page must come from the
+        SHARED pool, not the slot's lane — taking it from the lane left
+        the first post-share chunk (which may need a full ell pages)
+        short, and a denied chunk silently dropped prompt tokens while
+        the host advanced.  Repro: short shared prefix, long remaining
+        prompt (first chunk needs 2 pages with ell=2)."""
+        cfg, params = engine_setup                       # psz=8
+        rng = np.random.RandomState(3)
+        hot = list(rng.randint(1, 255, 20))              # 2.5 pages shared
+        prompts = [hot + list(rng.randint(1, 255, 20)) for _ in range(4)]
+
+        def run(share):
+            eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=96,
+                                chunk_size=16, prefix_sharing=share)
+            reqs = [Request(0, prompt=list(prompts[0]), max_new_tokens=6)]
+            eng.submit(reqs[0])
+            for _ in range(4):
+                eng.step()                               # donor prefills
+            for i, p in enumerate(prompts[1:], 1):
+                r = Request(i, prompt=list(p), max_new_tokens=6)
+                reqs.append(r)
+                eng.submit(r)
+            eng.run(max_steps=200)
+            assert all(r.done for r in reqs)
+            return [r.out_tokens for r in reqs], eng
+
+        out_u, _ = run(False)
+        out_s, eng_s = run(True)
+        assert eng_s.stats["prefix_shared_reqs"] >= 3
+        assert out_s == out_u, (
+            "post-share chunk was denied pages (lane raided for COW)")
+        assert eng_s.page_occupancy() == 0.0
+
+    def test_sharing_disabled_for_non_paged_archs(self):
+        """Ring / recurrent layers cannot share prefixes (their state at
+        the match point no longer exists) — the engine must auto-disable
+        rather than corrupt outputs."""
+        cfg = smoke_config(get_config("recurrentgemma-2b"))
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64)
+        assert eng.prefix_cache is None

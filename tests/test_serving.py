@@ -92,7 +92,42 @@ def test_decode_step_chunk_matches_single_token(arch):
 
     np.testing.assert_allclose(outs1, outs2, atol=1e-5, rtol=1e-5)
     assert np.array_equal(np.asarray(s1.seq_lens), np.asarray(s2.seq_lens))
-    assert np.array_equal(np.asarray(s1.pool_top), np.asarray(s2.pool_top))
+    assert np.array_equal(np.asarray(s1.pool.private_top),
+                          np.asarray(s2.pool.private_top))
+    assert np.array_equal(np.asarray(s1.pool.shared.top),
+                          np.asarray(s2.pool.shared.top))
+
+
+def test_decode_step_loop_survives_lane_exhaustion(engine_setup):
+    """Regression (review finding): raw decode_step loops have no
+    per-step rebalance, so once a slot's lane (ell warm pages) is spent
+    the allocator must fall back to the shared pool — not write -1 into
+    the page table and silently corrupt KV.  30 tokens = 4 pages at
+    psz=8, twice the ell=2 lane stock."""
+    cfg, params = engine_setup
+    from repro.core import hier_pool
+    from repro.models.decode_init import empty_decode_state
+    rng = np.random.RandomState(5)
+    toks = rng.randint(1, 255, (1, 2, 30)).astype(np.int32)
+
+    s1 = empty_decode_state(cfg, 1, 2, 64)          # never rebalanced
+    s2 = empty_decode_state(cfg, 1, 2, 64)          # rebalanced per step
+    outs1, outs2 = [], []
+    for t in range(30):
+        lg, s1 = models.decode_step(cfg, params, jnp.asarray(toks[:, :, t]),
+                                    s1)
+        outs1.append(np.asarray(lg))
+        lg, s2 = models.decode_step(cfg, params, jnp.asarray(toks[:, :, t]),
+                                    s2)
+        s2 = s2._replace(pool=hier_pool.rebalance_dp(s2.pool))
+        outs2.append(np.asarray(lg))
+    np.testing.assert_allclose(np.stack(outs1), np.stack(outs2),
+                               atol=1e-5, rtol=1e-5)
+    # all written pages mapped, none through a clamped NULL entry
+    assert np.all(np.asarray(s1.page_tables)[:, :, :4] >= 0)
+    total = s1.pool.shared.free_ids.shape[1]
+    free = int(hier_pool.total_free(s1.pool))
+    assert free + int(hier_pool.num_live(s1.pool)) == total
 
 
 def test_decode_step_chunk_pool_denial_appends_nothing(engine_setup):
@@ -102,7 +137,12 @@ def test_decode_step_chunk_pool_denial_appends_nothing(engine_setup):
     cfg, params = engine_setup
     from repro.models.decode_init import empty_decode_state
     state = empty_decode_state(cfg, 1, 1, 64)
-    state = state._replace(pool_top=jnp.zeros_like(state.pool_top))
+    # drain the slot lanes AND the shared pool: a chunk must be denied
+    pool = state.pool._replace(
+        private_top=jnp.zeros_like(state.pool.private_top),
+        shared=state.pool.shared._replace(
+            top=jnp.zeros_like(state.pool.shared.top)))
+    state = state._replace(pool=pool)
     toks = jnp.ones((1, 1, 8), jnp.int32)
     _, state, ok = models.decode_step_chunk(
         cfg, params, toks, state, jnp.full((1, 1), 8, jnp.int32))
@@ -194,7 +234,7 @@ def test_steady_state_decode_single_sync(engine_setup):
         engine_mod.np = orig
     assert eng.stats["steps"] == steps0 + 3
     assert len(syncs) == 3, f"expected 1 sync/step, saw {syncs}"
-    assert all(s == (3, 1, 2) for s in syncs), "sync is the packed status"
+    assert all(s == (4, 1, 2) for s in syncs), "sync is the packed status"
 
 
 def test_eos_stops_generation(engine_setup):

@@ -1,14 +1,12 @@
 """Substrate tests: data, checkpoint, fault tolerance, elastic, compression."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.checkpoint.ckpt import Checkpointer
 from repro.data.pipeline import DataConfig, Prefetcher, TokenStream
 from repro.parallel import compress
-from repro.parallel.partition import RULE_SETS, param_specs
+from repro.parallel.partition import param_specs
 from repro.runtime.elastic import plan_for
 from repro.runtime.fault import FailureInjector, FaultTolerantLoop
 
