@@ -1,14 +1,19 @@
 """End-to-end serving driver: batched requests over paged KV cache.
 
 The engine admits requests through the paper's wait-free allocator
-(sequence slots = fixed-size blocks), streams prompts through chunked
-prefill (``--chunk`` tokens per step, each chunk's pages allocated in
-one O(1)-per-request ``alloc_n`` batch), and decodes fully on device —
-greedy sampling, done-detection, and page release all live inside the
-jitted step, so the host syncs once per step on a packed status array.
+(sequence slots = fixed-size blocks) behind a traffic-aware admission
+scheduler (priority/SLO classes, per-shard page budgets, preemption,
+pinned prefix retention — DESIGN.md §8), streams prompts through
+chunked prefill (``--chunk`` tokens per step, each chunk's pages
+allocated in one O(1)-per-request ``alloc_n`` batch), and decodes fully
+on device — per-request temperature/top-k sampling, done-detection, and
+page release all live inside the jitted step, so the host syncs once
+per step on a packed status array.
 
   PYTHONPATH=src python examples/serve_paged.py [--arch recurrentgemma-2b]
   PYTHONPATH=src python examples/serve_paged.py --legacy   # pre-refactor path
+  PYTHONPATH=src python examples/serve_paged.py \
+      --hot-prefix 24 --pin-pages 12 --bursts 3 --interactive-frac 0.25
 """
 
 import argparse
@@ -20,6 +25,7 @@ import numpy as np
 from repro import models
 from repro.configs import get_config, smoke_config
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.sched import SchedConfig
 
 
 def main():
@@ -36,52 +42,83 @@ def main():
     ap.add_argument("--hot-prefix", type=int, default=0, metavar="N",
                     help="prepend a common N-token prefix to every prompt "
                          "(exercises refcounted prefix sharing, DESIGN §7)")
+    ap.add_argument("--pin-pages", type=int, default=0,
+                    help="pinned prefix-cache budget per shard in pages "
+                         "(0 = off; keeps the hot prefix alive across "
+                         "request lifetimes, DESIGN §8)")
+    ap.add_argument("--bursts", type=int, default=1,
+                    help="submit the requests in N bursts, draining the "
+                         "engine between bursts (shows pinned prefixes "
+                         "surviving idle gaps)")
+    ap.add_argument("--interactive-frac", type=float, default=0.0,
+                    help="fraction of requests in the interactive SLO "
+                         "class (may preempt standard/batch work)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k cutoff when sampling (0 = full vocab)")
     args = ap.parse_args()
 
     cfg = smoke_config(get_config(args.arch))
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params, dp=2, b_local=4, max_len=96,
                            scheduler_lanes=4, chunk_size=args.chunk,
-                           legacy=args.legacy)
+                           legacy=args.legacy,
+                           sched=SchedConfig(pin_pages=args.pin_pages))
 
     rng = np.random.RandomState(0)
     hot = list(rng.randint(1, cfg.vocab - 1, args.hot_prefix))
     reqs = []
     for rid in range(args.requests):
         plen = args.prompt_len or rng.randint(4, 24)
-        r = Request(rid,
-                    prompt=hot + list(rng.randint(1, cfg.vocab - 1, plen)),
-                    max_new_tokens=args.max_new)
-        reqs.append(r)
-        engine.submit(r)
+        slo = ("interactive"
+               if rng.random_sample() < args.interactive_frac
+               else "standard")
+        reqs.append(Request(
+            rid, prompt=hot + list(rng.randint(1, cfg.vocab - 1, plen)),
+            max_new_tokens=args.max_new, slo=slo,
+            temperature=args.temperature, top_k=args.top_k, seed=rid))
 
     t0 = time.time()
     peak_occ = 0.0
-    while engine.queue or engine.active:
-        engine.step()
-        peak_occ = max(peak_occ, engine.page_occupancy())
+    per_burst = -(-len(reqs) // max(args.bursts, 1))
+    for i in range(0, len(reqs), per_burst):
+        for r in reqs[i:i + per_burst]:
+            engine.submit(r)
+        while not engine.idle():
+            engine.step()
+            peak_occ = max(peak_occ, engine.page_occupancy())
     dt = time.time() - t0
 
-    lat = [r.finished_at - r.submitted_at for r in reqs]
     s = engine.stats
+    lat = engine.latency_quantiles()
     total = s["tokens_out"] + s["prompt_tokens"]
     print(f"arch={cfg.name} path={'legacy' if args.legacy else 'chunked'} "
-          f"chunk={args.chunk}")
+          f"chunk={args.chunk} bursts={args.bursts}")
     print(f"requests={s['admitted']} gen_tokens={s['tokens_out']} "
           f"prompt_tokens={s['prompt_tokens']} steps={s['steps']} "
           f"wall={dt:.1f}s throughput={total/dt:.1f} tok/s "
           f"({s['tokens_out']/dt:.1f} gen tok/s)")
-    print(f"p50 latency={sorted(lat)[len(lat)//2]*1e3:.0f}ms "
-          f"p99={sorted(lat)[-1]*1e3:.0f}ms")
+    print(f"p50 latency={lat['p50_s']*1e3:.0f}ms "
+          f"p99={lat['p99_s']*1e3:.0f}ms "
+          f"first-token p50={lat['first_token_p50_s']*1e3:.0f}ms")
     print(f"peak page occupancy={peak_occ:.2%}  "
-          f"after drain={engine.page_occupancy():.2%} (0% = no leaks)")
+          f"after drain={engine.page_occupancy():.2%} "
+          f"({engine.pinned_pages()} pages cache-pinned)")
     if engine.prefix_cache is not None:
         print(f"prefix sharing: {s['prefix_shared_reqs']} requests reused "
               f"{s['prefix_shared_tokens']} prompt tokens from live pages "
               f"(pages-in-use mean={engine.pages_mean():.1f} "
               f"peak={s['pages_peak']})")
+    ss = engine.scheduler.stats
+    print(f"scheduler: preemptions={s['preemptions']} "
+          f"deferred={ss['deferred']} rejected={ss['rejected']} "
+          f"pins created={s['pins_created']} hits={s['pin_hit_reqs']} "
+          f"({s['pin_hit_tokens']} tokens) evicted={ss['pins_evicted']}")
     print(f"host admission worst-case steps={s['alloc_steps_max']} "
           f"(paper Result 1: O(1))")
+    engine.flush_pins()
+    assert engine.page_occupancy() == 0.0, "pages leaked after drain+flush"
     assert all(r.done for r in reqs)
 
 

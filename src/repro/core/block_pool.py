@@ -55,6 +55,20 @@ def num_live(pool: BlockPool) -> jax.Array:
     return jnp.sum((pool.refcount > 0).astype(jnp.int32))
 
 
+def refcounts_of(pool: BlockPool, ids: jax.Array) -> jax.Array:
+    """Gather per-block refcounts for valid ids (NULL -> 0).
+
+    Diagnostic/low-water helper for cache-owner accounting: a prefix
+    cache that pins pages holds one reference per pinned page, so
+    ``refcounts_of(pool, pin_row)`` tells a test (or an eviction
+    policy auditing its ledger) exactly how many owners each pinned
+    page still has.  O(R) gather, independent of m.
+    """
+    safe = jnp.where(ids >= 0, ids, 0)
+    return jnp.where(ids >= 0, pool.refcount[safe],
+                     jnp.int16(0)).astype(jnp.int16)
+
+
 def _set_ref(refcount: jax.Array, ids: jax.Array, value) -> jax.Array:
     """refcount[id] = value for valid ids (NULL / out-of-range dropped)."""
     m = refcount.shape[0]

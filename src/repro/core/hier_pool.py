@@ -196,6 +196,26 @@ def free(pool: HierPool, ids: jax.Array) -> HierPool:
     return free_n(pool, ids[:, None])
 
 
+def free_shared(pool: HierPool, ids: jax.Array) -> HierPool:
+    """Release lane-less references straight to the SHARED stack.
+
+    ids: int32[K] (NULL = no-op).  The cache-owner release path (pin
+    eviction, DESIGN.md §8): pinned pages belong to no serving lane, so
+    a dropped reference whose count reaches zero returns to the shared
+    free stack — the next rebalance redistributes it to whichever lane
+    runs low.  Same refcount semantics as :func:`free_n` (duplicates in
+    one call release once, still-referenced blocks stay off the stack).
+    """
+    return pool._replace(shared=block_pool.free(pool.shared, ids))
+
+
+def free_per_shard(pool: HierPool) -> jax.Array:
+    """Free blocks available to each shard (shared stack + lane stocks)
+    — the scheduler's low-water query.  On a DP-sharded pool the result
+    is int32[DP]; on a single-shard pool it is a scalar."""
+    return pool.shared.top + jnp.sum(pool.private_top, axis=-1)
+
+
 def rebalance_drain(pool: HierPool) -> HierPool:
     """Phase 1 of the deamortized shared-pool traffic: every lane above
     ``2*ell`` pushes its top ``ell`` blocks to the shared pool in one
@@ -309,6 +329,12 @@ def addref_dp(pool: HierPool, ids: jax.Array) -> HierPool:
 def free_n_dp(pool: HierPool, ids: jax.Array) -> HierPool:
     """ids int32[DP, L, K] — per-lane batched release per shard."""
     return jax.vmap(free_n, in_axes=(DP_AXES, 0))(pool, ids)
+
+
+def free_shared_dp(pool: HierPool, ids: jax.Array) -> HierPool:
+    """ids int32[DP, K] — shard-local cache-owner release (pin
+    eviction); zero-refcount blocks land on the shard's shared stack."""
+    return jax.vmap(free_shared, in_axes=(DP_AXES, 0))(pool, ids)
 
 
 def rebalance_dp(pool: HierPool) -> HierPool:

@@ -16,8 +16,17 @@ Three checkers:
    ``alloc_n`` returning K blocks is K allocations sharing one
    invocation/response interval, a ``free_n`` is the symmetric batch of
    frees (:func:`expand_batch_history` performs the expansion).
+   ``preempt`` ops (the serving scheduler force-releasing a victim
+   lane's blocks, arg = victim pid, result = released ids) expand
+   exactly like ``free_n``.
 
-3. :class:`WGStackChecker` — a small Wing & Gong style exhaustive
+3. :func:`check_preemption_history` — batch safety plus preemption
+   *completeness*: when a ``preempt`` of victim v responds, every block
+   granted to v and not yet freed must be in the preempt's released set
+   — a preempted lane may not retain pages (the scheduler's page-budget
+   accounting depends on it).
+
+4. :class:`WGStackChecker` — a small Wing & Gong style exhaustive
    linearizability checker for stack histories (used on the P-SIM shared
    stack with small histories).
 """
@@ -90,6 +99,10 @@ def expand_batch_history(history: Sequence[OpRecord]) -> List[OpRecord]:
       ``allocate`` per id;
     * ``free_n`` (arg = iterable of released block ids) becomes one
       ``free`` per id;
+    * ``preempt`` (arg = victim pid, result = iterable of released
+      block ids) becomes one ``free`` per released id — a preemption IS
+      a batch free performed on the victim's behalf, so the interval
+      reasoning is identical;
     * ``allocate`` / ``free`` pass through unchanged.
 
     Every expanded op inherits the batch op's invocation/response
@@ -117,6 +130,13 @@ def expand_batch_history(history: Sequence[OpRecord]) -> List[OpRecord]:
                     opid=op.opid * serial + j, pid=op.pid, name="free",
                     arg=b, invoke_step=op.invoke_step, steps=op.steps,
                     result=None, response_step=op.response_step))
+        elif op.name == "preempt":
+            ids = [b for b in (op.result or []) if b is not None and b >= 0]
+            for j, b in enumerate(ids):
+                out.append(OpRecord(
+                    opid=op.opid * serial + j, pid=op.pid, name="free",
+                    arg=b, invoke_step=op.invoke_step, steps=op.steps,
+                    result=None, response_step=op.response_step))
         else:
             out.append(op)
     return out
@@ -127,6 +147,61 @@ def check_batch_alloc_history(history: Sequence[OpRecord]) -> List[str]:
     ops (the two-level device pool's operations): expand batches to
     per-block ops, then run :func:`check_alloc_history`."""
     return check_alloc_history(expand_batch_history(history))
+
+
+def check_preemption_history(history: Sequence[OpRecord]) -> List[str]:
+    """Batch safety plus preemption completeness.
+
+    On top of :func:`check_batch_alloc_history` (double-grant /
+    free-while-available on the per-block expansion, with ``preempt``
+    expanding to frees), replays the completed ops in response order
+    and tracks each pid's held blocks: when a ``preempt`` op (arg =
+    victim pid, result = released ids) responds, the victim must hold
+    exactly the released set — a block the victim still held that the
+    preempt did not release is a *leak* (the slot's pages survived its
+    eviction), and a released block the victim never held is a
+    *theft* (another lane's live page was force-freed).  Both break the
+    serving scheduler's page-budget accounting even when the pure
+    alloc/free history linearizes, which is why this is a separate
+    check.
+    """
+    errs = check_batch_alloc_history(history)
+    held: Dict[int, set] = {}
+    owner: Dict[Any, int] = {}
+    done = [op for op in history if op.completed]
+    for op in sorted(done, key=lambda o: (o.response_step, o.invoke_step)):
+        if op.name == "allocate":
+            if op.result is not None and op.result >= 0:
+                held.setdefault(op.pid, set()).add(op.result)
+                owner[op.result] = op.pid
+        elif op.name == "alloc_n":
+            for b in (op.result or []):
+                if b is not None and b >= 0:
+                    held.setdefault(op.pid, set()).add(b)
+                    owner[b] = op.pid
+        elif op.name == "free":
+            held.get(owner.pop(op.arg, op.pid), set()).discard(op.arg)
+        elif op.name == "free_n":
+            for b in (op.arg or []):
+                if b is not None and b >= 0:
+                    held.get(owner.pop(b, op.pid), set()).discard(b)
+        elif op.name == "preempt":
+            victim = op.arg
+            released = {b for b in (op.result or [])
+                        if b is not None and b >= 0}
+            holding = held.get(victim, set())
+            leaked = holding - released
+            stolen = released - holding
+            if leaked:
+                errs.append(f"preempt op {op.opid}: victim {victim} "
+                            f"retained blocks {sorted(leaked)}")
+            if stolen:
+                errs.append(f"preempt op {op.opid}: released blocks "
+                            f"{sorted(stolen)} not held by victim {victim}")
+            for b in released:
+                owner.pop(b, None)
+            held[victim] = set()
+    return errs
 
 
 # ---------------------------------------------------------------- WG checker

@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
       --requests 16
+
+Scheduler knobs (DESIGN.md §8): ``--pin-pages`` keeps hot prompt
+prefixes cache-pinned across request lifetimes, ``--page-budget``
+tightens per-shard admission (forcing deferral/preemption under load),
+``--interactive-frac`` tags a fraction of requests into the
+higher-priority SLO class.
 """
 
 from __future__ import annotations
@@ -15,6 +21,7 @@ import numpy as np
 from .. import models
 from ..configs import get_config, smoke_config
 from ..serving.engine import Request, ServingEngine
+from ..serving.sched import SchedConfig
 
 
 def main(argv=None):
@@ -26,6 +33,13 @@ def main(argv=None):
     ap.add_argument("--dp", type=int, default=2)
     ap.add_argument("--b-local", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--pin-pages", type=int, default=0,
+                    help="pinned prefix-cache pages per shard (0 = off)")
+    ap.add_argument("--page-budget", type=int, default=0,
+                    help="admissible worst-case pages per shard "
+                         "(0 = pool capacity)")
+    ap.add_argument("--interactive-frac", type=float, default=0.0,
+                    help="fraction of requests in the interactive class")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -33,23 +47,36 @@ def main(argv=None):
         cfg = smoke_config(cfg)
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params, dp=args.dp, b_local=args.b_local,
-                           max_len=args.max_len)
+                           max_len=args.max_len,
+                           sched=SchedConfig(pin_pages=args.pin_pages,
+                                             page_budget=args.page_budget))
     rng = np.random.RandomState(0)
     for rid in range(args.requests):
+        slo = ("interactive" if rng.random_sample() < args.interactive_frac
+               else "standard")
         engine.submit(Request(
             rid, prompt=list(rng.randint(1, cfg.vocab - 1,
                                          rng.randint(4, 12))),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new, slo=slo))
     t0 = time.time()
     engine.run()
     dt = time.time() - t0
     s = engine.stats
+    lat = engine.latency_quantiles()
     print(f"served {s['admitted']} requests, {s['tokens_out']} tokens in "
           f"{s['steps']} engine steps ({dt:.1f}s, "
           f"{s['tokens_out']/max(dt,1e-9):.1f} tok/s)")
+    print(f"latency p50={lat['p50_s']*1e3:.0f}ms p99={lat['p99_s']*1e3:.0f}ms "
+          f"(first token p50={lat['first_token_p50_s']*1e3:.0f}ms)")
     print(f"host allocator worst-case op steps: {s['alloc_steps_max']} "
           f"(O(1) — paper Result 1)")
-    print(f"page occupancy after drain: {engine.page_occupancy():.4f}")
+    ss = engine.scheduler.stats
+    print(f"scheduler: preemptions={s['preemptions']} "
+          f"deferred={ss['deferred']} rejected={ss['rejected']} "
+          f"pins created={s['pins_created']} "
+          f"hits={s['pin_hit_reqs']} evicted={ss['pins_evicted']}")
+    engine.flush_pins()
+    print(f"page occupancy after drain+flush: {engine.page_occupancy():.4f}")
     return engine
 
 

@@ -23,14 +23,24 @@ an int16 refcount in the pool; a copy-on-write step at admission gives
 each slot a private copy of the one partial page it will append into,
 and release inside the jitted step decrements instead of frees.
 
+Traffic-aware frontend (DESIGN.md §8): admission order, page-budget
+backpressure, preemption, and pinned-prefix retention are policy owned
+by :class:`~repro.serving.sched.AdmissionScheduler`; this engine owns
+the mechanisms it drives — :meth:`admit`, :meth:`preempt`,
+:meth:`evict_pin` and the pin table (whole pages of hot prefixes kept
+alive after their request finishes, via cache-owned refcounts).
+
 The token hot path is fully device-resident (DESIGN.md §6): one jitted
-``_serve_step`` embeds the forward pass, chunked prefill, greedy
-sampling, EOS/length done-detection, and page release for finished
-slots, and returns a small packed status array — the host performs
-EXACTLY ONE device→host sync per step (``np.asarray(status)``).  Prompts
-are processed ``chunk_size`` tokens per step; steady-state decode runs
-the same step at T=1 with the previous token read from a device-resident
-register, never from the host.
+``_serve_step`` embeds the forward pass, chunked prefill, per-request
+temperature/top-k sampling (greedy by default, :mod:`.sampling`),
+EOS/length done-detection, and page release for finished slots, and
+returns a small packed status array — the host performs EXACTLY ONE
+device→host sync per step (``np.asarray(status)``).  Prompts are
+processed ``chunk_size`` tokens per step; steady-state decode runs the
+same step at T=1 with the previous token read from a device-resident
+register, never from the host.  A step with nothing to feed skips the
+device entirely (idle fast-path) and ``run`` exits as soon as both the
+batch and the scheduler backlog are empty.
 
 The pre-refactor single-token path is kept behind ``legacy=True`` for
 A/B benchmarking (benchmarks/run.py measures both in the same run).
@@ -43,7 +53,7 @@ import functools
 import itertools
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +64,11 @@ from ..core import NULL, SimContext, WaitFreeAllocator, hier_pool
 from ..models.decode_init import empty_decode_state, empty_serve_arrays
 from ..models.layers import logits_apply
 from ..models.transformer import DecodeState, forward_decode_chunk
-from .prefix_cache import PrefixCache, share_prefix_step
+from .prefix_cache import (PinnedPrefixes, PrefixCache, pin_id_of,
+                           pin_prefix_step, share_pinned_step,
+                           share_prefix_step, unpin_step)
+from .sampling import sample_tokens
+from .sched import Admission, AdmissionScheduler, SchedConfig
 
 
 @dataclasses.dataclass
@@ -62,11 +76,21 @@ class Request:
     rid: int
     prompt: List[int]
     max_new_tokens: int = 16
+    # sampling (defaults reproduce the pre-sampler greedy engine)
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    # scheduling
+    slo: str = "standard"
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     done: bool = False
+    rejected: Optional[str] = None     # backpressure reason, terminal
+    preemptions: int = 0
     submitted_at: float = 0.0
+    first_token_at: float = 0.0
     finished_at: float = 0.0
+    _seq: int = 0                      # admission order (victim choice)
 
 
 def _release_slots(state: DecodeState, mask):
@@ -74,8 +98,9 @@ def _release_slots(state: DecodeState, mask):
 
     mask: bool[DP, Bl].  One :func:`hier_pool.free_n` per shard — each
     page loses one reference; pages still mapped by a prefix-sharing
-    sibling stay live (release decrements instead of frees), the rest
-    return to the slot's lane / the shared pool.
+    sibling or pinned by the prefix cache stay live (release decrements
+    instead of frees), the rest return to the slot's lane / the shared
+    pool.
     """
     dp, bl, maxp = state.page_tables.shape
     to_free = jnp.where(mask[:, :, None], state.page_tables, NULL)
@@ -104,8 +129,9 @@ STATUS_DONE = 2      # 1 iff the slot finished (pages already released)
 STATUS_PAGES = 3     # pages-in-use on the slot's DP shard (broadcast row)
 
 
-def _serve_step(cfg, max_len, eos_id, params, state, last_tok, out_count,
-                budget, prompt_toks, feed_lens, is_prompt, emit):
+def _serve_step(cfg, max_len, eos_id, use_sampler, params, state, last_tok,
+                out_count, budget, temps, topks, seeds, prompt_toks,
+                feed_lens, is_prompt, emit):
     """One fully device-resident engine step (jitted once per chunk T).
 
     prompt_toks: int32[DP, Bl, T] host-provided prompt chunks (ignored
@@ -114,14 +140,22 @@ def _serve_step(cfg, max_len, eos_id, params, state, last_tok, out_count,
     (0 = idle); is_prompt: slot consumes prompt tokens; emit: slot
     produces an output token this step (host knows this statically —
     it's "prompt exhausted by this chunk" or "generating").
+    temps/topks/seeds: per-slot sampling registers, written at
+    admission like ``budget`` (temp <= 0 → greedy; see sampling.py for
+    the (seed, out_count) keying that makes preemption invisible).
+    ``use_sampler`` is STATIC: the host knows at dispatch whether any
+    active request samples, and the all-greedy variant (the default —
+    every request at temperature 0) compiles without the sampler's
+    full-vocab sort + Gumbel draw, so greedy serving pays nothing for
+    the feature.
 
-    Folds greedy sampling, EOS/length done-detection, page release for
+    Folds sampling, EOS/length done-detection, page release for
     finished slots, and the once-per-step :func:`hier_pool.rebalance`
     (the paper's deamortized shared-pool traffic, off the per-token
     path) into the step so the host syncs exactly once, on the returned
     packed status int32[4, DP, Bl] (see STATUS_* row indices; the PAGES
-    row carries per-shard pages-in-use so occupancy tracking costs no
-    extra transfer).
+    row carries per-shard pages-in-use so occupancy tracking — and the
+    scheduler's high-water pin eviction — costs no extra transfer).
     """
     DP, Bl, T = prompt_toks.shape
     gen_col = jnp.zeros((DP, Bl, T), jnp.int32).at[:, :, 0].set(last_tok)
@@ -134,7 +168,10 @@ def _serve_step(cfg, max_len, eos_id, params, state, last_tok, out_count,
     h_last = jnp.take_along_axis(hidden, idx[..., None, None],
                                  axis=2)[:, :, 0]         # [DP, Bl, d]
     logits = logits_apply(cfg, params["embed"], h_last)
-    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if use_sampler:
+        nxt = sample_tokens(logits, temps, topks, seeds, out_count)
+    else:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     emit = emit & active
     out_count = out_count + emit.astype(jnp.int32)
@@ -162,7 +199,8 @@ class ServingEngine:
                  max_len: int = 512, scheduler_lanes: int = 2,
                  greedy: bool = True, chunk_size: int = 8,
                  eos_id: Optional[int] = None, legacy: bool = False,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 sched: Optional[SchedConfig] = None):
         self.cfg = cfg
         self.params = params
         self.dp, self.bl = dp, b_local
@@ -173,6 +211,11 @@ class ServingEngine:
                                         chunk=self.chunk)
         self.last_tok, self.out_count, self.budget = \
             empty_serve_arrays(dp, b_local)
+        # per-slot sampling registers (written at admission, read by the
+        # jitted step; all-zeros == greedy everywhere)
+        self.temps = jnp.zeros((dp, b_local), jnp.float32)
+        self.topks = jnp.zeros((dp, b_local), jnp.int32)
+        self.seeds = jnp.zeros((dp, b_local), jnp.int32)
         self.greedy = greedy
         # sequences can never outgrow the page table (maxp * psz tokens,
         # < max_len when max_len is not a page multiple); done-detection
@@ -181,14 +224,20 @@ class ServingEngine:
         maxp = self.state.page_tables.shape[2]
         self.capacity = (min(max_len, maxp * cfg.page_size)
                          if self.state.kv_pages else max_len)
+        self.pages_local = self.state.pool.shared.free_ids.shape[1]
         self._fed: Dict[int, int] = {}       # host shadow of seq_lens
 
-        # fused device-resident step (compiled once for T=chunk and,
-        # lazily, once for the T=1 steady-state decode shape)
-        self._serve = jax.jit(
-            functools.partial(_serve_step, cfg, self.capacity,
-                              -1 if eos_id is None else int(eos_id)),
-            donate_argnums=(1, 2, 3))
+        # fused device-resident step (compiled once per chunk shape
+        # T=chunk / T=1, times the sampler flag; all-greedy batches —
+        # the default — never compile or pay for the sampler)
+        eos = -1 if eos_id is None else int(eos_id)
+        self._serve_variants = {
+            flag: jax.jit(
+                functools.partial(_serve_step, cfg, self.capacity, eos,
+                                  flag),
+                donate_argnums=(1, 2, 3))
+            for flag in (False, True)}
+        self._sampling_slots: set = set()
         # pre-refactor single-token path (A/B benchmarking); the
         # once-per-step lane rebalance rides inside its jit as well
         def _legacy_step(p, t, s, a):
@@ -210,6 +259,36 @@ class ServingEngine:
                 functools.partial(share_prefix_step, cfg.page_size),
                 donate_argnums=(0,))
 
+        # traffic-aware frontend: admission order / page budgets /
+        # preemption / pin policy (DESIGN.md §8).  The default budget is
+        # b_local * maxp — the table capacity the pool is provisioned
+        # for — so with pinning off the scheduler admits exactly what
+        # the pre-scheduler engine admitted.
+        self.sched_config = sched or SchedConfig()
+        self.scheduler = AdmissionScheduler(
+            self.sched_config, n_shards=dp, page_budget=b_local * maxp)
+
+        # pinned prefixes: device pin table (rows of cache-owned page
+        # ids per shard) + host LRU ledger; disabled unless the sched
+        # config grants a pin budget AND the model can share at all
+        self.pins: Optional[PinnedPrefixes] = None
+        self.pin_tables: Optional[jax.Array] = None
+        if self.prefix_cache is not None and self.sched_config.pin_pages > 0:
+            self.pins = PinnedPrefixes(dp, self.sched_config.pin_rows,
+                                       self.sched_config.pin_pages)
+            self.pin_tables = jnp.full(
+                (dp, self.sched_config.pin_rows, maxp), -1, jnp.int32)
+            self._pin = jax.jit(pin_prefix_step, donate_argnums=(0, 1))
+            self._unpin = jax.jit(unpin_step, donate_argnums=(0, 1))
+            self._share_pinned = jax.jit(
+                functools.partial(share_pinned_step, cfg.page_size),
+                donate_argnums=(0,))
+        self._pinned_slots: set = set()
+        # host copy of the status PAGES row (per-shard pages-in-use,
+        # refreshed by the step's single sync; drives high-water pin
+        # eviction without any extra transfer)
+        self.pages_used_shard: List[int] = [0] * dp
+
         # host-side wait-free slot allocator: slots are fixed-size blocks.
         n_slots = dp * b_local
         self.lane_ctx = SimContext(scheduler_lanes, seed=0)
@@ -222,30 +301,42 @@ class ServingEngine:
         self._free_slots = deque(range(n_slots))
         self.lanes = itertools.cycle(range(scheduler_lanes))
 
-        self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}     # slot -> request
         self.pending_tokens: Dict[int, List[int]] = {}
+        self._latencies: List[float] = []
+        self._ft_latencies: List[float] = []
         self.stats = {"steps": 0, "tokens_out": 0, "admitted": 0,
                       "prompt_tokens": 0, "alloc_steps_max": 0,
                       "prefix_shared_tokens": 0, "prefix_shared_reqs": 0,
-                      "pages_peak": 0, "pages_sum": 0}
+                      "pages_peak": 0, "pages_sum": 0,
+                      "idle_steps": 0, "preemptions": 0,
+                      "pins_created": 0, "pin_hit_reqs": 0,
+                      "pin_hit_tokens": 0}
 
     # ------------------------------------------------------------ control
-    def _host_alloc_slot(self, preferred_shard: Optional[int] = None
+    @property
+    def queue(self) -> List[Request]:
+        """Backward-compatible view of the scheduler backlog (admission
+        order: priority classes, FIFO within a class)."""
+        return self.scheduler.pending()
+
+    def _host_alloc_slot(self, shard: Optional[int] = None
                          ) -> Optional[int]:
         """O(1) wait-free admission through the paper's allocator.
 
-        ``preferred_shard`` steers placement next to a prefix-sharing
-        donor (page ids are shard-local, so only same-shard slots can
-        map the donor's pages)."""
+        ``shard`` restricts placement: the scheduler's page-budget
+        accounting is per shard, and a prefix-sharing donor's pages are
+        only mappable from its own shard."""
         if not self._free_slots:
             return None
-        if preferred_shard is not None:
+        if shard is not None:
             for s in self._free_slots:
-                if s // self.bl == preferred_shard:
+                if s // self.bl == shard:
                     self._free_slots.remove(s)
                     self._free_slots.appendleft(s)
                     break
+            else:
+                return None
         lane = next(self.lanes)
         gen = self.slot_alloc.allocate(lane)
         try:
@@ -273,62 +364,206 @@ class ServingEngine:
             pass
         self._free_slots.append(slot)
 
-    def submit(self, req: Request) -> None:
+    # ------------------------------------------------ scheduler interface
+    def submit(self, req: Request) -> Admission:
+        """Enqueue (or reject, with a reason) through the admission
+        scheduler.  The return value is the backpressure signal."""
+        if self.legacy and (req.temperature > 0 or req.top_k > 0):
+            # the A/B baseline path has no sampler — failing fast beats
+            # silently decoding greedy under a sampled-looking config
+            raise ValueError("legacy=True path only decodes greedy; "
+                             "temperature/top_k need the chunked engine")
         req.submitted_at = time.time()
-        self.queue.append(req)
+        return self.scheduler.submit(req, self.est_pages(req))
 
-    def _admit(self) -> None:
-        while self.queue and self._free_slots:
-            # empty prompts degrade to the legacy BOS=1 convention
-            prompt = list(self.queue[0].prompt) or [1]
-            match = (self.prefix_cache.match(prompt)
-                     if self.prefix_cache is not None else None)
-            slot = self._host_alloc_slot(match.shard if match else None)
-            if slot is None:
-                break
-            req = self.queue.popleft()
-            req.slot = slot
-            self.active[slot] = req
-            d, b = divmod(slot, self.bl)
-            shared_n = 0
-            if match is not None and d == match.shard:
-                shared_n = self._try_share(slot, match, len(prompt))
-            self.pending_tokens[slot] = prompt[shared_n:]
-            self._fed[slot] = shared_n
-            if self.prefix_cache is not None:
-                self.prefix_cache.insert(slot, d, prompt)
-                self.prefix_cache.update_progress(slot, shared_n)
-            if not self.legacy:
-                self.budget = self.budget.at[d, b].set(req.max_new_tokens)
-                self.out_count = self.out_count.at[d, b].set(0)
-            self.stats["admitted"] += 1
+    def est_pages(self, req: Request) -> int:
+        """Worst-case page demand of a request: its full prompt plus
+        its whole output budget, capped at the per-slot capacity.
+        ``max_new_tokens`` is the TOTAL generation budget, so tokens
+        already generated before a preemption are not added on top —
+        the estimate is stable across preempt/readmit cycles (a grown
+        estimate could outgrow a tight page budget and wedge the
+        readmission)."""
+        toks = len(req.prompt) + int(req.max_new_tokens)
+        toks = min(max(toks, 1), self.capacity)
+        return -(-toks // self.cfg.page_size)
+
+    def free_slot_shards(self) -> set:
+        return {s // self.bl for s in self._free_slots}
+
+    def prefix_match(self, req: Request):
+        if self.prefix_cache is None:
+            return None
+        toks = (list(req.prompt) + list(req.out_tokens)) or [1]
+        return self.prefix_cache.match(toks)
+
+    def pinned_pages_on(self, shard: int) -> int:
+        return self.pins.pages_on(shard) if self.pins is not None else 0
+
+    def pinned_pages(self) -> int:
+        return self.pins.total_pages() if self.pins is not None else 0
+
+    def admit(self, req: Request, match, shard: int) -> int:
+        """Place a request on ``shard`` (mechanism only — the scheduler
+        chose the order, the shard, and verified budget/slot
+        availability).  A preempted request re-enters here carrying its
+        generated tokens: they are re-prefilled (often via the prefix
+        cache) and generation resumes at ``out_count ==
+        len(out_tokens)``, which both the budget check and the
+        sampler's noise keying are relative to — so the resumed stream
+        is the one the request would have produced unpreempted."""
+        # empty prompts degrade to the legacy BOS=1 convention
+        toks = (list(req.prompt) + list(req.out_tokens)) or [1]
+        slot = self._host_alloc_slot(shard)
+        assert slot is not None, "scheduler admitted without a free slot"
+        d, b = divmod(slot, self.bl)
+        req.slot = slot
+        self.active[slot] = req
+        shared_n = 0
+        if match is not None and d == match.shard:
+            shared_n = self._try_share(slot, match, len(toks))
+        self.pending_tokens[slot] = toks[shared_n:]
+        self._fed[slot] = shared_n
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(slot, d, toks)
+            self.prefix_cache.update_progress(slot, shared_n)
+        if not self.legacy:
+            self.budget = self.budget.at[d, b].set(req.max_new_tokens)
+            self.out_count = self.out_count.at[d, b].set(
+                len(req.out_tokens))
+            self.temps = self.temps.at[d, b].set(float(req.temperature))
+            self.topks = self.topks.at[d, b].set(int(req.top_k))
+            self.seeds = self.seeds.at[d, b].set(int(req.seed))
+            if req.temperature > 0:
+                self._sampling_slots.add(slot)
+        self.stats["admitted"] += 1
+        return slot
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a running request: pin its whole-page state when the
+        budget allows (so readmission re-prefills through the cache),
+        release its pages through the normal refcounted path, free the
+        slot, and hand the request back to the scheduler carrying
+        prompt + generated tokens."""
+        req = self.active.pop(slot)
+        toks = list(req.prompt) + list(req.out_tokens)
+        self._maybe_pin(slot, toks)
+        d, b = divmod(slot, self.bl)
+        mask = np.zeros((self.dp, self.bl), bool)
+        mask[d, b] = True
+        self.state = self._release(self.state, jnp.asarray(mask))
+        self.pending_tokens.pop(slot, None)
+        self._fed.pop(slot, None)
+        self._pinned_slots.discard(slot)
+        self._sampling_slots.discard(slot)
+        if self.prefix_cache is not None:
+            self.prefix_cache.remove(slot)
+        self._host_free_slot(slot)
+        self.scheduler.on_released(slot)
+        req.slot = None
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        return req
+
+    # ------------------------------------------------------------ pinning
+    def _maybe_pin(self, slot: int, tokens: List[int]) -> None:
+        """Pin the slot's resident whole pages for ``tokens`` (a prompt
+        at prefill completion, prompt+generated at preemption) under
+        the scheduler's pin policy.  Exact-key deduplicated: re-pinning
+        a prefix that is already cache-held just refreshes its LRU."""
+        if self.pins is None:
+            return
+        d, b = divmod(slot, self.bl)
+        psz = self.cfg.page_size
+        n_pages = min(len(tokens), self._fed.get(slot, 0)) // psz
+        if n_pages < 1:
+            return
+        key_toks = tokens[:n_pages * psz]
+        hit = self.pins.lookup(d, key_toks)
+        if hit is not None:
+            self.pins.touch(hit)
+            return
+        if not self.scheduler.may_pin(self, d, n_pages):
+            return
+        pin_id = self.pins.add(d, key_toks, n_pages)
+        row = pin_id % self.pins.npin
+        pin_oh = np.zeros((self.dp, self.pins.npin), bool)
+        pin_oh[d, row] = True
+        src = np.zeros((self.dp, self.bl), bool)
+        src[d, b] = True
+        pool, self.pin_tables = self._pin(
+            self.state.pool, self.pin_tables, self.state.page_tables,
+            jnp.asarray(pin_oh), jnp.asarray(src), jnp.int32(n_pages))
+        self.state = self.state._replace(pool=pool)
+        self.prefix_cache.pin_insert(pin_id, d, key_toks)
+        self.stats["pins_created"] += 1
+
+    def evict_pin(self, pin_id: int) -> None:
+        """Drop the cache's references on one pinned row (mechanism;
+        the scheduler picks who and when)."""
+        shard, row = self.pins.remove(pin_id)
+        oh = np.zeros((self.dp, self.pins.npin), bool)
+        oh[shard, row] = True
+        pool, self.pin_tables = self._unpin(
+            self.state.pool, self.pin_tables, jnp.asarray(oh))
+        self.state = self.state._replace(pool=pool)
+        self.prefix_cache.pin_remove(pin_id)
+
+    def flush_pins(self) -> int:
+        """Evict every pinned prefix; returns how many.  After a full
+        drain plus a flush, page occupancy must be exactly zero — the
+        conservation check the overload bench and tests close with."""
+        if self.pins is None:
+            return 0
+        ids = list(self.pins.entries)
+        for pin_id in ids:
+            self.evict_pin(pin_id)
+        return len(ids)
 
     def _try_share(self, slot: int, match, prompt_len: int) -> int:
         """Map the matched prefix onto the donor's pages (device-side,
-        one jitted call, off the per-token path).  Returns the number of
+        one jitted call, off the per-token path).  The donor is either
+        a live slot or a pinned cache row.  Returns the number of
         tokens now resident in the slot's KV (0 = no sharing)."""
         n = min(match.n_tokens, prompt_len - 1, self.capacity - 1)
         if n < self.cfg.page_size:
             return 0
         dst = np.zeros((self.dp, self.bl), bool)
-        src = np.zeros((self.dp, self.bl), bool)
         dst[slot // self.bl, slot % self.bl] = True
-        src[match.slot // self.bl, match.slot % self.bl] = True
-        self.state, ok = self._share(self.state, jnp.asarray(dst),
-                                     jnp.asarray(src), jnp.int32(n))
-        if not bool(ok):       # lane dry for the COW page — admit unshared
-            return 0
+        if match.pinned:
+            pin_id = pin_id_of(match.slot)
+            pin_oh = np.zeros((self.dp, self.pins.npin), bool)
+            pin_oh[match.shard, self.pins.entries[pin_id]["row"]] = True
+            self.state, ok = self._share_pinned(
+                self.state, self.pin_tables, jnp.asarray(dst),
+                jnp.asarray(pin_oh), jnp.int32(n))
+            if not bool(ok):   # shared pool dry for the COW page
+                return 0
+            self.pins.touch(pin_id)
+            self.stats["pin_hit_reqs"] += 1
+            self.stats["pin_hit_tokens"] += n
+        else:
+            src = np.zeros((self.dp, self.bl), bool)
+            src[match.slot // self.bl, match.slot % self.bl] = True
+            self.state, ok = self._share(self.state, jnp.asarray(dst),
+                                         jnp.asarray(src), jnp.int32(n))
+            if not bool(ok):   # lane dry for the COW page — admit unshared
+                return 0
         self.stats["prefix_shared_tokens"] += n
         self.stats["prefix_shared_reqs"] += 1
         return n
 
     # -------------------------------------------------------------- step
-    def step(self) -> None:
+    def step(self) -> bool:
+        """One engine step.  Returns True iff device work was
+        dispatched (False = idle fast-path: admission ran but nothing
+        is active, so the jitted step — and its sync — are skipped)."""
         if self.legacy:
             return self._step_legacy()
-        self._admit()
+        self.scheduler.tick(self)
         if not self.active:
-            return
+            self.stats["idle_steps"] += 1
+            return False
 
         # schedule this step's feeds (host-side bookkeeping only — no
         # device sync; prompt chunks come from host queues, generation
@@ -339,7 +574,7 @@ class ServingEngine:
         feed_lens = np.zeros((self.dp, self.bl), np.int32)
         is_prompt = np.zeros((self.dp, self.bl), bool)
         emit = np.zeros((self.dp, self.bl), bool)
-        for slot in self.active:
+        for slot, req in self.active.items():
             d, b = divmod(slot, self.bl)
             pend = self.pending_tokens[slot]
             if pend:
@@ -352,44 +587,77 @@ class ServingEngine:
                 is_prompt[d, b] = True
                 emit[d, b] = not pend
                 self.stats["prompt_tokens"] += n
+                if (emit[d, b] and self.pins is not None
+                        and slot not in self._pinned_slots
+                        and self._fed[slot]
+                        >= len(req.prompt) // self.cfg.page_size
+                        * self.cfg.page_size):
+                    # the prompt completes THIS step and its whole pages
+                    # are already resident (this chunk only covers the
+                    # partial tail): pin now, before dispatch — a request
+                    # that finishes on this very step (max_new=1, instant
+                    # EOS) releases in-device and could never pin after
+                    self._pinned_slots.add(slot)
+                    self._maybe_pin(slot, list(req.prompt))
             else:
                 feed_lens[d, b] = 1
                 emit[d, b] = True
             self._fed[slot] += int(feed_lens[d, b])
 
-        self.state, self.last_tok, self.out_count, status = self._serve(
+        serve = self._serve_variants[bool(self._sampling_slots)]
+        self.state, self.last_tok, self.out_count, status = serve(
             self.params, self.state, self.last_tok, self.out_count,
-            self.budget, jnp.asarray(prompt_toks), jnp.asarray(feed_lens),
+            self.budget, self.temps, self.topks, self.seeds,
+            jnp.asarray(prompt_toks), jnp.asarray(feed_lens),
             jnp.asarray(is_prompt), jnp.asarray(emit))
         self.stats["steps"] += 1
         status = np.asarray(status)      # the step's ONE device->host sync
 
+        self.pages_used_shard = [int(x) for x in status[STATUS_PAGES, :, 0]]
         pages_now = int(status[STATUS_PAGES, :, 0].sum())
         self.stats["pages_peak"] = max(self.stats["pages_peak"], pages_now)
         self.stats["pages_sum"] += pages_now
 
+        now = time.time()
         for slot, req in list(self.active.items()):
             d, b = divmod(slot, self.bl)
             if status[STATUS_EMITTED, d, b]:
                 req.out_tokens.append(int(status[STATUS_TOKEN, d, b]))
                 self.stats["tokens_out"] += 1
+                if req.first_token_at == 0.0:
+                    req.first_token_at = now
+                    self._ft_latencies.append(now - req.submitted_at)
             if status[STATUS_DONE, d, b]:
                 # pages were already released inside the jitted step
                 req.done = True
-                req.finished_at = time.time()
+                req.finished_at = now
+                self._latencies.append(now - req.submitted_at)
                 self.active.pop(slot)
                 self.pending_tokens.pop(slot, None)
+                self._pinned_slots.discard(slot)
+                self._sampling_slots.discard(slot)
                 if self.prefix_cache is not None:
                     self.prefix_cache.remove(slot)
                 self._host_free_slot(slot)
-            elif self.prefix_cache is not None:
-                # this step's feed is now in device KV: the slot can
-                # donate that much of its prompt to future admissions
-                self.prefix_cache.update_progress(slot, self._fed[slot])
+                self.scheduler.on_released(slot)
+            else:
+                if self.prefix_cache is not None:
+                    # this step's feed is now in device KV: the slot can
+                    # donate that much of its prompt to future admissions
+                    self.prefix_cache.update_progress(slot, self._fed[slot])
+                if (self.pins is not None
+                        and slot not in self._pinned_slots
+                        and not self.pending_tokens[slot]):
+                    # prompt fully resident (this step's pages included —
+                    # the pin runs AFTER the step that allocated them):
+                    # retain its whole pages past the request's lifetime
+                    self._pinned_slots.add(slot)
+                    self._maybe_pin(slot, list(req.prompt))
+        return True
 
-    def _step_legacy(self) -> None:
+    def _step_legacy(self) -> bool:
         """Pre-refactor path: one token per step, host-side argmax."""
-        self._admit()
+        self.scheduler.tick(self)
 
         tokens = np.zeros((self.dp, self.bl), np.int32)
         active = np.zeros((self.dp, self.bl), bool)
@@ -407,7 +675,8 @@ class ServingEngine:
             tokens[d, b] = tok
             active[d, b] = True
         if not feeding:
-            return
+            self.stats["idle_steps"] += 1
+            return False
         logits, self.state = self._decode(
             self.params, jnp.asarray(tokens), self.state, jnp.asarray(active))
         self.stats["steps"] += 1
@@ -422,37 +691,64 @@ class ServingEngine:
             if kind == "gen" or not self.pending_tokens[slot]:
                 req.out_tokens.append(int(nxt[d, b]))
                 self.stats["tokens_out"] += 1
+                if req.first_token_at == 0.0:
+                    req.first_token_at = time.time()
+                    self._ft_latencies.append(
+                        req.first_token_at - req.submitted_at)
             full = seq_lens[d, b] >= self.max_len - 1
             if len(req.out_tokens) >= req.max_new_tokens or full:
                 finished.append(slot)
         if finished:
             mask = np.zeros((self.dp, self.bl), bool)
+            now = time.time()
             for slot in finished:
                 d, b = divmod(slot, self.bl)
                 mask[d, b] = True
                 req = self.active.pop(slot)
                 req.done = True
-                req.finished_at = time.time()
+                req.finished_at = now
+                self._latencies.append(now - req.submitted_at)
                 self.pending_tokens.pop(slot, None)
                 self._host_free_slot(slot)
+                self.scheduler.on_released(slot)
             self.state = self._release(self.state, jnp.asarray(mask))
+        return True
+
+    def idle(self) -> bool:
+        """Nothing running and nothing admissible: the batch is empty
+        and so is the scheduler backlog (rejected requests are terminal
+        — they never hold ``run`` open)."""
+        return not self.active and self.scheduler.backlog() == 0
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not self.queue and not self.active:
+            if self.idle():
                 break
             self.step()
 
     # ------------------------------------------------------------ metrics
     def pages_in_use(self) -> int:
-        """Physical pages currently referenced (shared pages count once)."""
-        total = self.state.pool.shared.free_ids.shape[1] * self.dp
+        """Physical pages currently referenced (shared pages count once;
+        includes cache-pinned pages — see :meth:`pinned_pages`)."""
+        total = self.pages_local * self.dp
         return total - int(hier_pool.total_free(self.state.pool))
 
     def page_occupancy(self) -> float:
-        total = self.state.pool.shared.free_ids.shape[1] * self.dp
-        return self.pages_in_use() / total
+        return self.pages_in_use() / (self.pages_local * self.dp)
 
     def pages_mean(self) -> float:
         """Mean pages-in-use per step (from the packed status row)."""
         return self.stats["pages_sum"] / max(self.stats["steps"], 1)
+
+    def latency_quantiles(self) -> Dict[str, float]:
+        """p50/p99 end-to-end and first-token latency (seconds) over
+        finished requests — the overload bench's measured axes."""
+        def q(xs, f):
+            if not xs:
+                return 0.0
+            s = sorted(xs)
+            return s[min(len(s) - 1, int(round(f * (len(s) - 1))))]
+        return {"p50_s": q(self._latencies, 0.50),
+                "p99_s": q(self._latencies, 0.99),
+                "first_token_p50_s": q(self._ft_latencies, 0.50),
+                "first_token_p99_s": q(self._ft_latencies, 0.99)}

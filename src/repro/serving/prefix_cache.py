@@ -31,12 +31,32 @@ request on its donor's shard.
 Only models whose whole decode state is paged can share (ring /
 recurrent layers would need their donor's state *at the match point*,
 which no longer exists); the engine auto-disables sharing otherwise.
+
+**Pinned prefixes (DESIGN.md §8).**  Without pinning, the trie only
+tracks *live* slots, so a hot system prompt is re-prefilled from
+scratch the moment its last request finishes.  Pinning keeps a
+finished prefix's pages alive by giving the cache its *own* reference
+on each page: :func:`pin_prefix_step` copies the first ``n_pages`` of
+a live slot's table into a device-resident **pin table** row and
+``addref``\\ s them, so when the slot later releases inside the jitted
+step the pages drop to refcount 1 (cache-owned) instead of 0 — the
+conservation invariants from the refcount protocol carry over
+unchanged (a pinned page is simply a page with one more owner).
+Pinned rows are donors like any live slot: the trie stores them under
+negative pseudo-slot ids and :func:`share_pinned_step` maps them into
+a new slot exactly as :func:`share_prefix_step` maps a live donor —
+including the COW copy of a mid-page tail, whose source content is
+still resident because a refcount ≥ 1 page is never restacked.
+:func:`unpin_step` releases the cache's references (eviction);
+:class:`PinnedPrefixes` is the host ledger (LRU order, per-shard pages
+budget, row assignment) the scheduler drives the policy through.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,11 +67,29 @@ from ..core.block_pool import NULL
 
 # ------------------------------------------------------------- host trie
 
+#: Pinned entries live in the same trie as live slots, keyed by
+#: negative pseudo-slot ids: pin_id 0, 1, 2, ... <-> -2, -3, -4, ...
+#: (-1 is reserved — it reads as NULL in device land).
+PIN_BASE = -2
+
+
+def pin_pseudo_slot(pin_id: int) -> int:
+    return PIN_BASE - pin_id
+
+
+def pin_id_of(pseudo_slot: int) -> int:
+    return PIN_BASE - pseudo_slot
+
+
 @dataclasses.dataclass
 class Match:
-    slot: int        # donor slot (engine-global index)
+    slot: int        # donor slot (engine-global index; < 0 = pinned row)
     shard: int       # DP shard both slots must live on
     n_tokens: int    # shareable prefix length (tokens, host-verified)
+
+    @property
+    def pinned(self) -> bool:
+        return self.slot < 0
 
 
 class _Node:
@@ -121,6 +159,20 @@ class PrefixCache:
     def live_slots(self) -> int:
         return len(self.tokens)
 
+    # -- pinned pseudo-slots --------------------------------------------
+    def pin_insert(self, pin_id: int, shard: int,
+                   tokens: Sequence[int]) -> None:
+        """Register a pinned prefix as a donor.  ``tokens`` must be the
+        exact whole-page prefix held by the pin row (the engine passes
+        ``prompt[:n_pages * psz]``); it is fully resident by
+        construction, so completion equals its length."""
+        pseudo = pin_pseudo_slot(pin_id)
+        self.insert(pseudo, shard, tokens)
+        self.completed[pseudo] = len(tokens)
+
+    def pin_remove(self, pin_id: int) -> None:
+        self.remove(pin_pseudo_slot(pin_id))
+
     # -- matching -------------------------------------------------------
     def match(self, tokens: Sequence[int]) -> Optional[Match]:
         """Longest shareable prefix of ``tokens`` among live prompts.
@@ -151,14 +203,85 @@ class PrefixCache:
                 while n < len(tokens) and n < len(ent) and tokens[n] == ent[n]:
                     n += 1
                 n = min(n, self.completed[s], limit)
-                if best is None or n > best.n_tokens:
+                if (best is None or n > best.n_tokens
+                        or (n == best.n_tokens and best.slot < 0 <= s)):
+                    # ties prefer a live donor over a pinned row (same
+                    # pages either way; live donors keep LRU honest)
                     best = Match(slot=s, shard=shard, n_tokens=n)
         if best is None or best.n_tokens < self.psz:
             return None
         return best
 
 
-# --------------------------------------------------------- device step
+# --------------------------------------------------- pinned host ledger
+
+class PinnedPrefixes:
+    """Host-side ledger of cache-owned (pinned) prefixes.
+
+    Pure bookkeeping — the pages themselves live behind the device pin
+    table and the pool refcounts; this class answers the policy
+    questions (which row is free, who is LRU, how many pages does the
+    cache hold on shard d) the scheduler asks when it pins, evicts
+    under the per-shard ``budget_pages``, or sheds pins on pool
+    pressure.  pin_id = shard * rows_per_shard + row, globally unique
+    and stable for a pin's lifetime.
+    """
+
+    def __init__(self, n_shards: int, rows_per_shard: int,
+                 budget_pages: int):
+        self.n_shards = n_shards
+        self.npin = int(rows_per_shard)
+        self.budget = int(budget_pages)
+        self.entries: Dict[int, dict] = {}          # pin_id -> entry
+        self.free_rows = {s: set(range(self.npin)) for s in range(n_shards)}
+        self.by_key: Dict[Tuple[int, tuple], int] = {}
+        self._clock = itertools.count()
+
+    # -- queries --------------------------------------------------------
+    def pages_on(self, shard: int) -> int:
+        return sum(e["pages"] for e in self.entries.values()
+                   if e["shard"] == shard)
+
+    def total_pages(self) -> int:
+        return sum(e["pages"] for e in self.entries.values())
+
+    def lookup(self, shard: int, tokens: Sequence[int]) -> Optional[int]:
+        return self.by_key.get((shard, tuple(tokens)))
+
+    def lru(self, shard: int) -> Optional[int]:
+        cands = [(e["used"], pid) for pid, e in self.entries.items()
+                 if e["shard"] == shard]
+        return min(cands)[1] if cands else None
+
+    def fits(self, shard: int, pages: int) -> bool:
+        return self.pages_on(shard) + pages <= self.budget
+
+    # -- mutation -------------------------------------------------------
+    def add(self, shard: int, tokens: Sequence[int], pages: int) -> int:
+        row = min(self.free_rows[shard])            # caller checked free
+        self.free_rows[shard].discard(row)
+        pin_id = shard * self.npin + row
+        self.entries[pin_id] = {"shard": shard, "row": row,
+                                "tokens": tuple(tokens), "pages": pages,
+                                "used": next(self._clock)}
+        self.by_key[(shard, tuple(tokens))] = pin_id
+        return pin_id
+
+    def has_free_row(self, shard: int) -> bool:
+        return bool(self.free_rows[shard])
+
+    def remove(self, pin_id: int) -> Tuple[int, int]:
+        e = self.entries.pop(pin_id)
+        self.free_rows[e["shard"]].add(e["row"])
+        self.by_key.pop((e["shard"], e["tokens"]), None)
+        return e["shard"], e["row"]
+
+    def touch(self, pin_id: int) -> None:
+        if pin_id in self.entries:
+            self.entries[pin_id]["used"] = next(self._clock)
+
+
+# --------------------------------------------------------- device steps
 
 def share_prefix_step(psz: int, state, dst_oh, src_oh, n_tokens):
     """Map ``n_tokens`` of the src slot's prefix into the dst slot.
@@ -181,13 +304,34 @@ def share_prefix_step(psz: int, state, dst_oh, src_oh, n_tokens):
       3. seq_lens[dst] = n_tokens, so the engine feeds only the
          remaining prompt suffix.
     """
+    src_row = jnp.sum(jnp.where(src_oh[..., None], state.page_tables, 0),
+                      axis=(0, 1))                                 # [maxp]
+    return _share_from_row(psz, state, dst_oh, src_row, n_tokens)
+
+
+def share_pinned_step(psz: int, state, pin_tables, dst_oh, pin_oh,
+                      n_tokens):
+    """:func:`share_prefix_step` with a pinned row as the donor.
+
+    pin_oh: bool[DP, Npin] one-hot on the dst shard.  The pin row's
+    pages are live (cache-owned refcount >= 1), their KV content is
+    still resident, and the row is NULL beyond its pinned pages — so
+    the shared-row protocol applies verbatim, including the COW copy
+    when the match ends mid-page.
+    """
+    src_row = jnp.sum(jnp.where(pin_oh[..., None], pin_tables, 0),
+                      axis=(0, 1))                                 # [maxp]
+    return _share_from_row(psz, state, dst_oh, src_row, n_tokens)
+
+
+def _share_from_row(psz: int, state, dst_oh, src_row, n_tokens):
+    """Shared body: map a donor table row into the dst slot (see
+    :func:`share_prefix_step` for the protocol)."""
     DP, Bl, maxp = state.page_tables.shape
     n_tokens = jnp.asarray(n_tokens, jnp.int32)
     fp = n_tokens // psz                          # full pages shared
     partial = n_tokens % psz                      # tokens in the COW page
     k = jnp.arange(maxp, dtype=jnp.int32)
-    src_row = jnp.sum(jnp.where(src_oh[..., None], state.page_tables, 0),
-                      axis=(0, 1))                                 # [maxp]
     np_needed = (n_tokens + psz - 1) // psz
     donor_ok = src_row[jnp.clip(np_needed - 1, 0, maxp - 1)] >= 0
     shard_mask = jnp.any(dst_oh, axis=1)                           # [DP]
@@ -232,3 +376,48 @@ def share_prefix_step(psz: int, state, dst_oh, src_oh, n_tokens):
     state = state._replace(kv_pages=kv_pages, page_tables=page_tables,
                            seq_lens=seq_lens, pool=pool)
     return state, ok
+
+
+def pin_prefix_step(pool, pin_tables, page_tables, pin_oh, src_oh,
+                    n_pages):
+    """Pin the first ``n_pages`` of a live slot's table into a pin row.
+
+    pin_oh: bool[DP, Npin] one-hot naming the (free) destination row;
+    src_oh: bool[DP, Bl] one-hot naming the live source slot, SAME
+    shard; n_pages: int32 scalar >= 1 (whole pages only — a partial
+    page is still being appended into and cannot be cache-owned).
+
+    The cache takes ONE reference per pinned page
+    (:func:`hier_pool.addref`): when the source slot later releases
+    inside the jitted step, the pages drop to refcount 1 instead of 0
+    and stay off the free stacks — alive, content intact, donatable.
+    Jitted once; called per pin (prefill completion or preemption),
+    off the per-token path.
+    """
+    DP, Npin, maxp = pin_tables.shape
+    k = jnp.arange(maxp, dtype=jnp.int32)
+    src_row = jnp.sum(jnp.where(src_oh[..., None], page_tables, 0),
+                      axis=(0, 1))                                 # [maxp]
+    row = jnp.where(k < jnp.asarray(n_pages, jnp.int32), src_row, NULL)
+    shard_mask = jnp.any(pin_oh, axis=1)                           # [DP]
+    ids_dp = jnp.where(shard_mask[:, None], row[None, :], NULL)
+    pool = hier_pool.addref_dp(pool, ids_dp)
+    pin_tables = jnp.where(pin_oh[..., None], row[None, None, :],
+                           pin_tables)
+    return pool, pin_tables
+
+
+def unpin_step(pool, pin_tables, pin_oh):
+    """Evict pinned rows: drop the cache's references, clear the rows.
+
+    pin_oh: bool[DP, Npin] (any number of rows, any shards).  Pages
+    whose refcount reaches zero return to the shard's SHARED stack
+    (:func:`hier_pool.free_shared` — pin rows belong to no lane; the
+    per-step rebalance redistributes).  Pages a live sharer still maps
+    just lose the cache's reference.
+    """
+    DP = pin_tables.shape[0]
+    ids = jnp.where(pin_oh[..., None], pin_tables, NULL)
+    pool = hier_pool.free_shared_dp(pool, ids.reshape(DP, -1))
+    pin_tables = jnp.where(pin_oh[..., None], NULL, pin_tables)
+    return pool, pin_tables

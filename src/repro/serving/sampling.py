@@ -1,0 +1,66 @@
+"""On-device sampling: temperature + top-k, keyed per request.
+
+Replaces the engine's hardcoded greedy ``jnp.argmax`` inside the jitted
+serve step (DESIGN.md §6 step 4) without adding a device→host sync: the
+sampler reads three small per-slot registers (temperature, top-k,
+seed) that the host writes once at admission, exactly like
+``budget``/``out_count``.
+
+Determinism contract: the noise for a slot's i-th output token is a
+pure function of ``(seed, i)`` — ``fold_in(fold_in(key0, seed), i)`` —
+never of the slot index or the step number.  Two consequences the
+scheduler relies on (DESIGN.md §8):
+
+* the same request replayed on any slot, any batch composition, any
+  chunk size draws the same tokens;
+* a request preempted after k tokens and re-prefilled elsewhere resumes
+  at ``out_count == k`` and therefore draws token k+1 from the same key
+  it would have used unpreempted — preemption is invisible in sampled
+  output, not just greedy output.
+
+``temperature <= 0`` short-circuits to plain argmax, bit-identical to
+the pre-sampler engine (the default: every existing token-identity test
+runs through this path unchanged).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
+                  seeds: jax.Array, counts: jax.Array) -> jax.Array:
+    """Sample one token per slot from [DP, Bl, V] logits.
+
+    temp: f32[DP, Bl] (<= 0 → greedy argmax for that slot);
+    top_k: int32[DP, Bl] (0 → full vocabulary);
+    seeds: int32[DP, Bl] per-request RNG seeds;
+    counts: int32[DP, Bl] tokens emitted so far (the fold-in position).
+    Returns int32[DP, Bl].  Fixed-shape throughout — jit-safe inside
+    the serve step; O(Bl·V log V) for the top-k sort, independent of
+    the pool and page-table sizes.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # top-k: threshold at the k-th largest logit per slot (k = 0 or
+    # >= V disables the mask; clip keeps the gather in range)
+    k = jnp.clip(top_k, 1, V)
+    srt = jnp.sort(logits, axis=-1)                   # ascending
+    kth = jnp.take_along_axis(srt, (V - k)[..., None], axis=-1)
+    cut = (top_k > 0)[..., None] & (logits < kth)
+    masked = jnp.where(cut, -jnp.inf, logits)
+
+    # Gumbel-max: argmax(logits/T + g) ~ softmax(logits/T), one key per
+    # (request seed, output position)
+    def draw(seed, cnt):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), seed), cnt)
+        return jax.random.gumbel(key, (V,), dtype=jnp.float32)
+
+    g = jax.vmap(jax.vmap(draw))(seeds, counts)
+    t = jnp.maximum(temp, 1e-6)[..., None]
+    sampled = jnp.argmax(masked / t + g, axis=-1).astype(jnp.int32)
+    return jnp.where(temp > 0, sampled, greedy)

@@ -1,0 +1,299 @@
+"""Traffic-aware serving frontend: admission, preemption, pin policy.
+
+The paper gives the layers *below* this one constant-time alloc/free —
+the allocator never stalls under load.  This module is the layer that
+decides **who gets the pages**: a scheduler subsystem that treats
+pages-in-use as the contended resource, in the spirit of production
+allocators that pair fast alloc/free with an explicit reclamation
+policy under a memory budget (DESIGN.md §8).
+
+Three responsibilities, all host-side policy over the engine's O(1)
+mechanisms (nothing here touches the per-token hot path):
+
+* **Admission** — per-SLO-class priority queues (FIFO within a class,
+  strict priority across classes), continuous batching, and per-shard
+  page-budget accounting: a request is admitted only onto a shard
+  whose worst-case committed pages (every active request at its full
+  ``prompt + max_new`` demand) plus cache-pinned pages leave room for
+  its own worst case.  The budget defaults to ``b_local * max_pages``
+  — exactly the table capacity the pool was sized for — so the §4.2
+  never-dry invariant stays intact even with pinned pages subtracting
+  from the pool's slack.  Backpressure is explicit: ``submit`` rejects
+  with a reason (``queue_full``, ``too_large``) instead of queueing
+  unservable work, and a blocked head-of-line defers with a recorded
+  reason (``slots`` / ``pages``).
+
+* **Preemption** — when the head of a higher-priority queue cannot be
+  placed, the scheduler evicts pinned pages first (cheapest — only
+  cache state), then preempts a lower-priority victim: the engine
+  releases the victim's pages through the normal refcounted path
+  (``hier_pool.free_n_dp`` inside ``_release_slots``) and the request
+  is requeued at the *front* of its class carrying prompt + generated
+  tokens, so readmission re-prefills through the prefix cache (often
+  nearly free: the victim's whole-page state is pinned before release
+  when the pin budget allows).  Output identity is preserved: greedy
+  decode is position-deterministic, and the sampler keys noise by
+  ``(seed, out_count)`` (serving/sampling.py), so a resumed request
+  draws exactly the tokens it would have drawn unpreempted.
+
+* **Pin policy** — which finished-or-finishing prefixes stay pinned
+  (`serving/prefix_cache.py` holds the mechanism): pin at prompt
+  completion and at preemption, deduplicated by exact token key, LRU
+  eviction per shard when the pinned-pages budget is exceeded, on
+  admission pressure, or when a shard's pool occupancy crosses the
+  high-water mark (read from the packed per-step status row — no extra
+  device sync).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One service class.  Higher ``priority`` admits first and may
+    preempt strictly-lower-priority work (if ``preemptible``)."""
+    name: str
+    priority: int
+    preemptible: bool = True
+
+
+#: interactive preempts standard preempts batch; batch is the
+#: background class that soaks up leftover capacity.
+DEFAULT_CLASSES: Tuple[SLOClass, ...] = (
+    SLOClass("interactive", 2),
+    SLOClass("standard", 1),
+    SLOClass("batch", 0),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedConfig:
+    classes: Tuple[SLOClass, ...] = DEFAULT_CLASSES
+    #: reject new submissions beyond this backlog (0 = unbounded)
+    max_queue: int = 0
+    #: admissible worst-case pages per shard (0 = the engine default,
+    #: b_local * max_pages — the capacity the pool is provisioned for)
+    page_budget: int = 0
+    preemption: bool = True
+    max_preemptions_per_tick: int = 2
+    #: pinned-prefix pages budget per shard (0 disables pinning)
+    pin_pages: int = 0
+    #: device pin-table rows per shard
+    pin_rows: int = 4
+    #: shed pins when a shard's pool occupancy crosses this fraction
+    high_water: float = 0.9
+
+
+@dataclasses.dataclass
+class Admission:
+    """submit() decision; ``reason`` is empty when accepted."""
+    accepted: bool
+    reason: str = ""
+
+
+class AdmissionScheduler:
+    """Queues + accounting.  The engine owns the mechanisms (slot
+    alloc, share, pin, release); ``tick`` drives them once per engine
+    step, before the feed build — entirely host-side, no device sync.
+    """
+
+    def __init__(self, config: SchedConfig, n_shards: int,
+                 page_budget: int):
+        self.config = config
+        self.classes = sorted(config.classes, key=lambda c: -c.priority)
+        self.by_name = {c.name: c for c in self.classes}
+        # unknown slo names fall into the lowest class rather than jump
+        # the queue
+        self.default_class = self.classes[-1]
+        self.queues: Dict[str, Deque] = {c.name: deque()
+                                         for c in self.classes}
+        self.n_shards = n_shards
+        self.page_budget = (config.page_budget or page_budget)
+        self.committed = [0] * n_shards             # worst-case pages
+        self.est_of: Dict[int, Tuple[int, int]] = {}   # slot -> (shard, est)
+        self._seq = itertools.count()
+        # preemptions are counted by the mechanism (engine.preempt /
+        # engine.stats) — one ledger, not two that can drift
+        self.stats = {"deferred": 0, "rejected": 0, "pins_evicted": 0,
+                      "defer_slots": 0, "defer_pages": 0}
+
+    # ---------------------------------------------------------- intake
+    def class_of(self, req) -> SLOClass:
+        return self.by_name.get(getattr(req, "slo", ""),
+                                self.default_class)
+
+    def submit(self, req, est_pages: int) -> Admission:
+        if est_pages > self.page_budget:
+            self.stats["rejected"] += 1
+            req.rejected = "too_large"
+            return Admission(False, "too_large")
+        if self.config.max_queue and self.backlog() >= self.config.max_queue:
+            self.stats["rejected"] += 1
+            req.rejected = "queue_full"
+            return Admission(False, "queue_full")
+        self.queues[self.class_of(req).name].append(req)
+        return Admission(True)
+
+    def backlog(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def pending(self) -> List:
+        """Queued requests, admission order (priority then FIFO)."""
+        return [r for c in self.classes for r in self.queues[c.name]]
+
+    def requeue_front(self, req) -> None:
+        """A preempted request resumes before its class peers."""
+        self.queues[self.class_of(req).name].appendleft(req)
+
+    # ------------------------------------------------------ accounting
+    def on_admitted(self, slot: int, shard: int, est: int) -> None:
+        self.committed[shard] += est
+        self.est_of[slot] = (shard, est)
+
+    def on_released(self, slot: int) -> None:
+        """Slot finished or was preempted: uncommit its worst case."""
+        shard, est = self.est_of.pop(slot)
+        self.committed[shard] -= est
+
+    def headroom(self, shard: int, pinned_on) -> int:
+        return self.page_budget - self.committed[shard] - pinned_on(shard)
+
+    # ------------------------------------------------------------ tick
+    def tick(self, engine) -> None:
+        """One admission pass: shed pins above high water, then admit
+        heads in priority order, evicting pins / preempting victims for
+        a blocked head before deferring it (strict priority — a blocked
+        head blocks lower classes; admitting around it would consume
+        the very pages it is waiting for)."""
+        self._shed_high_water(engine)
+        preempted = 0
+        while True:
+            head = self._head()
+            if head is None:
+                return
+            cls, req = head
+            est = engine.est_pages(req)
+            match, shard, blocked = self._place(engine, req, est)
+            if blocked is None:
+                self.queues[cls.name].popleft()
+                slot = engine.admit(req, match, shard)
+                req._seq = next(self._seq)
+                self.on_admitted(slot, slot // engine.bl, est)
+                continue
+            if blocked == "pages" and self._evict_pins_for(engine, est):
+                continue
+            if (self.config.preemption
+                    and preempted < self.config.max_preemptions_per_tick):
+                victim = self._pick_victim(engine, cls.priority)
+                if victim is not None:
+                    vreq = engine.preempt(victim)
+                    self.requeue_front(vreq)
+                    preempted += 1
+                    continue
+            self.stats["deferred"] += 1
+            self.stats[f"defer_{blocked}"] += 1
+            return
+
+    def _head(self):
+        for cls in self.classes:
+            if self.queues[cls.name]:
+                return cls, self.queues[cls.name][0]
+        return None
+
+    def _place(self, engine, req, est):
+        """(match, shard, blocked): a prefix match, an admissible shard
+        holding a free slot (match's shard preferred), or why not."""
+        slots = engine.free_slot_shards()
+        if not slots:
+            return None, None, "slots"
+        match = engine.prefix_match(req)
+        pinned = engine.pinned_pages_on
+        fits = [s for s in sorted(slots)
+                if est <= self.headroom(s, pinned)]
+        if not fits:
+            return match, None, "pages"
+        if match is not None and match.shard in fits:
+            return match, match.shard, None
+        # most headroom first: spread the worst case
+        shard = max(fits, key=lambda s: self.headroom(s, pinned))
+        return match, shard, None
+
+    # ------------------------------------------------------ preemption
+    def _pick_victim(self, engine, admit_priority: int) -> Optional[int]:
+        """Lowest-priority, most-recently-admitted active slot strictly
+        below the admitting priority (least progress lost), from a
+        preemptible class."""
+        cands = []
+        for slot, vreq in engine.active.items():
+            vcls = self.class_of(vreq)
+            if vcls.priority < admit_priority and vcls.preemptible:
+                cands.append((vcls.priority, -getattr(vreq, "_seq", 0),
+                              slot))
+        if not cands:
+            return None
+        return min(cands)[2]
+
+    # ------------------------------------------------------ pin policy
+    def _evict_pins_for(self, engine, est: int) -> bool:
+        """Evict LRU pins until some free-slot shard can commit ``est``
+        more worst-case pages.  Returns True on success."""
+        if engine.pins is None:
+            return False
+        progressed = False
+        for shard in sorted(engine.free_slot_shards()):
+            while (self.headroom(shard, engine.pinned_pages_on) < est
+                   and engine.pins.pages_on(shard) > 0):
+                pin_id = engine.pins.lru(shard)
+                engine.evict_pin(pin_id)
+                self.stats["pins_evicted"] += 1
+                progressed = True
+            if self.headroom(shard, engine.pinned_pages_on) >= est:
+                return True
+        return progressed and any(
+            self.headroom(s, engine.pinned_pages_on) >= est
+            for s in engine.free_slot_shards())
+
+    def _shed_high_water(self, engine) -> None:
+        """Pool-pressure eviction: the per-step status row carries each
+        shard's pages-in-use; above ``high_water`` occupancy the cache
+        gives pages back before they are forced out."""
+        if engine.pins is None:
+            return
+        hw = self.config.high_water * engine.pages_local
+        for shard in range(self.n_shards):
+            while (engine.pages_used_shard[shard] > hw
+                   and engine.pins.pages_on(shard) > 0):
+                pin_id = engine.pins.lru(shard)
+                pages = engine.pins.entries[pin_id]["pages"]
+                engine.evict_pin(pin_id)
+                self.stats["pins_evicted"] += 1
+                # the status row is one step stale — account the evicted
+                # pages here so the loop terminates without a sync
+                engine.pages_used_shard[shard] -= pages
+
+    def may_pin(self, engine, shard: int, pages: int) -> bool:
+        """Pin admission control: respect the pin budget (evicting LRU
+        to make room) and never let pins squeeze committed work."""
+        if engine.pins is None or pages <= 0:
+            return False
+        if pages > engine.pins.budget:
+            return False
+        while not engine.pins.fits(shard, pages):
+            pin_id = engine.pins.lru(shard)
+            if pin_id is None:
+                return False
+            engine.evict_pin(pin_id)
+            self.stats["pins_evicted"] += 1
+        if not engine.pins.has_free_row(shard):
+            pin_id = engine.pins.lru(shard)
+            if pin_id is None:
+                return False
+            engine.evict_pin(pin_id)
+            self.stats["pins_evicted"] += 1
+        return (self.committed[shard] + engine.pinned_pages_on(shard)
+                + pages <= self.page_budget)

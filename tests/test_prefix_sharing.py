@@ -282,6 +282,51 @@ class TestEnginePrefixSharing:
             "post-share chunk was denied pages (lane raided for COW)")
         assert eng_s.page_occupancy() == 0.0
 
+    def test_pinned_prefix_survives_idle_gap(self, engine_setup):
+        """DESIGN.md §8: with a pin budget, a hot prefix outlives its
+        last request — a second wave arriving after a full drain
+        re-shares it from the cache-owned pages instead of re-prefilling
+        (measured as fewer prompt tokens fed), with identical outputs;
+        with pinning off, the drain kills the prefix and the full
+        prefill cost comes back."""
+        cfg, params = engine_setup                       # psz = 8
+        from repro.serving.sched import SchedConfig
+        rng = np.random.RandomState(11)
+        hot = list(rng.randint(1, 255, 32))              # 4 whole pages
+        waves = [[hot + list(rng.randint(1, 255, 4)) for _ in range(3)]
+                 for _ in range(2)]
+
+        def run(pin_pages):
+            eng = ServingEngine(cfg, params, dp=1, b_local=3, max_len=96,
+                                chunk_size=16,
+                                sched=SchedConfig(pin_pages=pin_pages))
+            outs = []
+            for w, wave in enumerate(waves):
+                reqs = [Request(w * 10 + i, prompt=list(p),
+                                max_new_tokens=4)
+                        for i, p in enumerate(wave)]
+                for r in reqs:
+                    eng.submit(r)
+                eng.run(max_steps=300)                   # drain to idle
+                assert all(r.done for r in reqs)
+                outs.append([r.out_tokens for r in reqs])
+            return outs, eng
+
+        out_pin, eng_pin = run(pin_pages=8)
+        out_raw, eng_raw = run(pin_pages=0)
+        assert out_pin == out_raw, "pinning changed emitted tokens"
+        # wave 2 re-shared the hot pages from the pin across the drain
+        assert eng_pin.stats["pin_hit_reqs"] >= 1
+        saved = (eng_raw.stats["prompt_tokens"]
+                 - eng_pin.stats["prompt_tokens"])
+        assert saved >= len(hot) - cfg.page_size, (
+            f"pinning saved only {saved} prompt tokens")
+        # drain leaves exactly the pinned pages; flush reclaims all
+        assert eng_pin.pages_in_use() == eng_pin.pinned_pages() > 0
+        eng_pin.flush_pins()
+        assert eng_pin.page_occupancy() == 0.0
+        assert eng_raw.page_occupancy() == 0.0
+
     def test_sharing_disabled_for_non_paged_archs(self):
         """Ring / recurrent layers cannot share prefixes (their state at
         the match point no longer exists) — the engine must auto-disable

@@ -1,0 +1,485 @@
+"""Traffic-aware frontend: admission, backpressure, preemption, pins.
+
+Covers the DESIGN.md §8 subsystem at three levels:
+
+* scheduler — SLO-class admission order, reject/defer backpressure with
+  reasons, per-shard page-budget accounting;
+* engine — preempt-then-readmit token identity (greedy AND sampled:
+  the (seed, out_count) noise keying makes preemption invisible),
+  pinned-prefix refcount conservation under mixed finish orders, LRU
+  eviction under the pin budget, and the idle fast-path;
+* sim — an adversarial scheduler storm that preempts a victim lane
+  mid-rebalance (inside the torn drain/refill window), checked with
+  the extended preemption-aware linearizability test.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import models
+from repro.configs import get_config, smoke_config
+from repro.core import block_pool, hier_pool
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sched import SchedConfig
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = smoke_config(get_config("olmo-1b"))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _conserved(eng):
+    total = eng.pages_local * eng.dp
+    free = int(hier_pool.total_free(eng.state.pool))
+    live = int(hier_pool.num_live(eng.state.pool))
+    assert free + live == total, "pages lost or duplicated"
+    # the low-water query agrees with the pool-wide free count
+    per_shard = np.asarray(hier_pool.free_per_shard(eng.state.pool))
+    assert per_shard.shape == (eng.dp,) and per_shard.sum() == free
+    return live
+
+
+# ------------------------------------------------------------- scheduler
+
+class TestAdmissionPolicy:
+    def test_priority_classes_admit_before_fifo(self, engine_setup):
+        """A later-submitted interactive request is admitted before the
+        earlier standard ones (strict priority across classes, FIFO
+        within a class)."""
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, dp=1, b_local=1, max_len=64,
+                            sched=SchedConfig(preemption=False))
+        r0 = Request(0, prompt=[2, 3], max_new_tokens=3)
+        r1 = Request(1, prompt=[4, 5], max_new_tokens=3)
+        r2 = Request(2, prompt=[6, 7], max_new_tokens=3, slo="interactive")
+        for r in (r0, r1, r2):
+            assert eng.submit(r).accepted
+        eng.run(max_steps=200)
+        assert all(r.done for r in (r0, r1, r2))
+        # r2 jumped both standard requests; r0 before r1 (FIFO in class)
+        assert r2._seq < r0._seq < r1._seq, "priority order violated"
+
+    def test_reject_queue_full_and_too_large(self, engine_setup):
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, dp=1, b_local=1, max_len=64,
+                            sched=SchedConfig(max_queue=2, page_budget=4))
+        # too_large: worst case 30 prompt + 8 new = 5 pages > budget 4
+        big = Request(9, prompt=[3] * 30, max_new_tokens=8)
+        a = eng.submit(big)
+        assert not a.accepted and a.reason == "too_large"
+        assert big.rejected == "too_large"
+        oks = [eng.submit(Request(i, prompt=[2, 3], max_new_tokens=2))
+               for i in range(3)]
+        assert [o.accepted for o in oks] == [True, True, False]
+        assert oks[2].reason == "queue_full"
+        eng.run(max_steps=300)          # rejected requests never spin run()
+        assert eng.stats["admitted"] == 2
+        assert eng.scheduler.stats["rejected"] == 2
+        assert eng.page_occupancy() == 0.0
+
+    def test_page_budget_defers_despite_free_slot(self, engine_setup):
+        """Two free slots but a 6-page budget: the second request (4
+        worst-case pages each) must wait for the first to release its
+        commitment, and the deferral is recorded with reason=pages."""
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=16,
+                            sched=SchedConfig(page_budget=6,
+                                              preemption=False))
+        ra = Request(0, prompt=[2] * 20, max_new_tokens=6)   # 4 pages
+        rb = Request(1, prompt=[3] * 20, max_new_tokens=6)
+        eng.submit(ra)
+        eng.submit(rb)
+        eng.step()
+        assert ra.slot is not None and rb.slot is None
+        assert eng.scheduler.stats["defer_pages"] > 0
+        eng.run(max_steps=300)
+        assert ra.done and rb.done
+        assert eng.page_occupancy() == 0.0
+
+
+# ------------------------------------------------------------ preemption
+
+class TestPreemption:
+    def test_preempt_then_readmit_token_identity(self, engine_setup):
+        """A preempted request (greedy and sampled) finishes with
+        exactly the tokens of an unpreempted run: readmission re-feeds
+        prompt + generated tokens, resumes out_count at the preemption
+        point, and the sampler keys noise by (seed, position)."""
+        cfg, params = engine_setup
+
+        def mk_reqs():
+            return (Request(0, prompt=[2, 3, 4], max_new_tokens=10,
+                            slo="batch"),
+                    Request(1, prompt=[8, 9, 10], max_new_tokens=10,
+                            slo="batch", temperature=0.9, top_k=8, seed=7),
+                    Request(2, prompt=[5, 6, 7], max_new_tokens=4,
+                            slo="interactive"))
+
+        # constrained: 2 slots, both batch requests mid-generation when
+        # the interactive one arrives and preempts one of them
+        g, s, it = mk_reqs()
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=8)
+        eng.submit(g)
+        eng.submit(s)
+        eng.step(); eng.step(); eng.step()
+        eng.submit(it)
+        eng.run(max_steps=300)
+        assert all(r.done for r in (g, s, it))
+        assert eng.stats["preemptions"] >= 1
+        assert g.preemptions + s.preemptions >= 1
+
+        # unconstrained reference: 3 slots, nothing preempted
+        g2, s2, it2 = mk_reqs()
+        ref = ServingEngine(cfg, params, dp=1, b_local=3, max_len=64,
+                            chunk_size=8)
+        ref.submit(g2)
+        ref.submit(s2)
+        ref.step(); ref.step(); ref.step()
+        ref.submit(it2)
+        ref.run(max_steps=300)
+        assert ref.stats["preemptions"] == 0
+        assert g.out_tokens == g2.out_tokens, "greedy victim diverged"
+        assert s.out_tokens == s2.out_tokens, "sampled victim diverged"
+        assert it.out_tokens == it2.out_tokens
+        assert eng.page_occupancy() == 0.0
+        _conserved(eng)
+
+    def test_preemption_on_page_pressure(self, engine_setup):
+        """Free slot available but no page headroom: the scheduler
+        preempts the lower-priority holder rather than deferring the
+        interactive head."""
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=16,
+                            sched=SchedConfig(page_budget=6))
+        rb = Request(0, prompt=[2] * 20, max_new_tokens=8)    # 4 pages
+        eng.submit(rb)
+        eng.step()
+        ri = Request(1, prompt=[4] * 20, max_new_tokens=4,    # 3 pages
+                     slo="interactive")
+        eng.submit(ri)
+        eng.run(max_steps=300)
+        assert rb.done and ri.done
+        assert rb.preemptions >= 1
+        assert eng.page_occupancy() == 0.0
+        _conserved(eng)
+
+    def test_readmission_estimate_stable_under_tight_budget(self, engine_setup):
+        """Regression: the worst-case estimate must not grow with
+        tokens generated before a preemption (max_new is the TOTAL
+        budget) — a victim that exactly fit the page budget must fit
+        again on readmission instead of wedging the queue."""
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=16,
+                            sched=SchedConfig(page_budget=4))
+        rb = Request(0, prompt=[2] * 20, max_new_tokens=8)  # exactly 4 pages
+        eng.submit(rb)
+        for _ in range(7):
+            eng.step()
+        assert 5 <= len(rb.out_tokens) < 8
+        ri = Request(1, prompt=[4, 5], max_new_tokens=2, slo="interactive")
+        eng.submit(ri)              # blocked on pages → rb is preempted
+        eng.run(max_steps=300)
+        assert rb.preemptions >= 1
+        assert rb.done and ri.done
+        assert len(rb.out_tokens) == 8
+        assert eng.page_occupancy() == 0.0
+        _conserved(eng)
+
+    def test_preempt_mid_prefill_resumes_cleanly(self, engine_setup):
+        """Preemption before the victim emitted anything: the whole
+        prompt is re-fed and outputs match an undisturbed run."""
+        cfg, params = engine_setup
+        prompt = list(range(2, 26))                           # 24 tokens
+        ref = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=8)
+        r_ref = Request(0, prompt=list(prompt), max_new_tokens=4)
+        ref.submit(r_ref)
+        ref.run(max_steps=100)
+
+        eng = ServingEngine(cfg, params, dp=1, b_local=1, max_len=64,
+                            chunk_size=8)
+        victim = Request(0, prompt=list(prompt), max_new_tokens=4,
+                         slo="batch")
+        eng.submit(victim)
+        eng.step()                       # one 8-token chunk in KV
+        hi = Request(1, prompt=[3, 5], max_new_tokens=2, slo="interactive")
+        eng.submit(hi)
+        eng.run(max_steps=300)
+        assert victim.done and hi.done and victim.preemptions == 1
+        assert victim.out_tokens == r_ref.out_tokens
+        assert eng.page_occupancy() == 0.0
+
+
+# ---------------------------------------------------------------- pinning
+
+class TestPinnedPrefixes:
+    def test_refcount_accounting_mixed_finish_orders(self, engine_setup):
+        """Two sharers of a hot prefix finish in either order; the
+        cache-owned references keep exactly the hot whole pages alive
+        (refcount 1 each, deduplicated across the two pins), a
+        re-arrival hits the pin, and a flush returns the pool to
+        exactly empty — conservation at every stage."""
+        cfg, params = engine_setup                            # psz = 8
+        rng = np.random.RandomState(2)
+        hot = list(rng.randint(1, 255, 16))                   # 2 pages
+        for first_longer in (False, True):
+            eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                                chunk_size=16,
+                                sched=SchedConfig(pin_pages=8))
+            na, nb = (6, 3) if first_longer else (3, 6)
+            ra = Request(0, prompt=hot + [90, 91], max_new_tokens=na)
+            rb = Request(1, prompt=hot + [77, 78, 79], max_new_tokens=nb)
+            eng.submit(ra)
+            eng.step(); eng.step()       # A prefilled → hot pages pinned
+            eng.submit(rb)
+            eng.run(max_steps=200)
+            assert ra.done and rb.done
+            # both requests pinned the same 2 whole pages: exact dedup
+            assert eng.pinned_pages() == 2
+            assert eng.pages_in_use() == 2, "only the pin survives drain"
+            live = _conserved(eng)
+            assert live == 2
+            rc = np.asarray(eng.state.pool.shared.refcount[0])
+            assert (rc == 1).sum() == 2 and (rc >= 2).sum() == 0
+            # the pin row's own view agrees (cache-owner refcounts)
+            shard_pool = jax.tree.map(lambda a: a[0],
+                                      eng.state.pool.shared)
+            row_rc = np.asarray(block_pool.refcounts_of(
+                shard_pool, eng.pin_tables[0].reshape(-1)))
+            assert (row_rc == 1).sum() == 2
+
+            # re-arrival after the donors died: served from the pin
+            rc2 = Request(2, prompt=hot + [50, 51], max_new_tokens=3)
+            eng.submit(rc2)
+            eng.run(max_steps=100)
+            assert rc2.done
+            assert eng.stats["pin_hit_reqs"] == 1
+            assert eng.stats["pin_hit_tokens"] == 16
+            assert eng.flush_pins() >= 1
+            assert eng.page_occupancy() == 0.0
+            assert int(hier_pool.num_live(eng.state.pool)) == 0
+
+    def test_pin_engages_for_single_token_requests(self, engine_setup):
+        """Regression: a request that finishes on its prompt-completion
+        step (max_new=1) releases its pages inside that very jitted
+        step — the pin must be taken at feed-build time, before
+        dispatch, or short-generation workloads never populate the
+        cache despite a granted budget."""
+        cfg, params = engine_setup                       # psz = 8
+        rng = np.random.RandomState(5)
+        hot = list(rng.randint(1, 255, 16))              # 2 whole pages
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=8,
+                            sched=SchedConfig(pin_pages=8))
+        r0 = Request(0, prompt=hot + [3, 4], max_new_tokens=1)
+        eng.submit(r0)
+        eng.run(max_steps=50)
+        assert r0.done and len(r0.out_tokens) == 1
+        assert eng.pinned_pages() == 2, "same-step finisher did not pin"
+        r1 = Request(1, prompt=hot + [5, 6], max_new_tokens=1)
+        eng.submit(r1)
+        eng.run(max_steps=50)
+        assert r1.done
+        assert eng.stats["pin_hit_reqs"] == 1
+        _conserved(eng)
+        eng.flush_pins()
+        assert eng.page_occupancy() == 0.0
+
+    def test_lru_eviction_under_pin_budget(self, engine_setup):
+        """Three distinct 2-page prefixes against a 4-page pin budget:
+        the least-recently-used pin is evicted, pages conserved."""
+        cfg, params = engine_setup
+        rng = np.random.RandomState(3)
+        pA, pB, pC = (list(rng.randint(1, 255, 16)) for _ in range(3))
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                            chunk_size=16,
+                            sched=SchedConfig(pin_pages=4))
+        for i, p in enumerate((pA, pB)):
+            r = Request(i, prompt=p + [60 + i], max_new_tokens=2)
+            eng.submit(r)
+            eng.run(max_steps=100)
+        assert eng.pinned_pages() == 4                  # A and B pinned
+        # touch A (pin hit), then pin C: B is now LRU and must go
+        r = Request(7, prompt=pA + [99], max_new_tokens=2)
+        eng.submit(r)
+        eng.run(max_steps=100)
+        r = Request(8, prompt=pC + [98], max_new_tokens=2)
+        eng.submit(r)
+        eng.run(max_steps=100)
+        assert eng.pinned_pages() == 4
+        assert eng.scheduler.stats["pins_evicted"] == 1
+        assert eng.pins.lookup(0, tuple(pB)) is None, "LRU should be B"
+        assert eng.pins.lookup(0, tuple(pA)) is not None
+        assert eng.pins.lookup(0, tuple(pC)) is not None
+        _conserved(eng)
+        eng.flush_pins()
+        assert eng.page_occupancy() == 0.0
+
+    def test_idle_fast_path_skips_device_steps(self, engine_setup):
+        """An engine with nothing to do must not dispatch the jitted
+        step: step() reports idle, run() exits immediately."""
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=48)
+        assert eng.idle()
+        for _ in range(3):
+            assert eng.step() is False
+        assert eng.stats["steps"] == 0
+        assert eng.stats["idle_steps"] == 3
+        eng.run(max_steps=10_000)                    # returns instantly
+        assert eng.stats["steps"] == 0
+        r = Request(0, prompt=[2, 3], max_new_tokens=2)
+        eng.submit(r)
+        assert not eng.idle()
+        eng.run(max_steps=100)
+        assert r.done
+        steps = eng.stats["steps"]
+        eng.run(max_steps=10_000)                    # drained → instant
+        assert eng.stats["steps"] == steps
+
+
+# ------------------------------------------------- sim-level storm checks
+
+class TestPreemptionStorm:
+    """Adversarial scheduler storm over the device pool with a
+    preemptor that fires inside the torn rebalance window (between
+    drain and refill), checked with the preemption-aware
+    linearizability extension."""
+
+    def _storm(self, seed):
+        import random
+        from repro.core import (Scheduler, SimContext,
+                                check_preemption_history)
+        L, ell, kmax = 3, 4, 4
+        st = {"pool": hier_pool.create(num_blocks=96, num_lanes=L, ell=ell),
+              "held": {lane: [] for lane in range(L)},
+              "torn": False, "mid_reb_preempts": 0}
+        total0 = int(hier_pool.total_free(st["pool"]))
+        ctx = SimContext(L + 2, seed=seed)
+        sched = Scheduler(seed=seed)
+
+        def lane_program(lane):
+            rng = random.Random(seed * 31 + lane)
+            held = st["held"][lane]
+            for _ in range(30):
+                yield
+                if not held or rng.random() < 0.55:
+                    want = rng.randint(1, kmax)
+                    counts = np.zeros(L, np.int32)
+                    counts[lane] = want
+                    rec = ctx.begin_op(lane, "alloc_n", arg=want)
+                    rec.invoke_step = sched.steps
+                    yield
+                    pool, ids = hier_pool.alloc_n(
+                        st["pool"], jnp.asarray(counts), kmax)
+                    st["pool"] = pool
+                    got = [int(i) for i in np.asarray(ids)[lane] if i >= 0]
+                    held.extend(got)
+                    yield
+                    ctx.end_op(rec, result=got)
+                    rec.response_step = sched.steps
+                else:
+                    k = rng.randint(1, min(len(held), kmax))
+                    back = held[-k:]
+                    ids = np.full((L, kmax), -1, np.int32)
+                    ids[lane, :k] = back
+                    rec = ctx.begin_op(lane, "free_n", arg=back)
+                    rec.invoke_step = sched.steps
+                    yield
+                    st["pool"] = hier_pool.free_n(st["pool"],
+                                                  jnp.asarray(ids))
+                    del held[-k:]
+                    yield
+                    ctx.end_op(rec)
+                    rec.response_step = sched.steps
+
+        def rebalancer(pid):
+            for _ in range(40):
+                yield
+                st["pool"] = hier_pool.rebalance_drain(st["pool"])
+                st["torn"] = True
+                yield              # <-- the torn window preemptions hit
+                st["pool"] = hier_pool.rebalance_refill(st["pool"])
+                st["torn"] = False
+
+        def preemptor(pid):
+            rng = random.Random(seed * 77 + 5)
+            for _ in range(60):
+                yield
+                if not st["torn"]:
+                    continue
+                victim = rng.randrange(L)
+                # like the engine: only preempt between the victim's
+                # ops, never mid-allocation
+                if ctx.current_op[victim] is not None:
+                    continue
+                held = st["held"][victim]
+                if not held:
+                    continue
+                rec = ctx.begin_op(pid, "preempt", arg=victim)
+                rec.invoke_step = sched.steps
+                yield
+                # release + response are atomic (the engine's preempt is
+                # host-sequential): the victim cannot slip an op between
+                # the forced free and the preempt's linearization point
+                ids = np.full((L, len(held)), -1, np.int32)
+                ids[victim, :] = held
+                st["pool"] = hier_pool.free_n(st["pool"],
+                                              jnp.asarray(ids))
+                released = list(held)
+                held.clear()
+                st["mid_reb_preempts"] += int(st["torn"])
+                ctx.end_op(rec, result=released)
+                rec.response_step = sched.steps
+
+        for lane in range(L):
+            sched.add(lane, lane_program(lane))
+        sched.add(L, rebalancer(L))
+        sched.add(L + 1, preemptor(L + 1))
+        sched.run("bursty")
+
+        errs = check_preemption_history(ctx.history)
+        assert errs == [], errs
+        live = sum(len(h) for h in st["held"].values())
+        assert int(hier_pool.total_free(st["pool"])) + live == total0, (
+            "blocks lost or duplicated across preemptions")
+        assert int(hier_pool.num_live(st["pool"])) == live
+        return st["mid_reb_preempts"]
+
+    def test_preempts_mid_rebalance_conserve_and_linearize(self):
+        mid = sum(self._storm(seed) for seed in (0, 1, 2, 3))
+        assert mid >= 1, "no preemption landed in the torn window"
+
+    def test_checker_catches_leaky_preempt(self):
+        """The extended checker must flag a preempt that under-reports
+        the victim's holdings (a page leak) and one that releases a
+        block the victim never held."""
+        from repro.core import check_preemption_history
+        from repro.core.sim import OpRecord
+
+        def op(opid, pid, name, arg, res, t0, t1):
+            return OpRecord(opid=opid, pid=pid, name=name, arg=arg,
+                            invoke_step=t0, result=res, response_step=t1)
+
+        leak = [op(0, 0, "alloc_n", 2, [5, 6], 0, 1),
+                op(1, 1, "preempt", 0, [5], 2, 3)]       # 6 retained
+        errs = check_preemption_history(leak)
+        assert any("retained" in e for e in errs)
+
+        theft = [op(0, 0, "alloc_n", 1, [5], 0, 1),
+                 op(1, 2, "alloc_n", 1, [6], 0, 1),
+                 op(2, 1, "preempt", 0, [5, 6], 2, 3)]   # 6 is lane 2's
+        errs = check_preemption_history(theft)
+        assert any("not held" in e for e in errs)
+
+        clean = [op(0, 0, "alloc_n", 2, [5, 6], 0, 1),
+                 op(1, 1, "preempt", 0, [5, 6], 2, 3),
+                 op(2, 0, "alloc_n", 2, [5, 6], 4, 5)]   # readmit reuses
+        assert check_preemption_history(clean) == []
