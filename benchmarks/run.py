@@ -30,6 +30,12 @@ on them:
                                drain-to-idle gaps vs pinning disabled —
                                token-identical to an unconstrained run,
                                zero leaks after drain + pin flush
+  serving_mesh_shards        — dp=4 engine on the shard_map allocation
+                               plane (DESIGN.md §9; a real device mesh
+                               when the process has >= 4 devices):
+                               per-shard occupancy balance from the
+                               status row, token identity vs the
+                               single-device run, zero leaks
 
 Output: ``name,us_per_call,derived`` CSV rows, plus machine-readable
 ``BENCH_serving.json`` (written next to the CWD) so the serving perf
@@ -314,10 +320,72 @@ def serving_throughput():
               f"alloc_O1_max={chunked['alloc_O1_max']}")
     report["mixes"]["pool_churn"] = serving_pool_churn(cfg, params)
     report["mixes"]["overload"] = serving_overload(cfg, params)
+    report["mixes"]["mesh_shards"] = serving_mesh_shards(cfg, params)
     with open("BENCH_serving.json", "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
     return report
+
+
+def serving_mesh_shards(cfg, params):
+    """Multi-host allocation plane smoke (DESIGN.md §9): a mixed
+    hot-prefix workload on a dp=4 engine — shard_mapped over a real
+    ("dp",) device mesh when the process has >= 4 devices (CI's mesh-8
+    job forces 8 CPU devices), vmap semantics otherwise.  Reports the
+    per-shard occupancy stats from the packed status row (the
+    scheduler's placement balance across hosts) and the usual
+    leak/identity axes vs a single-device run of the same trace."""
+    import numpy as np
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.sched import SchedConfig
+
+    rng = np.random.RandomState(0)
+    hot = list(rng.randint(1, 255, 24))                  # 3 pages of 8
+    spec = []
+    for i in range(20):
+        if rng.random_sample() < 0.6:
+            prompt = hot + list(rng.randint(1, 255, 2 + i % 5))
+        else:
+            prompt = list(rng.randint(1, 255, 8 + i % 9))
+        spec.append(prompt)
+
+    def run(dp, b_local):
+        eng = ServingEngine(cfg, params, dp=dp, b_local=b_local,
+                            max_len=64, chunk_size=16,
+                            sched=SchedConfig(pin_pages=8))
+        reqs = [Request(i, prompt=list(p), max_new_tokens=4)
+                for i, p in enumerate(spec)]
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=1000)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        eng.flush_pins()
+        return [r.out_tokens for r in reqs], eng, dt
+
+    out4, eng4, dt = run(dp=4, b_local=2)
+    out1, eng1, _ = run(dp=1, b_local=2)
+    occ = eng4.shard_occupancy()
+    row = {
+        "mesh_devices": occ["mesh_devices"],
+        "shard_map": eng4.mesh is not None,
+        "gen_tok_per_s": round(eng4.stats["tokens_out"] / dt, 1),
+        "steps": eng4.stats["steps"],
+        "pages_mean_shard": occ["pages_mean_shard"],
+        "pages_peak_shard": occ["pages_peak_shard"],
+        "prefix_hit_rate": round(eng4.stats["prefix_shared_reqs"]
+                                 / max(eng4.stats["admitted"], 1), 2),
+        "token_identical_vs_single_device": out4 == out1,
+        "leak_free": eng4.page_occupancy() == 0.0,
+    }
+    print(f"serving_mesh_shards,0,devices={row['mesh_devices']} "
+          f"shard_map={row['shard_map']} "
+          f"pages_mean_shard={row['pages_mean_shard']} "
+          f"pages_peak_shard={row['pages_peak_shard']} "
+          f"token_identical={row['token_identical_vs_single_device']} "
+          f"leak_free={row['leak_free']}")
+    return row
 
 
 def serving_pool_churn(cfg, params):

@@ -55,6 +55,19 @@ def num_live(pool: BlockPool) -> jax.Array:
     return jnp.sum((pool.refcount > 0).astype(jnp.int32))
 
 
+def num_live_rows(refcount: jax.Array) -> jax.Array:
+    """Per-row live-block counts: int16[..., m] -> int32[...].
+
+    The shard-resolved companion of :func:`num_live` for DP-stacked
+    refcounts ([DP, m]) — each shard's conservation check
+    (``free_per_shard + num_live_rows == pages_local``) runs on its own
+    row, never summing across shards (block ids are shard-local, so a
+    cross-shard sum could mask a leak on one shard cancelled by a
+    double-free on another).
+    """
+    return jnp.sum((refcount > 0).astype(jnp.int32), axis=-1)
+
+
 def refcounts_of(pool: BlockPool, ids: jax.Array) -> jax.Array:
     """Gather per-block refcounts for valid ids (NULL -> 0).
 

@@ -216,6 +216,15 @@ def free_per_shard(pool: HierPool) -> jax.Array:
     return pool.shared.top + jnp.sum(pool.private_top, axis=-1)
 
 
+def live_per_shard(pool: HierPool) -> jax.Array:
+    """Referenced blocks per shard (each counted once) — int32[DP] on a
+    DP-sharded pool, scalar otherwise.  Per-shard conservation is
+    ``free_per_shard + live_per_shard == pages_local`` on EVERY shard
+    independently: block ids are shard-local, so the invariant must be
+    checked shard-resolved (the multi-host test plane's §4.1 form)."""
+    return block_pool.num_live_rows(pool.shared.refcount)
+
+
 def rebalance_drain(pool: HierPool) -> HierPool:
     """Phase 1 of the deamortized shared-pool traffic: every lane above
     ``2*ell`` pushes its top ``ell`` blocks to the shared pool in one
@@ -282,6 +291,16 @@ def num_live(pool: HierPool) -> jax.Array:
 # carries a leading [DP, ...] axis and block ids are shard-local.  The
 # wrappers below vmap the single-shard ops over that axis (no
 # cross-shard gathers ever appear in the HLO — DESIGN.md §5).
+#
+# On a real multi-device mesh the engine shard_maps its jitted steps
+# over a ("dp",) axis (launch.mesh.make_dp_mesh): each device then sees
+# a local DP slice of 1 and these same wrappers run entirely
+# device-local — drain and refill move blocks only between a shard's
+# own lanes and its own shared stack, never across the mesh axis
+# (DESIGN.md §9 ownership rules).  The vmap form and the shard_map form
+# compute identical results by construction; the conformance suite
+# (tests/test_multihost_pool.py) replays one trace through both and
+# through the host-side reference model (core/refpool.py).
 
 DP_AXES = HierPool(
     shared=BlockPool(free_ids=0, top=0, refcount=0),

@@ -204,6 +204,90 @@ def check_preemption_history(history: Sequence[OpRecord]) -> List[str]:
     return errs
 
 
+# ------------------------------------------------------------- sharded ops
+
+def split_history_by_shard(history: Sequence[OpRecord]
+                           ) -> Dict[int, List[OpRecord]]:
+    """Partition a multi-shard history by ``op.meta["shard"]``.
+
+    The multi-host pool keeps one id space PER SHARD (block ids are
+    shard-local — shard 0's block 7 and shard 1's block 7 are different
+    physical pages), so the per-block interval checks are only sound on
+    a single shard's sub-history: running them on the merged history
+    would flag legitimate concurrent grants of the same id on two
+    shards as double allocation.  Ops missing the shard tag default to
+    shard 0 (single-shard histories pass through unchanged).
+    """
+    out: Dict[int, List[OpRecord]] = {}
+    for op in history:
+        out.setdefault(op.meta.get("shard", 0), []).append(op)
+    return out
+
+
+def check_cross_shard_frees(history: Sequence[OpRecord]) -> List[str]:
+    """Cross-shard theft check: a grant observed on shard i must be
+    freed on shard i.
+
+    Replays the completed ops in response order, tracking per-(shard,
+    block) live-grant counts.  A ``free``/``free_n``/``preempt``
+    release naming block b on shard j while b has no live grant on j
+    but does on some i != j is a *cross-shard theft*: somebody freed a
+    foreign shard's page through their own shard's allocator — the
+    exact failure mode shard_map is supposed to make impossible
+    (shard-local id spaces mean the free would corrupt an unrelated
+    page on shard j while leaking the real one on shard i).
+    """
+    errs: List[str] = []
+    live: Dict[Tuple[int, Any], int] = {}
+
+    def grant(shard, b):
+        live[(shard, b)] = live.get((shard, b), 0) + 1
+
+    def release(shard, b, op):
+        if live.get((shard, b), 0) > 0:
+            live[(shard, b)] -= 1
+            return
+        holders = [s for (s, blk), n in live.items() if blk == b and n > 0]
+        if holders:
+            errs.append(
+                f"op {op.opid} ({op.name}): block {b} freed on shard "
+                f"{shard} but granted on shard(s) {sorted(holders)} — "
+                f"cross-shard theft")
+
+    done = [op for op in history if op.completed]
+    for op in sorted(done, key=lambda o: (o.response_step, o.invoke_step)):
+        shard = op.meta.get("shard", 0)
+        if op.name == "allocate":
+            if op.result is not None and op.result >= 0:
+                grant(shard, op.result)
+        elif op.name == "alloc_n":
+            for b in (op.result or []):
+                if b is not None and b >= 0:
+                    grant(shard, b)
+        elif op.name == "free":
+            release(shard, op.arg, op)
+        elif op.name in ("free_n", ):
+            for b in (op.arg or []):
+                if b is not None and b >= 0:
+                    release(shard, b, op)
+        elif op.name == "preempt":
+            for b in (op.result or []):
+                if b is not None and b >= 0:
+                    release(shard, b, op)
+    return errs
+
+
+def check_sharded_batch_history(history: Sequence[OpRecord]) -> List[str]:
+    """Multi-shard safety: the cross-shard theft check on the whole
+    history, plus the per-block batch checks on every shard's
+    sub-history independently (:func:`split_history_by_shard`)."""
+    errs = check_cross_shard_frees(history)
+    for shard, ops in sorted(split_history_by_shard(history).items()):
+        errs += [f"shard {shard}: {e}"
+                 for e in check_batch_alloc_history(ops)]
+    return errs
+
+
 # ---------------------------------------------------------------- WG checker
 
 @dataclass

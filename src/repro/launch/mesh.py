@@ -8,7 +8,11 @@ jax import to get placeholder devices (see dryrun.py).
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,6 +20,31 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+#: The serving allocation plane's mesh axis: one device per DP shard.
+SERVE_DP_AXIS = "dp"
+
+
+def make_dp_mesh(dp: int) -> Optional[Mesh]:
+    """One-axis ``("dp",)`` mesh of the first ``dp`` devices — the
+    serving engine's multi-host allocation plane (DESIGN.md §9).
+
+    Each device on the axis owns exactly one DP shard's allocator state
+    (HierPool leaves, refcounts, pin table, KV pages); the engine wraps
+    its jitted steps in ``shard_map`` over this mesh so shard-locality
+    is enforced by construction, not just by vmap convention.
+
+    Returns None when the process has fewer than ``dp`` devices (or
+    dp < 2): the engine then falls back to the single-device vmap
+    semantics, which compute the same thing on one device.  CI's mesh-8
+    job forces 8 host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so tier-1
+    exercises the shard_map plane on CPU.
+    """
+    if dp < 2 or len(jax.devices()) < dp:
+        return None
+    return Mesh(np.asarray(jax.devices()[:dp]), (SERVE_DP_AXIS,))
 
 
 def make_smoke_mesh():

@@ -40,6 +40,10 @@ def main(argv=None):
                          "(0 = pool capacity)")
     ap.add_argument("--interactive-frac", type=float, default=0.0,
                     help="fraction of requests in the interactive class")
+    ap.add_argument("--mesh", choices=("auto", "off"), default="auto",
+                    help="shard_map the allocation plane over a ('dp',) "
+                         "device mesh when >= dp devices exist "
+                         "(DESIGN.md §9); off = single-device vmap")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -48,8 +52,15 @@ def main(argv=None):
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params, dp=args.dp, b_local=args.b_local,
                            max_len=args.max_len,
+                           mesh=("auto" if args.mesh == "auto" else None),
                            sched=SchedConfig(pin_pages=args.pin_pages,
                                              page_budget=args.page_budget))
+    if engine.mesh is not None:
+        print(f"allocation plane: shard_map over {engine.mesh} "
+              f"({engine.dp} shard-owning devices)")
+    else:
+        print(f"allocation plane: single-device vmap "
+              f"({len(jax.devices())} device(s) for dp={engine.dp})")
     rng = np.random.RandomState(0)
     for rid in range(args.requests):
         slo = ("interactive" if rng.random_sample() < args.interactive_frac
@@ -75,6 +86,9 @@ def main(argv=None):
           f"deferred={ss['deferred']} rejected={ss['rejected']} "
           f"pins created={s['pins_created']} "
           f"hits={s['pin_hit_reqs']} evicted={ss['pins_evicted']}")
+    occ = engine.shard_occupancy()
+    print(f"shard occupancy: mean={occ['pages_mean_shard']} "
+          f"peak={occ['pages_peak_shard']} pages per shard")
     engine.flush_pins()
     print(f"page occupancy after drain+flush: {engine.page_occupancy():.4f}")
     return engine

@@ -125,6 +125,40 @@ def decode_state_shardings(cfg: ModelConfig, state_defs: tfm.DecodeState,
         enc_kv=enc_kv)
 
 
+# --------------------------------------------- serving dp-mesh partitioning
+#
+# The serving engine's allocation plane runs over the one-axis ("dp",)
+# mesh of launch.mesh.make_dp_mesh: every DecodeState leaf is sharded on
+# its DP axis so each device owns exactly its shard's HierPool (shared
+# stack, refcounts, lanes), page tables, pin table, and KV pages, and
+# the engine's jitted steps are shard_mapped over these specs
+# (DESIGN.md §9).  Leaf layouts: kv_pages/rings/rec/enc_kv carry DP at
+# axis 1 ([stack, DP, ...]); page_tables/seq_lens/pool leaves and the
+# per-slot serving registers carry it at axis 0.
+
+def serve_register_pspec() -> P:
+    """[DP, Bl(, ...)] per-slot register / mask / pin-table spec."""
+    return P("dp")
+
+
+def serve_state_pspecs(state: tfm.DecodeState) -> tfm.DecodeState:
+    """PartitionSpec tree (axis name "dp") for a serving DecodeState."""
+    ax1 = lambda tree: jax.tree.map(lambda _: P(None, "dp"), tree)
+    return tfm.DecodeState(
+        kv_pages=ax1(state.kv_pages),
+        rings=ax1(state.rings),
+        rec=ax1(state.rec),
+        page_tables=P("dp"),
+        seq_lens=P("dp"),
+        pool=jax.tree.map(lambda _: P("dp"), state.pool),
+        enc_kv=None if state.enc_kv is None else ax1(state.enc_kv))
+
+
+def serve_shardings(mesh: Mesh, pspecs):
+    """NamedSharding tree for ``jax.device_put`` of serving state."""
+    return jax.tree.map(lambda s: _ns(mesh, s), pspecs)
+
+
 # ------------------------------------------------------------ step builders
 
 def build_train_step(cfg: ModelConfig, opt_cfg: Optional[adamw.AdamWConfig] = None):

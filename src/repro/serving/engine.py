@@ -42,6 +42,18 @@ register, never from the host.  A step with nothing to feed skips the
 device entirely (idle fast-path) and ``run`` exits as soon as both the
 batch and the scheduler backlog are empty.
 
+Multi-host allocation plane (DESIGN.md §9): with >= dp devices the
+engine builds a ``("dp",)`` mesh (``launch.mesh.make_dp_mesh``) and
+shard_maps every jitted step — serve, legacy, release, share, pin,
+unpin — over it, so each device owns exactly its shard's HierPool
+leaves, lanes, refcounts, pin table, and KV pages; rebalance
+drain/refill run entirely shard-local and the packed status row is the
+only data crossing shards (one all_gather per step).  Admission is the
+cross-host policy layer: the scheduler's per-shard committed/pinned
+budgets are the mesh-visible state and prefix-trie donors are matched
+strictly within a shard.  Without enough devices the same code runs
+single-device vmap semantics, bit-identically.
+
 The pre-refactor single-token path is kept behind ``legacy=True`` for
 A/B benchmarking (benchmarks/run.py measures both in the same run).
 """
@@ -58,9 +70,14 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import models
 from ..core import NULL, SimContext, WaitFreeAllocator, hier_pool
+from ..launch.mesh import SERVE_DP_AXIS, make_dp_mesh
+from ..launch.steps import (serve_register_pspec, serve_shardings,
+                            serve_state_pspecs)
 from ..models.decode_init import empty_decode_state, empty_serve_arrays
 from ..models.layers import logits_apply
 from ..models.transformer import DecodeState, forward_decode_chunk
@@ -129,9 +146,9 @@ STATUS_DONE = 2      # 1 iff the slot finished (pages already released)
 STATUS_PAGES = 3     # pages-in-use on the slot's DP shard (broadcast row)
 
 
-def _serve_step(cfg, max_len, eos_id, use_sampler, params, state, last_tok,
-                out_count, budget, temps, topks, seeds, prompt_toks,
-                feed_lens, is_prompt, emit):
+def _serve_step(cfg, max_len, eos_id, use_sampler, axis_name, params, state,
+                last_tok, out_count, budget, temps, topks, seeds,
+                prompt_toks, feed_lens, is_prompt, emit):
     """One fully device-resident engine step (jitted once per chunk T).
 
     prompt_toks: int32[DP, Bl, T] host-provided prompt chunks (ignored
@@ -156,6 +173,15 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, params, state, last_tok,
     packed status int32[4, DP, Bl] (see STATUS_* row indices; the PAGES
     row carries per-shard pages-in-use so occupancy tracking — and the
     scheduler's high-water pin eviction — costs no extra transfer).
+
+    ``axis_name`` is STATIC: set (to the mesh axis) when the step runs
+    under shard_map on the multi-device allocation plane (DESIGN.md
+    §9).  Everything above — forward pass, page alloc/free, rebalance
+    drain/refill, sampling, done-detection — is then device-local by
+    construction (each device owns its shard's HierPool leaves, lanes,
+    refcounts, and KV pages); the ONE collective per step is the
+    all_gather that replicates the packed status row so every host
+    drives admission from the same global view.
     """
     DP, Bl, T = prompt_toks.shape
     gen_col = jnp.zeros((DP, Bl, T), jnp.int32).at[:, :, 0].set(last_tok)
@@ -191,6 +217,10 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, params, state, last_tok,
                         emit.astype(jnp.int32),
                         done.astype(jnp.int32),
                         jnp.broadcast_to(pages_used[:, None], (DP, Bl))])
+    if axis_name is not None:
+        # the step's single collective: only the packed status row
+        # crosses shards (DESIGN.md §9 one-sync argument)
+        status = jax.lax.all_gather(status, axis_name, axis=1, tiled=True)
     return state, last_tok, out_count, status
 
 
@@ -200,15 +230,31 @@ class ServingEngine:
                  greedy: bool = True, chunk_size: int = 8,
                  eos_id: Optional[int] = None, legacy: bool = False,
                  prefix_sharing: bool = True,
-                 sched: Optional[SchedConfig] = None):
+                 sched: Optional[SchedConfig] = None,
+                 mesh="auto"):
         self.cfg = cfg
         self.params = params
         self.dp, self.bl = dp, b_local
         self.max_len = max_len
         self.chunk = max(int(chunk_size), 1)
         self.legacy = legacy
+        # multi-host allocation plane (DESIGN.md §9): with >= dp devices
+        # the engine owns a ("dp",) mesh, shards every DecodeState leaf
+        # and per-slot register over it, and shard_maps the jitted steps
+        # so each device holds exactly its shard's pool/lanes/refcounts/
+        # pin-table/KV pages.  mesh=None (or too few devices) keeps the
+        # single-device vmap semantics — bit-identical outputs.
+        if mesh == "auto":
+            mesh = make_dp_mesh(dp)
+        self.mesh: Optional[Mesh] = mesh
+        self._axis = SERVE_DP_AXIS if mesh is not None else None
         self.state = empty_decode_state(cfg, dp, b_local, max_len,
                                         chunk=self.chunk)
+        self._pspecs = serve_state_pspecs(self.state)
+        self._rspec = serve_register_pspec()
+        if self.mesh is not None:
+            self.state = jax.device_put(
+                self.state, serve_shardings(self.mesh, self._pspecs))
         self.last_tok, self.out_count, self.budget = \
             empty_serve_arrays(dp, b_local)
         # per-slot sampling registers (written at admission, read by the
@@ -216,6 +262,12 @@ class ServingEngine:
         self.temps = jnp.zeros((dp, b_local), jnp.float32)
         self.topks = jnp.zeros((dp, b_local), jnp.int32)
         self.seeds = jnp.zeros((dp, b_local), jnp.int32)
+        if self.mesh is not None:
+            reg_ns = NamedSharding(self.mesh, self._rspec)
+            (self.last_tok, self.out_count, self.budget, self.temps,
+             self.topks, self.seeds) = jax.device_put(
+                (self.last_tok, self.out_count, self.budget, self.temps,
+                 self.topks, self.seeds), reg_ns)
         self.greedy = greedy
         # sequences can never outgrow the page table (maxp * psz tokens,
         # < max_len when max_len is not a page multiple); done-detection
@@ -229,13 +281,28 @@ class ServingEngine:
 
         # fused device-resident step (compiled once per chunk shape
         # T=chunk / T=1, times the sampler flag; all-greedy batches —
-        # the default — never compile or pay for the sampler)
+        # the default — never compile or pay for the sampler).  On the
+        # mesh plane every jitted step is shard_mapped over the ("dp",)
+        # axis — shard-locality is enforced structurally, not just by
+        # the vmap convention (DESIGN.md §9).
+        S, R = self._pspecs, self._rspec
+
+        def wrap(fn, in_specs, out_specs, donate=()):
+            if self.mesh is None:
+                return jax.jit(fn, donate_argnums=donate)
+            return jax.jit(
+                shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False),
+                donate_argnums=donate)
+
         eos = -1 if eos_id is None else int(eos_id)
         self._serve_variants = {
-            flag: jax.jit(
+            flag: wrap(
                 functools.partial(_serve_step, cfg, self.capacity, eos,
-                                  flag),
-                donate_argnums=(1, 2, 3))
+                                  flag, self._axis),
+                in_specs=(P(), S) + (R,) * 10,
+                out_specs=(S, R, R, P()),
+                donate=(1, 2, 3))
             for flag in (False, True)}
         self._sampling_slots: set = set()
         # pre-refactor single-token path (A/B benchmarking); the
@@ -244,8 +311,10 @@ class ServingEngine:
             logits, s = models.decode_step(cfg, p, t, s, active=a)
             return logits, s._replace(pool=hier_pool.rebalance_dp(s.pool))
 
-        self._decode = jax.jit(_legacy_step, donate_argnums=(2,))
-        self._release = jax.jit(_release_slots, donate_argnums=(0,))
+        self._decode = wrap(_legacy_step, in_specs=(P(), R, S, R),
+                            out_specs=(R, S), donate=(2,))
+        self._release = wrap(_release_slots, in_specs=(S, R),
+                             out_specs=S, donate=(0,))
 
         # prefix sharing: only sound when the whole decode state is
         # paged (ring / recurrent layers would need donor state at the
@@ -255,9 +324,11 @@ class ServingEngine:
                 and not self.state.rings and not self.state.rec
                 and self.state.enc_kv is None):
             self.prefix_cache = PrefixCache(cfg.page_size)
-            self._share = jax.jit(
-                functools.partial(share_prefix_step, cfg.page_size),
-                donate_argnums=(0,))
+            self._share = wrap(
+                functools.partial(share_prefix_step, cfg.page_size,
+                                  axis_name=self._axis),
+                in_specs=(S, R, R, P()), out_specs=(S, P()),
+                donate=(0,))
 
         # traffic-aware frontend: admission order / page budgets /
         # preemption / pin policy (DESIGN.md §8).  The default budget is
@@ -278,16 +349,31 @@ class ServingEngine:
                                        self.sched_config.pin_pages)
             self.pin_tables = jnp.full(
                 (dp, self.sched_config.pin_rows, maxp), -1, jnp.int32)
-            self._pin = jax.jit(pin_prefix_step, donate_argnums=(0, 1))
-            self._unpin = jax.jit(unpin_step, donate_argnums=(0, 1))
-            self._share_pinned = jax.jit(
-                functools.partial(share_pinned_step, cfg.page_size),
-                donate_argnums=(0,))
+            if self.mesh is not None:
+                # pin rows are shard-owned like everything else: a pin
+                # on shard d references only shard-d pages, and its
+                # addref/free traffic stays on shard d's device
+                self.pin_tables = jax.device_put(
+                    self.pin_tables, NamedSharding(self.mesh, R))
+            PS = self._pspecs.pool
+            self._pin = wrap(pin_prefix_step,
+                             in_specs=(PS, R, R, R, R, P()),
+                             out_specs=(PS, R), donate=(0, 1))
+            self._unpin = wrap(unpin_step, in_specs=(PS, R, R),
+                               out_specs=(PS, R), donate=(0, 1))
+            self._share_pinned = wrap(
+                functools.partial(share_pinned_step, cfg.page_size,
+                                  axis_name=self._axis),
+                in_specs=(S, R, R, R, P()), out_specs=(S, P()),
+                donate=(0,))
         self._pinned_slots: set = set()
         # host copy of the status PAGES row (per-shard pages-in-use,
         # refreshed by the step's single sync; drives high-water pin
-        # eviction without any extra transfer)
+        # eviction without any extra transfer) + per-shard occupancy
+        # accumulators for the mesh bench (shard_occupancy())
         self.pages_used_shard: List[int] = [0] * dp
+        self._pages_shard_sum = np.zeros(dp, np.int64)
+        self._pages_shard_peak = np.zeros(dp, np.int64)
 
         # host-side wait-free slot allocator: slots are fixed-size blocks.
         n_slots = dp * b_local
@@ -391,11 +477,14 @@ class ServingEngine:
     def free_slot_shards(self) -> set:
         return {s // self.bl for s in self._free_slots}
 
-    def prefix_match(self, req: Request):
+    def prefix_match(self, req: Request, shard: Optional[int] = None):
+        """Trie lookup, restricted to ``shard`` when given — the
+        scheduler always restricts (donor pages are shard-local;
+        DESIGN.md §9), the unrestricted form is diagnostic only."""
         if self.prefix_cache is None:
             return None
         toks = (list(req.prompt) + list(req.out_tokens)) or [1]
-        return self.prefix_cache.match(toks)
+        return self.prefix_cache.match(toks, shard=shard)
 
     def pinned_pages_on(self, shard: int) -> int:
         return self.pins.pages_on(shard) if self.pins is not None else 0
@@ -420,7 +509,10 @@ class ServingEngine:
         req.slot = slot
         self.active[slot] = req
         shared_n = 0
-        if match is not None and d == match.shard:
+        if match is not None:
+            # the scheduler guarantees shard-local matches; _try_share
+            # asserts it, loudly — a cross-shard donor must never be
+            # silently dropped (DESIGN.md §9)
             shared_n = self._try_share(slot, match, len(toks))
         self.pending_tokens[slot] = toks[shared_n:]
         self._fed[slot] = shared_n
@@ -525,6 +617,9 @@ class ServingEngine:
         one jitted call, off the per-token path).  The donor is either
         a live slot or a pinned cache row.  Returns the number of
         tokens now resident in the slot's KV (0 = no sharing)."""
+        assert match.shard == slot // self.bl, (
+            "cross-shard donor: page ids never alias across shards "
+            "(DESIGN.md §9); the scheduler must match shard-locally")
         n = min(match.n_tokens, prompt_len - 1, self.capacity - 1)
         if n < self.cfg.page_size:
             return 0
@@ -617,6 +712,9 @@ class ServingEngine:
         pages_now = int(status[STATUS_PAGES, :, 0].sum())
         self.stats["pages_peak"] = max(self.stats["pages_peak"], pages_now)
         self.stats["pages_sum"] += pages_now
+        row = status[STATUS_PAGES, :, 0].astype(np.int64)
+        self._pages_shard_sum += row
+        np.maximum(self._pages_shard_peak, row, out=self._pages_shard_peak)
 
         now = time.time()
         for slot, req in list(self.active.items()):
@@ -739,6 +837,19 @@ class ServingEngine:
     def pages_mean(self) -> float:
         """Mean pages-in-use per step (from the packed status row)."""
         return self.stats["pages_sum"] / max(self.stats["steps"], 1)
+
+    def shard_occupancy(self) -> Dict[str, list]:
+        """Per-shard pages-in-use statistics over the run (from the
+        status row's PAGES entries — no extra sync): the mesh bench's
+        load-balance axes, and the admission scheduler's placement
+        quality in one place."""
+        steps = max(self.stats["steps"], 1)
+        return {
+            "pages_mean_shard": [round(float(x) / steps, 1)
+                                 for x in self._pages_shard_sum],
+            "pages_peak_shard": [int(x) for x in self._pages_shard_peak],
+            "mesh_devices": 0 if self.mesh is None else self.mesh.size,
+        }
 
     def latency_quantiles(self) -> Dict[str, float]:
         """p50/p99 end-to-end and first-token latency (seconds) over

@@ -174,7 +174,8 @@ class PrefixCache:
         self.remove(pin_pseudo_slot(pin_id))
 
     # -- matching -------------------------------------------------------
-    def match(self, tokens: Sequence[int]) -> Optional[Match]:
+    def match(self, tokens: Sequence[int],
+              shard: Optional[int] = None) -> Optional[Match]:
         """Longest shareable prefix of ``tokens`` among live prompts.
 
         Walks the trie page-by-page, then extends into the donor's
@@ -183,12 +184,26 @@ class PrefixCache:
         the final prompt token is always fed normally so the new slot
         has a live position to sample its first output from.  Returns
         None below one full page (a COW copy wouldn't pay for itself).
+
+        ``shard`` restricts the search to that shard's sub-trie — the
+        cross-host placement contract (DESIGN.md §9): page ids are
+        private to a DP shard, so a donor on shard i is unusable by a
+        request placed on shard j != i EVEN WHEN THE TOKEN KEY MATCHES
+        EXACTLY.  The scheduler queries each admissible shard
+        separately and places the request where its longest shard-local
+        match lives; an unrestricted match (shard=None) is only a
+        diagnostic (best across shards), never a sharing decision.
         """
         limit = len(tokens) - 1
         if limit < self.psz:
             return None
         best: Optional[Match] = None
-        for shard, root in self.roots.items():
+        if shard is None:
+            roots = self.roots.items()
+        else:
+            root = self.roots.get(shard)
+            roots = [] if root is None else [(shard, root)]
+        for shard, root in roots:
             depth_of: Dict[int, int] = {}       # slot -> deepest page match
             node = root
             for i, key in enumerate(self._pages(tokens)):
@@ -283,13 +298,20 @@ class PinnedPrefixes:
 
 # --------------------------------------------------------- device steps
 
-def share_prefix_step(psz: int, state, dst_oh, src_oh, n_tokens):
+def share_prefix_step(psz: int, state, dst_oh, src_oh, n_tokens,
+                      axis_name=None):
     """Map ``n_tokens`` of the src slot's prefix into the dst slot.
 
     dst_oh / src_oh: bool[DP, Bl] one-hots on the SAME shard;
     n_tokens: int32 scalar (>= 1, host-capped at the donor's completed
     length and the page-table capacity).  Jitted once; called per
     admission-with-match, off the per-token path.
+
+    ``axis_name`` names the mesh axis when the call runs under
+    shard_map (DESIGN.md §9): all state mutation is dst-shard-local
+    either way (the one-hots are False everywhere else), but the
+    returned ``ok`` flag must be the dst shard's verdict on every host
+    — one tiny psum replicates it (the call's only collective).
 
     Protocol (all-or-nothing, ``ok`` reports the outcome):
       1. full pages [0, n_tokens // psz) of the donor's table are
@@ -306,11 +328,12 @@ def share_prefix_step(psz: int, state, dst_oh, src_oh, n_tokens):
     """
     src_row = jnp.sum(jnp.where(src_oh[..., None], state.page_tables, 0),
                       axis=(0, 1))                                 # [maxp]
-    return _share_from_row(psz, state, dst_oh, src_row, n_tokens)
+    return _share_from_row(psz, state, dst_oh, src_row, n_tokens,
+                           axis_name)
 
 
 def share_pinned_step(psz: int, state, pin_tables, dst_oh, pin_oh,
-                      n_tokens):
+                      n_tokens, axis_name=None):
     """:func:`share_prefix_step` with a pinned row as the donor.
 
     pin_oh: bool[DP, Npin] one-hot on the dst shard.  The pin row's
@@ -321,10 +344,12 @@ def share_pinned_step(psz: int, state, pin_tables, dst_oh, pin_oh,
     """
     src_row = jnp.sum(jnp.where(pin_oh[..., None], pin_tables, 0),
                       axis=(0, 1))                                 # [maxp]
-    return _share_from_row(psz, state, dst_oh, src_row, n_tokens)
+    return _share_from_row(psz, state, dst_oh, src_row, n_tokens,
+                           axis_name)
 
 
-def _share_from_row(psz: int, state, dst_oh, src_row, n_tokens):
+def _share_from_row(psz: int, state, dst_oh, src_row, n_tokens,
+                    axis_name=None):
     """Shared body: map a donor table row into the dst slot (see
     :func:`share_prefix_step` for the protocol)."""
     DP, Bl, maxp = state.page_tables.shape
@@ -375,6 +400,13 @@ def _share_from_row(psz: int, state, dst_oh, src_row, n_tokens):
     seq_lens = jnp.where(dst_oh & ok, n_tokens, state.seq_lens)
     state = state._replace(kv_pages=kv_pages, page_tables=page_tables,
                            seq_lens=seq_lens, pool=pool)
+    if axis_name is not None:
+        # under shard_map each shard computed its own (meaningless off
+        # the dst shard) ok; replicate the dst shard's verdict so the
+        # host reads one truth — the call's only cross-shard traffic
+        ok = jax.lax.psum(
+            jnp.where(jnp.any(dst_oh), ok, False).astype(jnp.int32),
+            axis_name) > 0
     return state, ok
 
 

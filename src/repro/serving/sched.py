@@ -206,22 +206,35 @@ class AdmissionScheduler:
         return None
 
     def _place(self, engine, req, est):
-        """(match, shard, blocked): a prefix match, an admissible shard
-        holding a free slot (match's shard preferred), or why not."""
+        """(match, shard, blocked): a shard-local prefix match, an
+        admissible shard holding a free slot, or why not.
+
+        Cross-host placement policy (DESIGN.md §9): page ids never
+        alias across shards, so the trie is queried PER admissible
+        shard and the request lands where its longest shard-local
+        donor lives — a donor on an inadmissible (or foreign) shard is
+        worthless even on an exact key match, and the returned match is
+        always on the returned shard by construction.  With no donor
+        anywhere, the shard with the most committed/pinned headroom
+        takes the request (spread the worst case across hosts)."""
         slots = engine.free_slot_shards()
         if not slots:
             return None, None, "slots"
-        match = engine.prefix_match(req)
         pinned = engine.pinned_pages_on
         fits = [s for s in sorted(slots)
                 if est <= self.headroom(s, pinned)]
         if not fits:
-            return match, None, "pages"
-        if match is not None and match.shard in fits:
-            return match, match.shard, None
+            return None, None, "pages"
+        best = None                       # (n_tokens, shard, match)
+        for s in fits:
+            m = engine.prefix_match(req, shard=s)
+            if m is not None and (best is None or m.n_tokens > best[0]):
+                best = (m.n_tokens, s, m)
+        if best is not None:
+            return best[2], best[1], None
         # most headroom first: spread the worst case
         shard = max(fits, key=lambda s: self.headroom(s, pinned))
-        return match, shard, None
+        return None, shard, None
 
     # ------------------------------------------------------ preemption
     def _pick_victim(self, engine, admit_priority: int) -> Optional[int]:

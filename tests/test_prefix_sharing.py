@@ -147,6 +147,27 @@ class TestPrefixCacheTrie:
         m = pc.match([1, 2, 3, 4, 5, 6, 7, 99])
         assert m.shard == 1                      # engine must place there
 
+    def test_shard_restricted_match_rejects_exact_foreign_key(self):
+        """Regression (DESIGN.md §9): a shard-restricted lookup must
+        reject a donor on another shard EVEN ON AN EXACT TOKEN MATCH —
+        page ids never alias across shards, so returning it would let
+        the engine map foreign page ids into a local table."""
+        pc = PrefixCache(page_size=4)
+        toks = [1, 2, 3, 4, 5, 6, 7, 8]
+        pc.insert(0, 1, list(toks))
+        pc.update_progress(0, 8)
+        assert pc.match(toks + [9], shard=1).slot == 0
+        assert pc.match(toks + [9], shard=0) is None, (
+            "exact-key donor on shard 1 leaked into a shard-0 lookup")
+        assert pc.match(toks + [9], shard=7) is None   # no such shard
+        # identical prompt inserted on shard 0 too: each shard's lookup
+        # now resolves to its OWN donor
+        pc.insert(5, 0, list(toks))
+        pc.update_progress(5, 8)
+        m0, m1 = pc.match(toks + [9], shard=0), pc.match(toks + [9], shard=1)
+        assert (m0.slot, m0.shard) == (5, 0)
+        assert (m1.slot, m1.shard) == (0, 1)
+
 
 # ------------------------------------------------------------ engine level
 
@@ -326,6 +347,66 @@ class TestEnginePrefixSharing:
         eng_pin.flush_pins()
         assert eng_pin.page_occupancy() == 0.0
         assert eng_raw.page_occupancy() == 0.0
+
+    def test_identical_prompts_on_two_shards_share_shard_locally(
+            self, engine_setup):
+        """Regression (DESIGN.md §9): the same hot prompt lands on both
+        shards; every share must use a donor on the request's OWN shard
+        — an exact-key donor on the other shard is rejected (the
+        engine's cross-shard assert would trip), and a request placed
+        on a donor-less shard admits unshared rather than aliasing
+        foreign page ids.  Outputs match the unshared run throughout."""
+        cfg, params = engine_setup                       # psz = 8
+        rng = np.random.RandomState(21)
+        hot = list(rng.randint(1, 255, 20))              # 2.5 pages
+
+        def mk():
+            return ServingEngine(cfg, params, dp=2, b_local=2, max_len=64,
+                                 chunk_size=16)
+
+        eng = mk()
+        ra = Request(0, prompt=list(hot), max_new_tokens=12)
+        eng.submit(ra)
+        eng.step(); eng.step()                           # A's prompt in KV
+        shard_a = ra.slot // eng.bl
+
+        rb = Request(1, prompt=list(hot), max_new_tokens=12)
+        eng.submit(rb)
+        eng.step()
+        assert eng.stats["prefix_shared_reqs"] == 1
+        assert rb.slot // eng.bl == shard_a, (
+            "B must be placed next to its only donor")
+
+        # shard_a is now full: C lands on the other shard, where the
+        # exact-key donors are unreachable — it must admit UNSHARED
+        rc = Request(2, prompt=list(hot), max_new_tokens=4)
+        eng.submit(rc)
+        eng.step()
+        assert rc.slot // eng.bl == 1 - shard_a
+        assert eng.stats["prefix_shared_reqs"] == 1, (
+            "cross-shard donor was used for an exact-key match")
+        eng.step()                                       # C's pages resident
+
+        # D: donors now exist on BOTH shards; only shard 1-shard_a has
+        # a free slot, so D must share from C there, shard-locally
+        rd = Request(3, prompt=list(hot), max_new_tokens=4)
+        eng.submit(rd)
+        eng.step()
+        assert rd.slot // eng.bl == 1 - shard_a
+        assert eng.stats["prefix_shared_reqs"] == 2
+        eng.run(max_steps=200)
+        assert all(r.done for r in (ra, rb, rc, rd))
+        assert eng.page_occupancy() == 0.0
+
+        ref = mk()
+        ref_reqs = [Request(10 + i, prompt=list(hot), max_new_tokens=mn)
+                    for i, mn in enumerate((12, 12, 4, 4))]
+        ref.prefix_cache = None                          # unshared baseline
+        for r in ref_reqs:
+            ref.submit(r)
+        ref.run(max_steps=200)
+        assert [r.out_tokens for r in (ra, rb, rc, rd)] == \
+            [r.out_tokens for r in ref_reqs]
 
     def test_sharing_disabled_for_non_paged_archs(self):
         """Ring / recurrent layers cannot share prefixes (their state at
