@@ -13,10 +13,11 @@ on them:
                                cost independent of m
   jax_paged_kv_append        — paged KV append + append_chunk throughput
   serving_throughput         — continuous-batching engine tok/s:
-                               legacy (pre-refactor single-token) vs
-                               chunked device-resident step, on a
-                               decode-heavy and a prompt-heavy mix,
-                               in the same run
+                               width-1 token lanes (chunk=1, the
+                               single-token baseline the deleted
+                               legacy path degenerated to) vs full
+                               chunked lanes, on a decode-heavy and a
+                               prompt-heavy mix, in the same run
   serving_pool_churn         — many short requests with a hot ~90%-shared
                                prompt prefix: prefix sharing (refcounted
                                pages + COW, DESIGN.md §7) vs unshared,
@@ -30,6 +31,12 @@ on them:
                                drain-to-idle gaps vs pinning disabled —
                                token-identical to an unconstrained run,
                                zero leaks after drain + pin flush
+  serving_speculative        — 80%-hot-prefix greedy trace with repeated
+                               full prompts (DESIGN.md §10): draft
+                               accept rate, generated tok/s vs the
+                               non-speculative run of the same trace,
+                               whole-page rollback volume, token
+                               identity, zero leaks
   serving_mesh_shards        — dp=4 engine on the shard_map allocation
                                plane (DESIGN.md §9; a real device mesh
                                when the process has >= 4 devices):
@@ -259,11 +266,10 @@ def jax_paged_kv_append():
           f"chunk_us_per_token={usc / (16 * C):.3f}")
 
 
-def _run_serving_mix(cfg, params, prompts, max_new, legacy, chunk):
-    import numpy as np
+def _run_serving_mix(cfg, params, prompts, max_new, chunk):
     from repro.serving.engine import Request, ServingEngine
     eng = ServingEngine(cfg, params, dp=2, b_local=2, max_len=96,
-                        chunk_size=chunk, legacy=legacy)
+                        chunk_size=chunk)
     # warmup: compile every step shape (chunk prefill, T=1 decode,
     # release) off the clock
     w = Request(-1, prompt=list(range(2, 2 + chunk + 2)), max_new_tokens=2)
@@ -288,8 +294,11 @@ def _run_serving_mix(cfg, params, prompts, max_new, legacy, chunk):
 
 
 def serving_throughput():
-    """Legacy vs chunked engine on decode-heavy and prompt-heavy mixes
-    (same params, same run) + BENCH_serving.json for trend tracking."""
+    """Width-1 vs chunked token lanes on decode-heavy and prompt-heavy
+    mixes (same params, same run) + BENCH_serving.json for trend
+    tracking.  chunk=1 runs the SAME unified step one token per lane
+    per step — the baseline the deleted legacy path degenerated to —
+    so the A/B now isolates exactly the lane-width win."""
     import numpy as np
     import jax
     from repro import models
@@ -305,26 +314,141 @@ def serving_throughput():
     }
     report = {"config": cfg.name, "chunk_size": chunk, "mixes": {}}
     for mix, (prompts, max_new) in mixes.items():
-        legacy = _run_serving_mix(cfg, params, prompts, max_new,
-                                  legacy=True, chunk=chunk)
+        width1 = _run_serving_mix(cfg, params, prompts, max_new, chunk=1)
         chunked = _run_serving_mix(cfg, params, prompts, max_new,
-                                   legacy=False, chunk=chunk)
+                                   chunk=chunk)
         speedup = (chunked["total_tok_per_s"] /
-                   max(legacy["total_tok_per_s"], 1e-9))
-        report["mixes"][mix] = {"legacy": legacy, "chunked": chunked,
+                   max(width1["total_tok_per_s"], 1e-9))
+        report["mixes"][mix] = {"width1": width1, "chunked": chunked,
                                 "speedup_total": round(speedup, 2)}
         print(f"serving_throughput,{chunked['us_per_step']},mix={mix} "
               f"chunked_tok_per_s={chunked['total_tok_per_s']} "
-              f"legacy_tok_per_s={legacy['total_tok_per_s']} "
+              f"width1_tok_per_s={width1['total_tok_per_s']} "
               f"speedup={speedup:.2f}x steps={chunked['steps']} "
               f"alloc_O1_max={chunked['alloc_O1_max']}")
     report["mixes"]["pool_churn"] = serving_pool_churn(cfg, params)
     report["mixes"]["overload"] = serving_overload(cfg, params)
     report["mixes"]["mesh_shards"] = serving_mesh_shards(cfg, params)
+    report["mixes"]["speculative"] = serving_speculative(cfg, params)
     with open("BENCH_serving.json", "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
     return report
+
+
+def serving_speculative(cfg, params):
+    """Speculative decode on shared prefixes (DESIGN.md §10): an
+    80%-hot-prefix greedy trace where hot traffic repeats full prompts
+    (the production shape speculation wins on — retried/templated
+    queries).  Reports the draft accept rate, generated-token
+    throughput vs the non-speculative run of the same trace, the
+    whole-page over-allocation rolled back by rejected drafts, and the
+    usual identity/leak axes."""
+    import numpy as np
+    from repro.serving.engine import Request, ServingEngine
+
+    rng = np.random.RandomState(0)
+    hot = list(rng.randint(1, 255, 16))                  # 2 pages of 8
+    uniq = [hot + list(rng.randint(1, 255, 4 + i)) for i in range(4)]
+    spec = []
+    for i in range(24):
+        if rng.random_sample() < 0.8:
+            spec.append(list(uniq[rng.randint(len(uniq))]))   # hot repeat
+        else:
+            spec.append(list(rng.randint(1, 255, 8 + i % 9)))
+
+    def drive(eng, reqs, max_steps=2000):
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=max_steps)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        return dt
+
+    def spec_stats(eng):
+        s = eng.stats
+        return {
+            "steps": s["steps"],
+            "spec_lanes": s["spec_lanes"],
+            "drafted": s["spec_drafted"],
+            "accepted": s["spec_accepted"],
+            "accept_rate": round(s["spec_accepted"]
+                                 / max(s["spec_drafted"], 1), 2),
+            "accept_hist": {str(k): v
+                            for k, v in sorted(s["accept_hist"].items())},
+            "pages_rolled_back": s["spec_pages_rolled_back"],
+            "lane_hist": {str(k): v
+                          for k, v in sorted(s["chunk_hist"].items())},
+        }
+
+    def run(speculate):
+        eng = ServingEngine(cfg, params, dp=1, b_local=4, max_len=96,
+                            chunk_size=16, speculate=speculate,
+                            draft_len=4)
+        # warm twice: the first pass over the unique hot prompts records
+        # their continuations, the second replays them so draft lanes
+        # fire and the speculative step variant compiles off the clock
+        for w in range(2):
+            drive(eng, [Request(-1 - i - 100 * w, prompt=list(p),
+                                max_new_tokens=8)
+                        for i, p in enumerate(uniq)], max_steps=500)
+        for k in ("steps", "tokens_out", "prompt_tokens", "spec_lanes",
+                  "spec_drafted", "spec_accepted",
+                  "spec_pages_rolled_back"):
+            eng.stats[k] = 0
+        eng.stats["accept_hist"] = {}
+        eng.stats["chunk_hist"] = {}
+        reqs = [Request(i, prompt=list(p), max_new_tokens=8)
+                for i, p in enumerate(spec)]
+        dt = drive(eng, reqs)
+        row = spec_stats(eng)
+        row["gen_tok_per_s"] = round(eng.stats["tokens_out"] / dt, 1)
+        row["leak_free"] = eng.page_occupancy() == 0.0
+        return [r.out_tokens for r in reqs], row, eng
+
+    out_ns, base, _ = run(False)
+    out_sp, specd, eng = run(True)
+
+    # rollback probe: greedy exact-match drafting only rejects when the
+    # recorded history is wrong, so force it — poison each hot prompt's
+    # continuation with its real first token + garbage and replay.
+    # Measures the cost of worst-case rejection: every draft rolled
+    # back, §4.2 and conservation intact, still leak-free.
+    for i, p in enumerate(uniq):
+        key = eng.spec_store.key_of(p)
+        real = out_sp[spec.index(p)] if p in spec else None
+        first = (real[0],) if real else ()
+        tail = tuple(p[len(key):])
+        garbage = tuple((t + 101) % 250 + 1 for t in range(4))
+        eng.spec_store.streams.pop(key, None)
+        eng.spec_store.record(key, tail + first + garbage)
+    s0 = dict(eng.stats)
+    probe = [Request(1000 + i, prompt=list(p), max_new_tokens=8)
+             for i, p in enumerate(uniq * 2)]
+    drive(eng, probe, max_steps=500)
+    rejected_probe = {
+        "drafted": eng.stats["spec_drafted"] - s0["spec_drafted"],
+        "accepted": eng.stats["spec_accepted"] - s0["spec_accepted"],
+        "pages_rolled_back": (eng.stats["spec_pages_rolled_back"]
+                              - s0["spec_pages_rolled_back"]),
+        "leak_free": eng.page_occupancy() == 0.0,
+    }
+
+    row = {"baseline": base, "speculative": specd,
+           "rejected_probe": rejected_probe,
+           "token_identical": out_ns == out_sp,
+           "steps_saved": base["steps"] - specd["steps"],
+           "speedup_gen": round(specd["gen_tok_per_s"]
+                                / max(base["gen_tok_per_s"], 1e-9), 2)}
+    print(f"serving_speculative,0,accept_rate={specd['accept_rate']} "
+          f"steps {base['steps']}->{specd['steps']} "
+          f"gen_tok_per_s {base['gen_tok_per_s']}->"
+          f"{specd['gen_tok_per_s']} "
+          f"probe_rolled_back={rejected_probe['pages_rolled_back']} "
+          f"token_identical={row['token_identical']} "
+          f"leak_free={specd['leak_free'] and rejected_probe['leak_free']}")
+    return row
 
 
 def serving_mesh_shards(cfg, params):

@@ -11,9 +11,10 @@ page release all live inside the jitted step, so the host syncs once
 per step on a packed status array.
 
   PYTHONPATH=src python examples/serve_paged.py [--arch recurrentgemma-2b]
-  PYTHONPATH=src python examples/serve_paged.py --legacy   # pre-refactor path
   PYTHONPATH=src python examples/serve_paged.py \
       --hot-prefix 24 --pin-pages 12 --bursts 3 --interactive-frac 0.25
+  PYTHONPATH=src python examples/serve_paged.py \
+      --hot-prefix 24 --speculate --draft-len 4 --chunk-buckets 1,4,8
 """
 
 import argparse
@@ -37,8 +38,18 @@ def main():
                     help="fixed prompt length (0 = random 4..24)")
     ap.add_argument("--chunk", type=int, default=8,
                     help="prefill chunk size (tokens per step)")
-    ap.add_argument("--legacy", action="store_true",
-                    help="pre-refactor single-token host-synced path")
+    ap.add_argument("--chunk-buckets", default="",
+                    help="comma-separated SLO-aware prefill widths, e.g. "
+                         "1,4,8 (DESIGN §10; empty = fixed --chunk)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative decode on shared prefixes "
+                         "(draft from hot-prefix continuation history, "
+                         "verify+rollback inside the fused step)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="draft tokens per speculative lane")
+    ap.add_argument("--repeat-frac", type=float, default=0.0,
+                    help="fraction of requests repeating a previous "
+                         "full prompt (the traffic speculation wins on)")
     ap.add_argument("--hot-prefix", type=int, default=0, metavar="N",
                     help="prepend a common N-token prefix to every prompt "
                          "(exercises refcounted prefix sharing, DESIGN §7)")
@@ -61,21 +72,30 @@ def main():
 
     cfg = smoke_config(get_config(args.arch))
     params = models.init_params(cfg, jax.random.PRNGKey(0))
+    buckets = tuple(int(b) for b in args.chunk_buckets.split(",") if b)
     engine = ServingEngine(cfg, params, dp=2, b_local=4, max_len=96,
                            scheduler_lanes=4, chunk_size=args.chunk,
-                           legacy=args.legacy,
-                           sched=SchedConfig(pin_pages=args.pin_pages))
+                           speculate=args.speculate,
+                           draft_len=args.draft_len,
+                           sched=SchedConfig(pin_pages=args.pin_pages,
+                                             chunk_buckets=buckets))
 
     rng = np.random.RandomState(0)
     hot = list(rng.randint(1, cfg.vocab - 1, args.hot_prefix))
     reqs = []
+    prompts = []
     for rid in range(args.requests):
         plen = args.prompt_len or rng.randint(4, 24)
         slo = ("interactive"
                if rng.random_sample() < args.interactive_frac
                else "standard")
+        if prompts and rng.random_sample() < args.repeat_frac:
+            prompt = list(prompts[rng.randint(len(prompts))])
+        else:
+            prompt = hot + list(rng.randint(1, cfg.vocab - 1, plen))
+        prompts.append(prompt)
         reqs.append(Request(
-            rid, prompt=hot + list(rng.randint(1, cfg.vocab - 1, plen)),
+            rid, prompt=prompt,
             max_new_tokens=args.max_new, slo=slo,
             temperature=args.temperature, top_k=args.top_k, seed=rid))
 
@@ -93,8 +113,9 @@ def main():
     s = engine.stats
     lat = engine.latency_quantiles()
     total = s["tokens_out"] + s["prompt_tokens"]
-    print(f"arch={cfg.name} path={'legacy' if args.legacy else 'chunked'} "
-          f"chunk={args.chunk} bursts={args.bursts}")
+    print(f"arch={cfg.name} chunk={args.chunk} "
+          f"buckets={engine.scheduler.buckets(args.chunk)} "
+          f"bursts={args.bursts} lane_hist={s['chunk_hist']}")
     print(f"requests={s['admitted']} gen_tokens={s['tokens_out']} "
           f"prompt_tokens={s['prompt_tokens']} steps={s['steps']} "
           f"wall={dt:.1f}s throughput={total/dt:.1f} tok/s "
@@ -115,6 +136,12 @@ def main():
           f"deferred={ss['deferred']} rejected={ss['rejected']} "
           f"pins created={s['pins_created']} hits={s['pin_hit_reqs']} "
           f"({s['pin_hit_tokens']} tokens) evicted={ss['pins_evicted']}")
+    if engine.speculate:
+        rate = s["spec_accepted"] / max(s["spec_drafted"], 1)
+        print(f"speculative: {s['spec_lanes']} draft lanes, "
+              f"{s['spec_drafted']} drafted, {s['spec_accepted']} accepted "
+              f"(rate={rate:.2f}), {s['spec_pages_rolled_back']} pages "
+              f"rolled back, accept_hist={s['accept_hist']}")
     print(f"host admission worst-case steps={s['alloc_steps_max']} "
           f"(paper Result 1: O(1))")
     engine.flush_pins()

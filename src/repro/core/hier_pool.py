@@ -139,6 +139,30 @@ def alloc_or_shared(pool: HierPool, want: jax.Array
     return pool._replace(shared=shared), ids
 
 
+def alloc_n_or_shared(pool: HierPool, counts: jax.Array,
+                      max_per_lane: int) -> Tuple[HierPool, jax.Array]:
+    """Batched lane-first allocate with a shared-pool fallback.
+
+    The chunked analogue of :func:`alloc_or_shared`: lanes whose
+    private stack covers their whole demand are served exactly as
+    :func:`alloc_n` serves them (identical grants — the serving hot
+    path, where §4.2 sizing plus the per-step rebalance make the
+    fallback dead code); a lane whose private stack cannot cover the
+    demand takes its WHOLE batch from the shared pool instead
+    (all-or-nothing per lane either way — a chunk is never granted
+    half from each level).  Callers looping raw ``decode_step_chunk``
+    without a rebalance degrade to the shared pool rather than
+    silently write through NULL page ids once the warm stock is gone.
+    """
+    counts = jnp.clip(counts.astype(jnp.int32), 0, max_per_lane)
+    pool, ids = alloc_n(pool, counts, max_per_lane)
+    miss = (counts > 0) & ~block_pool.granted_mask(ids, counts)
+    shared, got = block_pool.alloc_n(
+        pool.shared, jnp.where(miss, counts, 0), max_per_lane)
+    ids = jnp.where(miss[:, None], got, ids)
+    return pool._replace(shared=shared), ids
+
+
 def alloc_from_shared(pool: HierPool, counts: jax.Array,
                       max_per_lane: int) -> Tuple[HierPool, jax.Array]:
     """Bulk user grants straight from the shared pool — the admission /
@@ -330,6 +354,14 @@ def alloc_n_dp(pool: HierPool, counts: jax.Array,
                max_per_lane: int) -> Tuple[HierPool, jax.Array]:
     """counts int32[DP, L] -> ids int32[DP, L, K]."""
     return jax.vmap(lambda p, c: alloc_n(p, c, max_per_lane),
+                    in_axes=(DP_AXES, 0))(pool, counts)
+
+
+def alloc_n_or_shared_dp(pool: HierPool, counts: jax.Array,
+                         max_per_lane: int) -> Tuple[HierPool, jax.Array]:
+    """counts int32[DP, L] -> ids int32[DP, L, K] (lane-first batched
+    allocate, whole-batch shared fallback per denied lane)."""
+    return jax.vmap(lambda p, c: alloc_n_or_shared(p, c, max_per_lane),
                     in_axes=(DP_AXES, 0))(pool, counts)
 
 

@@ -139,6 +139,35 @@ def append_chunk(cache: PagedKVCache, k: jax.Array, v: jax.Array,
     return PagedKVCache(pool, k_pages, v_pages, page_tables, seq_lens), ok
 
 
+def rollback(cache: PagedKVCache, n_tokens: jax.Array) -> PagedKVCache:
+    """Un-append the last ``n_tokens[s]`` tokens of each sequence.
+
+    The cache-level form of the serving step's speculative rollback
+    (DESIGN.md §10): a rejected draft keeps its accepted prefix and
+    returns exactly the whole-page over-allocation — pages that hold no
+    remaining token — to the pool, in one fixed-shape release
+    (:func:`block_pool.free` refcount semantics: a page another
+    sequence still maps merely loses one reference).  The partial page
+    the surviving prefix ends in stays mapped; its stale tail positions
+    sit beyond ``seq_lens`` and are overwritten by the next append
+    before any read can see them.  O(max_seqs * max_pages_per_seq),
+    independent of num_pages.
+    """
+    S, P = cache.page_tables.shape
+    psz = page_size(cache)
+    n = jnp.clip(n_tokens.astype(jnp.int32), 0, cache.seq_lens)
+    new_len = cache.seq_lens - n
+    keep_pages = (new_len + psz - 1) // psz
+    have_pages = (cache.seq_lens + psz - 1) // psz
+    k = jnp.arange(P, dtype=jnp.int32)[None, :]
+    roll = (k >= keep_pages[:, None]) & (k < have_pages[:, None])
+    to_free = jnp.where(roll, cache.page_tables, NULL)
+    pool = block_pool.free(cache.pool, to_free.reshape(-1))
+    page_tables = jnp.where(roll, NULL, cache.page_tables)
+    return PagedKVCache(pool, cache.k_pages, cache.v_pages,
+                        page_tables, new_len)
+
+
 def release(cache: PagedKVCache, seq_mask: jax.Array) -> PagedKVCache:
     """Release all pages of the masked sequences (one batch call).
 

@@ -26,7 +26,13 @@ Three checkers:
    — a preempted lane may not retain pages (the scheduler's page-budget
    accounting depends on it).
 
-4. :class:`WGStackChecker` — a small Wing & Gong style exhaustive
+4. :func:`check_speculative_history` — speculative-episode completeness
+   (DESIGN.md §10): a rejected draft must free exactly its whole-page
+   over-allocation (granted − kept), on its own shard — leak and theft
+   detection over ``spec``-tagged alloc_n / spec_rollback ops, on top
+   of the sharded batch checks.
+
+5. :class:`WGStackChecker` — a small Wing & Gong style exhaustive
    linearizability checker for stack histories (used on the P-SIM shared
    stack with small histories).
 """
@@ -103,6 +109,12 @@ def expand_batch_history(history: Sequence[OpRecord]) -> List[OpRecord]:
       block ids) becomes one ``free`` per released id — a preemption IS
       a batch free performed on the victim's behalf, so the interval
       reasoning is identical;
+    * ``spec_rollback`` (arg = iterable of released block ids; the
+      serving step returning a rejected draft's whole-page
+      over-allocation) becomes one ``free`` per id — a rollback IS a
+      batch free of same-step grants, so it must linearize like one
+      (the episode-completeness conditions are a separate check,
+      :func:`check_speculative_history`);
     * ``allocate`` / ``free`` pass through unchanged.
 
     Every expanded op inherits the batch op's invocation/response
@@ -123,7 +135,7 @@ def expand_batch_history(history: Sequence[OpRecord]) -> List[OpRecord]:
                     opid=op.opid * serial + j, pid=op.pid, name="allocate",
                     arg=None, invoke_step=op.invoke_step, steps=op.steps,
                     result=b, response_step=op.response_step))
-        elif op.name == "free_n":
+        elif op.name in ("free_n", "spec_rollback"):
             ids = [b for b in (op.arg or []) if b is not None and b >= 0]
             for j, b in enumerate(ids):
                 out.append(OpRecord(
@@ -266,7 +278,7 @@ def check_cross_shard_frees(history: Sequence[OpRecord]) -> List[str]:
                     grant(shard, b)
         elif op.name == "free":
             release(shard, op.arg, op)
-        elif op.name in ("free_n", ):
+        elif op.name in ("free_n", "spec_rollback"):
             for b in (op.arg or []):
                 if b is not None and b >= 0:
                     release(shard, b, op)
@@ -274,6 +286,80 @@ def check_cross_shard_frees(history: Sequence[OpRecord]) -> List[str]:
             for b in (op.result or []):
                 if b is not None and b >= 0:
                     release(shard, b, op)
+    return errs
+
+
+def check_speculative_history(history: Sequence[OpRecord]) -> List[str]:
+    """Speculative-episode completeness on top of the sharded batch
+    checks (DESIGN.md §10 draft-page ownership).
+
+    A speculative *episode* is one slot's draft lane in one serving
+    step: an ``alloc_n`` grant of the lane's whole-page over-allocation
+    (``meta["spec"] = episode id``), the verify decision recording the
+    pages the accepted prefix keeps (``meta["kept"]`` on the rollback
+    op), and a ``spec_rollback`` releasing the rejected tail
+    (``meta["spec"]`` matching, arg = released ids).  On top of
+    :func:`check_sharded_batch_history` (double-grant /
+    free-while-available per shard, cross-shard theft, with rollbacks
+    expanding to frees) this enforces, per episode:
+
+    * **same shard** — every op of an episode carries one shard tag
+      (a draft's pages come from its own slot's lane and must return
+      there; crossing shards would corrupt a foreign id space);
+    * **kept ⊆ granted** — the verify step cannot keep a page the
+      grant never handed out (kept-set theft);
+    * **released == granted − kept**, exactly:
+        - a granted, unkept page missing from the release is a *leak*
+          (the rejected draft retained its over-allocation — the §4.2
+          slack and the scheduler's budget both silently shrink);
+        - a released page outside granted − kept is a *theft* (the
+          rollback freed a kept page, or another lane's live page).
+      A missing rollback op is fine only for a full accept
+      (granted == kept).
+    """
+    errs = check_sharded_batch_history(history)
+    episodes: Dict[Any, dict] = {}
+    for op in history:
+        if not op.completed or "spec" not in op.meta:
+            continue
+        ep = episodes.setdefault(
+            op.meta["spec"],
+            {"granted": set(), "kept": set(), "freed": set(),
+             "shards": set(), "ops": []})
+        ep["shards"].add(op.meta.get("shard", 0))
+        ep["ops"].append(op.opid)
+        if op.name in ("alloc_n", "allocate"):
+            ids = op.result if op.name == "alloc_n" else [op.result]
+            ep["granted"] |= {b for b in (ids or [])
+                              if b is not None and b >= 0}
+            ep["kept"] |= {b for b in op.meta.get("kept", [])
+                           if b is not None and b >= 0}
+        elif op.name in ("spec_rollback", "free_n", "free"):
+            ids = op.arg if op.name != "free" else [op.arg]
+            ep["freed"] |= {b for b in (ids or [])
+                            if b is not None and b >= 0}
+            ep["kept"] |= {b for b in op.meta.get("kept", [])
+                           if b is not None and b >= 0}
+    for eid, ep in sorted(episodes.items(), key=lambda kv: str(kv[0])):
+        if len(ep["shards"]) > 1:
+            errs.append(f"spec episode {eid}: ops span shards "
+                        f"{sorted(ep['shards'])} — a draft's pages must "
+                        f"live and die on its own shard")
+        stolen_kept = ep["kept"] - ep["granted"]
+        if stolen_kept:
+            errs.append(f"spec episode {eid}: kept blocks "
+                        f"{sorted(stolen_kept)} never granted to the "
+                        f"draft lane")
+        expect = ep["granted"] - ep["kept"]
+        leaked = expect - ep["freed"]
+        theft = ep["freed"] - expect
+        if leaked:
+            errs.append(f"spec episode {eid}: rejected draft retained "
+                        f"blocks {sorted(leaked)} (leak)")
+        if theft:
+            errs.append(f"spec episode {eid}: rollback released blocks "
+                        f"{sorted(theft)} outside its over-allocation "
+                        f"(theft)")
     return errs
 
 

@@ -8,6 +8,12 @@ prefixes cache-pinned across request lifetimes, ``--page-budget``
 tightens per-shard admission (forcing deferral/preemption under load),
 ``--interactive-frac`` tags a fraction of requests into the
 higher-priority SLO class.
+
+Token-lane knobs (DESIGN.md §10): ``--chunk-buckets`` hands the
+scheduler a static set of prefill lane widths to shrink into when
+latency-class work waits; ``--speculate``/``--draft-len`` turn on
+speculative decode on shared prefixes (``--repeat-frac`` makes part of
+the trace repeat full prompts — the traffic shape speculation wins on).
 """
 
 from __future__ import annotations
@@ -40,6 +46,19 @@ def main(argv=None):
                          "(0 = pool capacity)")
     ap.add_argument("--interactive-frac", type=float, default=0.0,
                     help="fraction of requests in the interactive class")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative decode on shared prefixes "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="draft tokens per speculative lane")
+    ap.add_argument("--chunk-buckets", default="",
+                    help="comma-separated SLO-aware prefill lane widths "
+                         "(e.g. 1,4,8); empty = fixed chunk")
+    ap.add_argument("--hot-prefix", type=int, default=0, metavar="N",
+                    help="prepend a common N-token prefix to every prompt")
+    ap.add_argument("--repeat-frac", type=float, default=0.0,
+                    help="fraction of requests repeating a previous full "
+                         "prompt (the speculative fast path)")
     ap.add_argument("--mesh", choices=("auto", "off"), default="auto",
                     help="shard_map the allocation plane over a ('dp',) "
                          "device mesh when >= dp devices exist "
@@ -50,11 +69,15 @@ def main(argv=None):
     if args.smoke:
         cfg = smoke_config(cfg)
     params = models.init_params(cfg, jax.random.PRNGKey(0))
+    buckets = tuple(int(b) for b in args.chunk_buckets.split(",") if b)
     engine = ServingEngine(cfg, params, dp=args.dp, b_local=args.b_local,
                            max_len=args.max_len,
+                           speculate=args.speculate,
+                           draft_len=args.draft_len,
                            mesh=("auto" if args.mesh == "auto" else None),
                            sched=SchedConfig(pin_pages=args.pin_pages,
-                                             page_budget=args.page_budget))
+                                             page_budget=args.page_budget,
+                                             chunk_buckets=buckets))
     if engine.mesh is not None:
         print(f"allocation plane: shard_map over {engine.mesh} "
               f"({engine.dp} shard-owning devices)")
@@ -62,13 +85,19 @@ def main(argv=None):
         print(f"allocation plane: single-device vmap "
               f"({len(jax.devices())} device(s) for dp={engine.dp})")
     rng = np.random.RandomState(0)
+    hot = list(rng.randint(1, cfg.vocab - 1, args.hot_prefix))
+    prompts = []
     for rid in range(args.requests):
         slo = ("interactive" if rng.random_sample() < args.interactive_frac
                else "standard")
-        engine.submit(Request(
-            rid, prompt=list(rng.randint(1, cfg.vocab - 1,
-                                         rng.randint(4, 12))),
-            max_new_tokens=args.max_new, slo=slo))
+        if prompts and rng.random_sample() < args.repeat_frac:
+            prompt = list(prompts[rng.randint(len(prompts))])
+        else:
+            prompt = hot + list(rng.randint(1, cfg.vocab - 1,
+                                            rng.randint(4, 12)))
+        prompts.append(prompt)
+        engine.submit(Request(rid, prompt=prompt,
+                              max_new_tokens=args.max_new, slo=slo))
     t0 = time.time()
     engine.run()
     dt = time.time() - t0
@@ -86,6 +115,14 @@ def main(argv=None):
           f"deferred={ss['deferred']} rejected={ss['rejected']} "
           f"pins created={s['pins_created']} "
           f"hits={s['pin_hit_reqs']} evicted={ss['pins_evicted']}")
+    print(f"lane widths: {s['chunk_hist']} "
+          f"(buckets={engine.scheduler.buckets(engine.chunk)})")
+    if engine.speculate:
+        rate = s["spec_accepted"] / max(s["spec_drafted"], 1)
+        print(f"speculative: drafted={s['spec_drafted']} "
+              f"accepted={s['spec_accepted']} (rate={rate:.2f}) "
+              f"pages_rolled_back={s['spec_pages_rolled_back']} "
+              f"accept_hist={s['accept_hist']}")
     occ = engine.shard_occupancy()
     print(f"shard occupancy: mean={occ['pages_mean_shard']} "
           f"peak={occ['pages_peak_shard']} pages per shard")

@@ -182,6 +182,10 @@ def build_prefill_step(cfg: ModelConfig):
 
 
 def build_serve_step(cfg: ModelConfig):
+    """Dry-run / roofline decode cell: one width-1 token lane per slot
+    (``models.decode_step`` wraps ``forward_decode_chunk`` at T=1 —
+    the only decode entry point since the single-token path was
+    deleted; DESIGN.md §10)."""
     def serve_step(params, tokens, state):
         return models.decode_step(cfg, params, tokens, state)
     return serve_step

@@ -2,5 +2,4 @@ from .model import (param_defs, init_params, param_shapes, count_params,
                     count_active_params, loss_fn, prefill, decode_step,
                     decode_step_chunk)
 from .transformer import (DecodeState, decode_state_defs, forward_train,
-                          forward_prefill, forward_decode,
-                          forward_decode_chunk, model_defs)
+                          forward_prefill, forward_decode_chunk, model_defs)

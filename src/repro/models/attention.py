@@ -171,39 +171,6 @@ def local_attention(
     return out.swapaxes(0, 1).reshape(B, Sq, H, hd)
 
 
-def decode_attention_paged(
-    q: jax.Array,                 # [B, H, hd] — single query token
-    k_pages: jax.Array,           # [num_pages, psz, KH, hd]
-    v_pages: jax.Array,
-    page_table: jax.Array,        # int32[B, max_pages]
-    seq_lens: jax.Array,          # int32[B]
-) -> jax.Array:
-    """Reference paged decode attention (jnp oracle; kernel in kernels/).
-
-    Gathers each sequence's pages through its block table and performs
-    masked single-query attention.  Bytes ~ the live KV working set —
-    exactly the memory-bound profile the paged_attention kernel tiles.
-    """
-    B, H, hd = q.shape
-    n_pages, psz, KH, _ = k_pages.shape
-    max_pages = page_table.shape[1]
-    L = max_pages * psz
-    safe = jnp.maximum(page_table, 0)
-    k = k_pages[safe]                         # [B, max_pages, psz, KH, hd]
-    v = v_pages[safe]
-    k = k.reshape(B, L, KH, hd)
-    v = v.reshape(B, L, KH, hd)
-    k = _expand_kv(k, H)
-    v = _expand_kv(v, H)
-    pos = jnp.arange(L)
-    valid = (pos[None, :] < seq_lens[:, None]) & jnp.repeat(
-        page_table >= 0, psz, axis=1)
-    s = jnp.einsum("bhd,bkhd->bhk", q, k) / (hd ** 0.5)
-    s = jnp.where(valid[:, None], s.astype(jnp.float32), NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhk,bkhd->bhd", p.astype(q.dtype), v)
-
-
 def attention_train(cfg, params, x, kind: str, positions=None,
                     causal: bool = True):
     """Full-sequence attention layer application (train/prefill).

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from .layers import (chunked_softmax_xent, init_tree, is_def, logits_apply,
                      shape_tree)
-from .transformer import (DecodeState, forward_decode, forward_decode_chunk,
+from .transformer import (DecodeState, forward_decode_chunk,
                           forward_prefill, forward_train, model_defs)
 
 
@@ -79,9 +79,22 @@ def prefill(cfg, params, batch):
 
 
 def decode_step(cfg, params, tokens, state: DecodeState, active=None):
-    """One decode step: (logits [DP, Bl, V], new state)."""
-    x, state = forward_decode(cfg, params, tokens, state, active=active)
-    logits = logits_apply(cfg, params["embed"], x)
+    """One decode step: (logits [DP, Bl, V], new state).
+
+    A width-1 token lane through :func:`forward_decode_chunk` — the
+    single-token path is not a separate implementation anymore (the
+    pre-refactor ``forward_decode`` is deleted); inactive slots feed a
+    zero-length lane and stay inert, and a slot whose private lane ran
+    dry (a raw loop with no rebalance) degrades to the shard's shared
+    pool inside the chunk allocator.
+    """
+    DP, Bl = tokens.shape
+    if active is None:
+        active = jnp.ones((DP, Bl), bool)
+    x, state = forward_decode_chunk(
+        cfg, params, tokens[:, :, None], state,
+        active.astype(jnp.int32), active=active)
+    logits = logits_apply(cfg, params["embed"], x[:, :, 0])
     return logits, state
 
 

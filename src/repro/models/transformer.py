@@ -8,9 +8,12 @@ size are independent of depth.  Remainder layers (when n_layers is not a
 multiple of the pattern length) are unrolled once.
 
 Three entry points:
-  * :func:`forward_train`   — full-sequence, no caches (training loss path)
-  * :func:`forward_prefill` — full-sequence, fills the decode state
-  * :func:`forward_decode`  — one token against the decode state
+  * :func:`forward_train`        — full-sequence, no caches (training loss)
+  * :func:`forward_prefill`      — full-sequence, fills the decode state
+  * :func:`forward_decode_chunk` — a variable-width token lane (up to T
+    tokens per sequence) against the decode state; single-token decode
+    is simply a width-1 lane (the only decode entry point — the old
+    ``forward_decode`` single-token path is gone)
 
 Decode state (the paper's technique lives here):
   * global-attention layers use **paged KV** (block tables +
@@ -355,273 +358,6 @@ def _rec_state_defs(cfg, kind, stack, dp, b_local):
     }
 
 
-# ============================================================== decode path
-
-def _paged_write(k_pages, v_pages, k_new, v_new, page_ids, pos_in_page):
-    """k_pages: [DP, P, psz, KH, hd]; k_new: [DP, Bl, KH, hd]."""
-    def one(kp, vp, kn, vn, pid, pip):
-        kp = kp.at[pid, pip].set(kn.astype(kp.dtype), mode="drop")
-        vp = vp.at[pid, pip].set(vn.astype(vp.dtype), mode="drop")
-        return kp, vp
-    return jax.vmap(one)(k_pages, v_pages, k_new, v_new, page_ids, pos_in_page)
-
-
-def _paged_attn(q, k_pages, v_pages, tables, seq_lens):
-    """q: [DP, Bl, H, hd]; pages: [DP, P, psz, KH, hd]."""
-    return jax.vmap(attn.decode_attention_paged)(
-        q, k_pages, v_pages, tables, seq_lens)
-
-
-def _ring_write(k_ring, v_ring, k_new, v_new, pos):
-    """ring: [DP, Bl, W, KH, hd]; pos: [DP, Bl] absolute positions."""
-    W = k_ring.shape[2]
-    slot = pos % W
-    dp_i = jnp.arange(k_ring.shape[0])[:, None]
-    bl_i = jnp.arange(k_ring.shape[1])[None, :]
-    k_ring = k_ring.at[dp_i, bl_i, slot].set(k_new.astype(k_ring.dtype))
-    v_ring = v_ring.at[dp_i, bl_i, slot].set(v_new.astype(v_ring.dtype))
-    return k_ring, v_ring
-
-
-def _ring_attn(cfg, q, k_ring, v_ring, pos):
-    """Single-query attention over a ring of the last W positions.
-
-    q: [DP, Bl, H, hd]; ring: [DP, Bl, W, KH, hd]; pos: [DP, Bl] (current).
-    """
-    DP, Bl, H, hd = q.shape
-    W = k_ring.shape[2]
-    r = jnp.arange(W)
-    # absolute position stored in ring slot r (<= pos)
-    abs_pos = r[None, None, :] + W * ((pos[..., None] - r[None, None, :]) // W)
-    valid = (abs_pos >= 0) & (abs_pos <= pos[..., None]) & (
-        abs_pos > pos[..., None] - (cfg.window or W))
-    k = attn._expand_kv(k_ring.reshape(DP * Bl, W, -1, hd), H)
-    v = attn._expand_kv(v_ring.reshape(DP * Bl, W, -1, hd), H)
-    qf = q.reshape(DP * Bl, H, hd)
-    s = jnp.einsum("bhd,bkhd->bhk", qf, k) / (hd ** 0.5)
-    s = jnp.where(valid.reshape(DP * Bl, 1, W), s.astype(jnp.float32),
-                  attn.NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhk,bkhd->bhd", p.astype(q.dtype), v)
-    return o.reshape(DP, Bl, H, hd)
-
-
-def _mix_decode(cfg, lp, x, kind, st_kind, layer_state, positions, state,
-                enc_kv_layer=None):
-    """One layer in decode mode.
-
-    x: [DP, Bl, d] (single token per seq).  Returns (x, new_layer_state).
-    """
-    DP, Bl, d = x.shape
-    kind = base_kind(kind)
-    h = apply_norm(cfg, lp["norm1"], x)
-    if kind in ("global", "local"):
-        hf = h.reshape(DP * Bl, 1, d)
-        pos_flat = positions.reshape(DP * Bl, 1)
-        q = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", hf, lp["attn"]["wv"])
-        q = apply_rope(q, pos_flat, cfg.rope_theta)
-        k = apply_rope(k, pos_flat, cfg.rope_theta)
-        qd = q[:, 0].reshape(DP, Bl, cfg.n_heads, cfg.hd)
-        kd = k[:, 0].reshape(DP, Bl, cfg.n_kv_heads, cfg.hd)
-        vd = v[:, 0].reshape(DP, Bl, cfg.n_kv_heads, cfg.hd)
-        if st_kind == "paged":
-            kp, vp = layer_state
-            psz = cfg.page_size
-            page_idx = positions // psz
-            pip = positions % psz
-            dp_i = jnp.arange(DP)[:, None]
-            pid = state.page_tables[dp_i, jnp.arange(Bl)[None, :], page_idx]
-            kp, vp = _paged_write(kp, vp, kd, vd, pid, pip)
-            o = _paged_attn(qd, kp, vp, state.page_tables, state.seq_lens + 1)
-            new_state = (kp, vp)
-        else:
-            kr, vr = layer_state
-            kr, vr = _ring_write(kr, vr, kd, vd, positions)
-            o = _ring_attn(cfg, qd, kr, vr, positions)
-            new_state = (kr, vr)
-        x = x + jnp.einsum("xbhk,hkd->xbd", o, lp["attn"]["wo"])
-    elif kind == "ssd":
-        hf = h.reshape(DP * Bl, 1, d)
-        o, (hn, cn) = ssm_mod.ssd_block_apply(
-            cfg, lp["ssd"], hf,
-            h0=layer_state["h"].reshape(DP * Bl, *layer_state["h"].shape[2:]),
-            conv0=layer_state["conv"].reshape(
-                DP * Bl, *layer_state["conv"].shape[2:]),
-            decode=True)
-        x = x + o[:, 0].reshape(DP, Bl, d)
-        new_state = {"h": hn.reshape(DP, Bl, *hn.shape[1:]),
-                     "conv": cn.reshape(DP, Bl, *cn.shape[1:])}
-    else:  # rglru
-        hf = h.reshape(DP * Bl, 1, d)
-        o, (hn, cn) = rglru_mod.rglru_block_apply(
-            cfg, lp["rglru"], hf,
-            h0=layer_state["h"].reshape(DP * Bl, d),
-            conv0=layer_state["conv"].reshape(
-                DP * Bl, *layer_state["conv"].shape[2:]),
-            decode=True)
-        x = x + o[:, 0].reshape(DP, Bl, d)
-        new_state = {"h": hn.reshape(DP, Bl, d),
-                     "conv": cn.reshape(DP, Bl, *cn.shape[1:])}
-
-    if "xattn" in lp and enc_kv_layer is not None:
-        x = _xattn_decode(cfg, lp, x, enc_kv_layer)
-
-    if "ffn" in lp:
-        h2 = apply_norm(cfg, lp["norm2"], x)
-        h2f = h2.reshape(DP * Bl, 1, d)
-        f = (moe_mod.moe_apply(cfg, lp["ffn"], h2f) if "router" in lp["ffn"]
-             else ffn_apply(cfg, lp["ffn"], h2f))
-        x = x + f.reshape(DP, Bl, d)
-    return x, new_state
-
-
-def _xattn_decode(cfg, lp, x, enc_kv_layer):
-    """Cross-attention for one decode token. enc_kv: [DP, Bl, L, KH, hd]."""
-    DP, Bl, d = x.shape
-    h = apply_norm(cfg, lp["norm_x"], x)
-    q = jnp.einsum("xbd,dhk->xbhk", h, lp["xattn"]["wq"])
-    k, v = enc_kv_layer
-    ke = attn._expand_kv(k.reshape(DP * Bl, cfg.enc_len, -1, cfg.hd), cfg.n_heads)
-    ve = attn._expand_kv(v.reshape(DP * Bl, cfg.enc_len, -1, cfg.hd), cfg.n_heads)
-    qf = q.reshape(DP * Bl, cfg.n_heads, cfg.hd)
-    s = jnp.einsum("bhd,bkhd->bhk", qf, ke) / (cfg.hd ** 0.5)
-    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    o = jnp.einsum("bhk,bkhd->bhd", p.astype(x.dtype), ve)
-    o = o.reshape(DP, Bl, cfg.n_heads, cfg.hd)
-    return x + jnp.einsum("xbhk,hkd->xbd", o, lp["xattn"]["wo"])
-
-
-def forward_decode(cfg, params, tokens, state: DecodeState, active=None):
-    """tokens: int32 [DP, Bl] -> (hidden [DP, Bl, d], new DecodeState).
-
-    ``active`` (bool [DP, Bl], default all) gates page allocation,
-    sequence-length advance, and recurrent-state evolution so idle slots
-    in a continuous-batching engine stay inert.
-
-    Page allocation: sequences crossing a page boundary take one page
-    from their slot's private lane (hier_pool.alloc — O(1), the paper's
-    operation, lane-local state only), falling back to the shard's
-    shared pool when the lane is dry — the serving engine's per-step
-    rebalance makes the fallback dead code on its path (§4.2), but a
-    caller looping raw decode_step without rebalancing must degrade to
-    the shared pool rather than silently write through a NULL page id
-    once the lane's warm stock is gone.
-    """
-    DP, Bl = tokens.shape
-    if active is None:
-        active = jnp.ones((DP, Bl), bool)
-    x = constrain_batch(embed_apply(params["embed"], tokens).astype(cfg.jdtype))
-    positions = state.seq_lens                       # current write position
-
-    # --- page allocation for this step (once, shared by all paged layers)
-    if state.kv_pages:
-        psz = cfg.page_size
-        needs = ((positions % psz) == 0) & active
-        pool, got = hier_pool.alloc_or_shared_dp(state.pool, needs)
-        page_idx = positions // psz
-        dp_i = jnp.arange(DP)[:, None]
-        bl_i = jnp.arange(Bl)[None, :]
-        new_tables = state.page_tables.at[dp_i, bl_i, page_idx].set(
-            jnp.where(needs, got, state.page_tables[dp_i, bl_i, page_idx]))
-        state = state._replace(page_tables=new_tables, pool=pool)
-
-    st_kinds = _positions(cfg)
-    has_x = cfg.arch_kind == "encdec"
-    n_rem = len(cfg.remainder)
-
-    def group_body(carry, xs):
-        x = carry
-        gparams, gstate, enc_kv_g = xs
-        new_gstate = {}
-        for j, kind in enumerate(cfg.pattern):
-            pos = f"pos{j}"
-            x, ns = _mix_decode(cfg, gparams[pos], x, kind, st_kinds[pos],
-                                gstate[pos], positions, state,
-                                enc_kv_g if has_x else None)
-            new_gstate[pos] = ns
-        return x, new_gstate
-
-    if cfg.n_groups:
-        gstates = {}
-        for pos, kv in state.kv_pages.items():
-            if pos.startswith("pos"):
-                gstates[pos] = kv
-        for pos, kv in state.rings.items():
-            if pos.startswith("pos"):
-                gstates[pos] = kv
-        for pos, rc in state.rec.items():
-            if pos.startswith("pos"):
-                gstates[pos] = rc
-        enc_scan = None
-        if has_x and state.enc_kv is not None:
-            # enc_kv is in layer order; with pattern length 1 (whisper)
-            # layer order == group order.
-            assert len(cfg.pattern) == 1, "encdec requires pattern length 1"
-            enc_scan = (state.enc_kv[0][:cfg.n_groups],
-                        state.enc_kv[1][:cfg.n_groups])
-        else:
-            enc_scan = (jnp.zeros((cfg.n_groups,)),) * 2  # placeholder
-        x, new_gstates = jax.lax.scan(
-            group_body, x, (params["groups"], gstates, enc_scan))
-    else:
-        new_gstates = {}
-
-    # remainder layers
-    new_rem_states = {}
-    for j, kind in enumerate(cfg.remainder):
-        pos = f"rem{j}"
-        bk = base_kind(kind)
-        st_kind = ("paged" if bk == "global"
-                   else "ring" if bk == "local" else "rec")
-        ls = (state.kv_pages.get(pos) or state.rings.get(pos)
-              or state.rec.get(pos))
-        ls0 = jax.tree.map(lambda a: a[0], ls)
-        lp = params["rem"][f"pos{j}"]
-        enc_l = None
-        if has_x and state.enc_kv is not None:
-            idx = cfg.n_groups * len(cfg.pattern) + j
-            enc_l = (state.enc_kv[0][idx], state.enc_kv[1][idx])
-        x, ns = _mix_decode(cfg, lp, x, kind, st_kind, ls0, positions, state,
-                            enc_l)
-        new_rem_states[pos] = jax.tree.map(lambda a: a[None], ns)
-
-    kv_pages, rings, rec = {}, {}, {}
-    for pos in state.kv_pages:
-        src = new_gstates if pos.startswith("pos") else new_rem_states
-        kv_pages[pos] = src[pos]
-    for pos in state.rings:
-        src = new_gstates if pos.startswith("pos") else new_rem_states
-        rings[pos] = src[pos]
-    for pos in state.rec:
-        src = new_gstates if pos.startswith("pos") else new_rem_states
-        rec[pos] = src[pos]
-
-    # gate recurrent-state evolution for idle slots
-    def gate(new, old):
-        def f(n, o):
-            m = active.reshape((1, DP, Bl) + (1,) * (n.ndim - 3))
-            return jnp.where(m, n, o)
-        return jax.tree.map(f, new, old)
-
-    rec = {pos: gate(rec[pos], state.rec[pos]) for pos in rec}
-
-    state = DecodeState(
-        kv_pages=kv_pages, rings=rings, rec=rec,
-        page_tables=state.page_tables,
-        seq_lens=state.seq_lens + active.astype(jnp.int32),
-        pool=state.pool,
-        enc_kv=state.enc_kv)
-
-    if "final_norm" in params:
-        x = apply_norm(cfg, params["final_norm"], x)
-    elif cfg.norm == "ln_nonparam":
-        from .layers import ln_nonparam
-        x = ln_nonparam(x)
-    return x, state
-
-
 # ======================================================= chunked decode path
 
 def _paged_write_chunk(k_pages, v_pages, k_new, v_new, page_ids, pos_in_page,
@@ -835,13 +571,17 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
     [DP, Bl, T, d], new DecodeState) with seq_lens advanced by lens.
 
     Pages for the WHOLE chunk (up to ceil(T/psz) per sequence) come
-    from each slot's private lane in one :func:`hier_pool.alloc_n`
-    call — the paper's batch-granularity transfer absorbing multi-page
-    demand per step in O(Bl * T) lane-local work, independent of the
-    pool size (the §4.2 sizing rule ``ell >= ceil(T/psz)`` keeps the
-    lanes never-dry between rebalances).  With T == 1 and lens ==
-    active this computes exactly what :func:`forward_decode` computes
-    (the serving engine's steady-state decode path).
+    from each slot's private lane in one
+    :func:`hier_pool.alloc_n_or_shared` call — the paper's
+    batch-granularity transfer absorbing multi-page demand per step in
+    O(Bl * T) lane-local work, independent of the pool size (the §4.2
+    sizing rule ``ell >= ceil(T/psz)`` keeps the lanes never-dry
+    between rebalances, so the shared-pool fallback is dead code on
+    the serving path; a caller looping this step raw, with no
+    rebalance, degrades to the shared pool instead of writing through
+    NULL page ids).  T == 1 with lens == active is steady-state
+    single-token decode — a width-1 lane, the serving engine's decode
+    path.
     """
     DP, Bl, T = tokens.shape
     if active is None:
@@ -861,7 +601,7 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
         kmax = -(-T // psz)
         lens, pages_before, counts = block_pool.chunk_page_plan(
             base, lens, psz, maxp)
-        pool, got = hier_pool.alloc_n_dp(state.pool, counts, kmax)
+        pool, got = hier_pool.alloc_n_or_shared_dp(state.pool, counts, kmax)
         lens = jnp.where(block_pool.granted_mask(got, counts), lens, 0)
         dp_i = jnp.arange(DP)[:, None, None]
         bl_i = jnp.arange(Bl)[None, :, None]

@@ -30,22 +30,31 @@ the mechanisms it drives — :meth:`admit`, :meth:`preempt`,
 :meth:`evict_pin` and the pin table (whole pages of hot prefixes kept
 alive after their request finishes, via cache-owned refcounts).
 
-The token hot path is fully device-resident (DESIGN.md §6): one jitted
-``_serve_step`` embeds the forward pass, chunked prefill, per-request
+The token hot path is fully device-resident and runs ONE shape of
+work: the variable-width **token-lane step** (DESIGN.md §10).  Each
+active slot contributes a lane of tokens per step — a prefill chunk,
+exactly one decode token (a width-1 lane), or one decode token plus
+``k`` host-drafted speculative tokens — through the single jitted
+``_serve_step``, which embeds the forward pass, per-request
 temperature/top-k sampling (greedy by default, :mod:`.sampling`),
-EOS/length done-detection, and page release for finished slots, and
-returns a small packed status array — the host performs EXACTLY ONE
-device→host sync per step (``np.asarray(status)``).  Prompts are
-processed ``chunk_size`` tokens per step; steady-state decode runs the
-same step at T=1 with the previous token read from a device-resident
-register, never from the host.  A step with nothing to feed skips the
-device entirely (idle fast-path) and ``run`` exits as soon as both the
-batch and the scheduler backlog are empty.
+draft verification and whole-page rollback of rejected speculation
+(``hier_pool.free_n_dp`` inside the jit), EOS/length done-detection,
+and page release for finished slots, and returns a small packed status
+array — the host performs EXACTLY ONE device→host sync per step
+(``np.asarray(status)``).  Prefill lane widths come from the admission
+scheduler's static chunk-bucket set (SLO-aware sizing: prefill shrinks
+when latency-class work waits — :meth:`sched.AdmissionScheduler.
+pick_chunk`); steady-state decode runs the same step at T=1 with the
+previous token read from a device-resident register, never from the
+host.  A step with nothing to feed skips the device entirely (idle
+fast-path) and ``run`` exits as soon as both the batch and the
+scheduler backlog are empty.  The pre-refactor single-token engine
+path is gone — width-1 lanes ARE single-token decode.
 
 Multi-host allocation plane (DESIGN.md §9): with >= dp devices the
 engine builds a ``("dp",)`` mesh (``launch.mesh.make_dp_mesh``) and
-shard_maps every jitted step — serve, legacy, release, share, pin,
-unpin — over it, so each device owns exactly its shard's HierPool
+shard_maps every jitted step — serve, release, share, pin, unpin —
+over it, so each device owns exactly its shard's HierPool
 leaves, lanes, refcounts, pin table, and KV pages; rebalance
 drain/refill run entirely shard-local and the packed status row is the
 only data crossing shards (one all_gather per step).  Admission is the
@@ -54,8 +63,14 @@ budgets are the mesh-visible state and prefix-trie donors are matched
 strictly within a shard.  Without enough devices the same code runs
 single-device vmap semantics, bit-identically.
 
-The pre-refactor single-token path is kept behind ``legacy=True`` for
-A/B benchmarking (benchmarks/run.py measures both in the same run).
+Speculative decode on shared prefixes (DESIGN.md §10): the prefix
+plane's :class:`~repro.serving.prefix_cache.SpeculationStore` records
+the continuation history of hot (whole-page, often pinned) prompt
+prefixes; the host drafts ``k`` tokens once per hot prefix per step
+and the unified step scores each draft lane, accepts the matching
+prefix, emits up to ``k + 1`` tokens, and rolls the rejected tail's
+whole-page over-allocation back into the slot's private lane — still
+one host sync and one collective per step.
 """
 
 from __future__ import annotations
@@ -73,7 +88,6 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .. import models
 from ..core import NULL, SimContext, WaitFreeAllocator, hier_pool
 from ..launch.mesh import SERVE_DP_AXIS, make_dp_mesh
 from ..launch.steps import (serve_register_pspec, serve_shardings,
@@ -81,10 +95,10 @@ from ..launch.steps import (serve_register_pspec, serve_shardings,
 from ..models.decode_init import empty_decode_state, empty_serve_arrays
 from ..models.layers import logits_apply
 from ..models.transformer import DecodeState, forward_decode_chunk
-from .prefix_cache import (PinnedPrefixes, PrefixCache, pin_id_of,
-                           pin_prefix_step, share_pinned_step,
+from .prefix_cache import (PinnedPrefixes, PrefixCache, SpeculationStore,
+                           pin_id_of, pin_prefix_step, share_pinned_step,
                            share_prefix_step, unpin_step)
-from .sampling import sample_tokens
+from .sampling import sample_lane, sample_tokens
 from .sched import Admission, AdmissionScheduler, SchedConfig
 
 
@@ -108,6 +122,7 @@ class Request:
     first_token_at: float = 0.0
     finished_at: float = 0.0
     _seq: int = 0                      # admission order (victim choice)
+    _spec_key: Optional[tuple] = None  # whole-page prefix (speculation)
 
 
 def _release_slots(state: DecodeState, mask):
@@ -139,72 +154,166 @@ def _release_slots(state: DecodeState, mask):
                           pool=pool, rings=rings, rec=rec)
 
 
-# Packed per-step status rows (the step's single device->host transfer).
-STATUS_TOKEN = 0     # sampled token id (-1 where nothing was emitted)
-STATUS_EMITTED = 1   # 1 iff the slot produced an output token this step
-STATUS_DONE = 2      # 1 iff the slot finished (pages already released)
-STATUS_PAGES = 3     # pages-in-use on the slot's DP shard (broadcast row)
+# Packed per-step status (the step's single device->host transfer),
+# int32[T + 3, DP, Bl] for a width-T step: rows [0, T) carry each
+# slot's emitted tokens this step in order (-1 padding — one row per
+# lane position, so a fully-accepted draft lane reports k + 1 tokens in
+# the same single sync), then three bookkeeping rows addressed relative
+# to T:
+STATUS_EMITTED = 0   # + T: emitted-token count this step
+STATUS_DONE = 1      # + T: 1 iff the slot finished (pages released)
+STATUS_PAGES = 2     # + T: pages-in-use on the slot's DP shard
 
 
-def _serve_step(cfg, max_len, eos_id, use_sampler, axis_name, params, state,
-                last_tok, out_count, budget, temps, topks, seeds,
+def _serve_step(cfg, max_len, eos_id, use_sampler, spec, axis_name, params,
+                state, last_tok, out_count, budget, temps, topks, seeds,
                 prompt_toks, feed_lens, is_prompt, emit):
-    """One fully device-resident engine step (jitted once per chunk T).
+    """One fully device-resident token-lane step (jitted per lane width
+    T x the two static feature flags).
 
-    prompt_toks: int32[DP, Bl, T] host-provided prompt chunks (ignored
-    for generating slots — their input token is the device-resident
-    ``last_tok`` register); feed_lens: tokens fed per slot this step
-    (0 = idle); is_prompt: slot consumes prompt tokens; emit: slot
-    produces an output token this step (host knows this statically —
-    it's "prompt exhausted by this chunk" or "generating").
-    temps/topks/seeds: per-slot sampling registers, written at
-    admission like ``budget`` (temp <= 0 → greedy; see sampling.py for
-    the (seed, out_count) keying that makes preemption invisible).
-    ``use_sampler`` is STATIC: the host knows at dispatch whether any
-    active request samples, and the all-greedy variant (the default —
-    every request at temperature 0) compiles without the sampler's
-    full-vocab sort + Gumbel draw, so greedy serving pays nothing for
-    the feature.
+    prompt_toks: int32[DP, Bl, T] host-provided lane tokens.  A prompt
+    lane is a prompt chunk; a generating lane reads its first token
+    from the device-resident ``last_tok`` register and — when ``spec``
+    — carries host-drafted speculative tokens at positions 1..k.
+    feed_lens: tokens fed per slot this step (0 = idle; 1 = plain
+    decode, the width-1 lane; >1 with is_prompt False = draft+verify
+    lane); is_prompt: slot consumes prompt tokens; emit: slot may emit
+    output this step (host knows this statically — "prompt exhausted by
+    this chunk" or "generating").  temps/topks/seeds: per-slot sampling
+    registers, written at admission like ``budget`` (temp <= 0 →
+    greedy; see sampling.py for the (seed, out_count) keying that makes
+    preemption — and speculation — invisible in sampled output).
 
-    Folds sampling, EOS/length done-detection, page release for
-    finished slots, and the once-per-step :func:`hier_pool.rebalance`
-    (the paper's deamortized shared-pool traffic, off the per-token
-    path) into the step so the host syncs exactly once, on the returned
-    packed status int32[4, DP, Bl] (see STATUS_* row indices; the PAGES
-    row carries per-shard pages-in-use so occupancy tracking — and the
-    scheduler's high-water pin eviction — costs no extra transfer).
+    ``use_sampler`` and ``spec`` are STATIC: the host knows at dispatch
+    whether any active request samples and whether any lane carries
+    drafts, so the default all-greedy non-speculative variant compiles
+    without the sampler's full-vocab sort + Gumbel draw and without the
+    per-position logits of draft verification — plain serving pays
+    nothing for either feature.
+
+    Speculative verify+rollback (``spec``; DESIGN.md §10): every lane
+    position is scored (one vocab projection over the lane), position
+    i's candidate is sampled with key index ``out_count + i``, and a
+    draft is accepted iff it equals the previous position's candidate —
+    so an accepted stream is exactly the stream sequential decode would
+    have produced, key-for-key.  The slot emits its accepted prefix
+    plus one verify token (1..k+1 tokens), keeps exactly that many KV
+    positions, and returns the whole-page over-allocation of the
+    rejected tail to its own private lane via :func:`hier_pool.
+    free_n_dp` — inside this jit, before the rebalance, so §4.2 sees a
+    lane at least as stocked as a non-speculative step would leave it.
+
+    Folds sampling, verification/rollback, EOS/budget/length
+    done-detection, page release for finished slots, and the
+    once-per-step :func:`hier_pool.rebalance` (the paper's deamortized
+    shared-pool traffic, off the per-token path) into the step so the
+    host syncs exactly once, on the returned packed status int32[T+3,
+    DP, Bl] (see STATUS_* row offsets; the PAGES row carries per-shard
+    pages-in-use so occupancy tracking — and the scheduler's high-water
+    pin eviction — costs no extra transfer).
 
     ``axis_name`` is STATIC: set (to the mesh axis) when the step runs
     under shard_map on the multi-device allocation plane (DESIGN.md
-    §9).  Everything above — forward pass, page alloc/free, rebalance
-    drain/refill, sampling, done-detection — is then device-local by
-    construction (each device owns its shard's HierPool leaves, lanes,
-    refcounts, and KV pages); the ONE collective per step is the
-    all_gather that replicates the packed status row so every host
-    drives admission from the same global view.
+    §9).  Everything above — forward pass, page alloc/free, draft
+    verification and rollback, rebalance drain/refill, sampling,
+    done-detection — is then device-local by construction (each device
+    owns its shard's HierPool leaves, lanes, refcounts, and KV pages);
+    the ONE collective per step is the all_gather that replicates the
+    packed status row so every host drives admission from the same
+    global view.
     """
     DP, Bl, T = prompt_toks.shape
-    gen_col = jnp.zeros((DP, Bl, T), jnp.int32).at[:, :, 0].set(last_tok)
-    toks = jnp.where(is_prompt[..., None], prompt_toks, gen_col)
+    gen_lane = prompt_toks.at[:, :, 0].set(last_tok)
+    toks = jnp.where(is_prompt[..., None], prompt_toks, gen_lane)
     active = feed_lens > 0
+    base = state.seq_lens
 
     hidden, state = forward_decode_chunk(cfg, params, toks, state,
                                          feed_lens, active=active)
     idx = jnp.maximum(feed_lens - 1, 0)
-    h_last = jnp.take_along_axis(hidden, idx[..., None, None],
-                                 axis=2)[:, :, 0]         # [DP, Bl, d]
-    logits = logits_apply(cfg, params["embed"], h_last)
-    if use_sampler:
-        nxt = sample_tokens(logits, temps, topks, seeds, out_count)
-    else:
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
     emit = emit & active
-    out_count = out_count + emit.astype(jnp.int32)
-    seq_full = state.seq_lens >= max_len - 1
-    done = active & ((out_count >= budget) | seq_full |
-                     (emit & (nxt == eos_id)))
-    last_tok = jnp.where(emit, nxt, last_tok)
+    if spec:
+        # --- score every lane position (draft verification needs them
+        # all; the host only dispatches this variant on all-decode
+        # steps of width draft_len + 1, so the extra vocab projections
+        # are k per slot, never chunk-sized)
+        logits = logits_apply(cfg, params["embed"], hidden)  # [DP,Bl,T,V]
+        j = jnp.arange(T, dtype=jnp.int32)
+        # output-key index per position: generating lanes emit from
+        # position 0 on (key out_count + i); a prompt lane's single
+        # emitting position is output index 0 (key out_count)
+        cnt = out_count[..., None] + jnp.where(is_prompt[..., None], 0,
+                                               j[None, None])
+        if use_sampler:
+            nxt_all = sample_lane(logits, temps, topks, seeds, cnt)
+        else:
+            nxt_all = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        last_pos = jnp.take_along_axis(nxt_all, idx[..., None],
+                                       axis=2)[..., 0]
+        # emission stream: generating lanes emit candidates in lane
+        # order; prompt lanes emit (at most) their last position's
+        etoks = jnp.where(is_prompt[..., None], last_pos[..., None],
+                          nxt_all)
+        # draft i (lane position i >= 1) is accepted iff position i-1's
+        # candidate equals it and every earlier draft was accepted
+        dmatch = ((nxt_all[..., :-1] == toks[..., 1:]) &
+                  (j[None, None, 1:] < feed_lens[..., None]))
+        accepted = jnp.sum(jnp.cumprod(dmatch.astype(jnp.int32), axis=-1),
+                           axis=-1)
+        n_cand = (jnp.where(is_prompt, 1, accepted + 1)
+                  * emit.astype(jnp.int32))
+        # EOS / budget truncate the emission stream (an emitted EOS is
+        # included, then the slot finishes)
+        is_e = (etoks == eos_id) & (j[None, None] < n_cand[..., None])
+        eos_cut = jnp.where(jnp.any(is_e, axis=-1),
+                            jnp.argmax(is_e, axis=-1) + 1, T + 1)
+        room = jnp.maximum(budget - out_count, 0)
+        n_emit = jnp.minimum(n_cand, jnp.minimum(room, eos_cut))
+        hit_eos = jnp.any(is_e & (j[None, None] < n_emit[..., None]),
+                          axis=-1)
+        # --- rollback: keep last_tok + accepted drafts, free the
+        # rejected tail's whole-page over-allocation back to the slot's
+        # OWN lane (same-shard by construction; refcount 1 pages —
+        # granted this very step — so free_n restacks them)
+        adv = state.seq_lens - base
+        n_keep = jnp.where(is_prompt, adv, jnp.minimum(n_emit, adv))
+        psz = cfg.page_size
+        maxp = state.page_tables.shape[2]
+        keep_pages = (base + n_keep + psz - 1) // psz
+        have_pages = (base + adv + psz - 1) // psz
+        kidx = jnp.arange(maxp, dtype=jnp.int32)[None, None, :]
+        roll = ((kidx >= keep_pages[..., None]) &
+                (kidx < have_pages[..., None]))
+        pool = hier_pool.free_n_dp(
+            state.pool, jnp.where(roll, state.page_tables, NULL))
+        state = state._replace(
+            pool=pool,
+            page_tables=jnp.where(roll, NULL, state.page_tables),
+            seq_lens=base + n_keep)
+        out_count = out_count + n_emit
+        seq_full = state.seq_lens >= max_len - 1
+        done = active & ((out_count >= budget) | seq_full | hit_eos)
+        last_emitted = jnp.take_along_axis(
+            etoks, jnp.maximum(n_emit - 1, 0)[..., None], axis=2)[..., 0]
+        last_tok = jnp.where(n_emit > 0, last_emitted, last_tok)
+        tok_rows = jnp.where(j[None, None] < n_emit[..., None], etoks, -1)
+    else:
+        h_last = jnp.take_along_axis(hidden, idx[..., None, None],
+                                     axis=2)[:, :, 0]     # [DP, Bl, d]
+        logits = logits_apply(cfg, params["embed"], h_last)
+        if use_sampler:
+            nxt = sample_tokens(logits, temps, topks, seeds, out_count)
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_count = out_count + emit.astype(jnp.int32)
+        seq_full = state.seq_lens >= max_len - 1
+        done = active & ((out_count >= budget) | seq_full |
+                         (emit & (nxt == eos_id)))
+        last_tok = jnp.where(emit, nxt, last_tok)
+        n_emit = emit.astype(jnp.int32)
+        tok_rows = jnp.concatenate(
+            [jnp.where(emit, nxt, -1)[..., None],
+             jnp.full((DP, Bl, T - 1), -1, jnp.int32)], axis=-1)
     state = _release_slots(state, done)
     # deamortized shared<->lane traffic: once per step, off the
     # per-token path (the paper's run_delayed_step)
@@ -213,10 +322,11 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, axis_name, params, state,
     pages_local = state.pool.shared.free_ids.shape[1]
     free_now = state.pool.shared.top + jnp.sum(state.pool.private_top, axis=1)
     pages_used = (pages_local - free_now).astype(jnp.int32)      # [DP]
-    status = jnp.stack([jnp.where(emit, nxt, -1),
-                        emit.astype(jnp.int32),
-                        done.astype(jnp.int32),
-                        jnp.broadcast_to(pages_used[:, None], (DP, Bl))])
+    status = jnp.concatenate(
+        [tok_rows.transpose(2, 0, 1),
+         n_emit[None],
+         done.astype(jnp.int32)[None],
+         jnp.broadcast_to(pages_used[:, None], (DP, Bl))[None]])
     if axis_name is not None:
         # the step's single collective: only the packed status row
         # crosses shards (DESIGN.md §9 one-sync argument)
@@ -228,8 +338,9 @@ class ServingEngine:
     def __init__(self, cfg, params, dp: int = 1, b_local: int = 4,
                  max_len: int = 512, scheduler_lanes: int = 2,
                  greedy: bool = True, chunk_size: int = 8,
-                 eos_id: Optional[int] = None, legacy: bool = False,
+                 eos_id: Optional[int] = None,
                  prefix_sharing: bool = True,
+                 speculate: bool = False, draft_len: int = 4,
                  sched: Optional[SchedConfig] = None,
                  mesh="auto"):
         self.cfg = cfg
@@ -237,7 +348,13 @@ class ServingEngine:
         self.dp, self.bl = dp, b_local
         self.max_len = max_len
         self.chunk = max(int(chunk_size), 1)
-        self.legacy = legacy
+        self.draft_len = max(int(draft_len), 0)
+        # lanes must cover the widest lane the engine will ever
+        # dispatch: the prefill chunk or a draft+verify lane (§4.2's
+        # ell >= max per-step demand, by construction)
+        lane_tokens = self.chunk
+        if speculate:
+            lane_tokens = max(lane_tokens, self.draft_len + 1)
         # multi-host allocation plane (DESIGN.md §9): with >= dp devices
         # the engine owns a ("dp",) mesh, shards every DecodeState leaf
         # and per-slot register over it, and shard_maps the jitted steps
@@ -249,7 +366,7 @@ class ServingEngine:
         self.mesh: Optional[Mesh] = mesh
         self._axis = SERVE_DP_AXIS if mesh is not None else None
         self.state = empty_decode_state(cfg, dp, b_local, max_len,
-                                        chunk=self.chunk)
+                                        chunk=lane_tokens)
         self._pspecs = serve_state_pspecs(self.state)
         self._rspec = serve_register_pspec()
         if self.mesh is not None:
@@ -279,9 +396,11 @@ class ServingEngine:
         self.pages_local = self.state.pool.shared.free_ids.shape[1]
         self._fed: Dict[int, int] = {}       # host shadow of seq_lens
 
-        # fused device-resident step (compiled once per chunk shape
-        # T=chunk / T=1, times the sampler flag; all-greedy batches —
-        # the default — never compile or pay for the sampler).  On the
+        # fused device-resident token-lane step, compiled once per lane
+        # width T (the scheduler's static chunk buckets, the draft lane
+        # width, and T=1) times the two static feature flags
+        # (use_sampler, spec) — all-greedy non-speculative batches, the
+        # default, never compile or pay for either feature.  On the
         # mesh plane every jitted step is shard_mapped over the ("dp",)
         # axis — shard-locality is enforced structurally, not just by
         # the vmap convention (DESIGN.md §9).
@@ -297,22 +416,14 @@ class ServingEngine:
 
         eos = -1 if eos_id is None else int(eos_id)
         self._serve_variants = {
-            flag: wrap(
+            (sampler, spec): wrap(
                 functools.partial(_serve_step, cfg, self.capacity, eos,
-                                  flag, self._axis),
+                                  sampler, spec, self._axis),
                 in_specs=(P(), S) + (R,) * 10,
                 out_specs=(S, R, R, P()),
                 donate=(1, 2, 3))
-            for flag in (False, True)}
+            for sampler in (False, True) for spec in (False, True)}
         self._sampling_slots: set = set()
-        # pre-refactor single-token path (A/B benchmarking); the
-        # once-per-step lane rebalance rides inside its jit as well
-        def _legacy_step(p, t, s, a):
-            logits, s = models.decode_step(cfg, p, t, s, active=a)
-            return logits, s._replace(pool=hier_pool.rebalance_dp(s.pool))
-
-        self._decode = wrap(_legacy_step, in_specs=(P(), R, S, R),
-                            out_specs=(R, S), donate=(2,))
         self._release = wrap(_release_slots, in_specs=(S, R),
                              out_specs=S, donate=(0,))
 
@@ -320,7 +431,7 @@ class ServingEngine:
         # paged (ring / recurrent layers would need donor state at the
         # match point); page ids are shard-local, so matches are too
         self.prefix_cache: Optional[PrefixCache] = None
-        if (prefix_sharing and not legacy and self.state.kv_pages
+        if (prefix_sharing and self.state.kv_pages
                 and not self.state.rings and not self.state.rec
                 and self.state.enc_kv is None):
             self.prefix_cache = PrefixCache(cfg.page_size)
@@ -329,6 +440,16 @@ class ServingEngine:
                                   axis_name=self._axis),
                 in_specs=(S, R, R, P()), out_specs=(S, P()),
                 donate=(0,))
+
+        # speculative decode on shared prefixes (DESIGN.md §10): sound
+        # under the same fully-paged condition — rejected drafts roll
+        # back pages and seq_lens, but ring/recurrent state cannot be
+        # un-evolved, so those models never dispatch the spec variant
+        self.spec_store: Optional[SpeculationStore] = None
+        self._spec_T = self.draft_len + 1
+        if speculate and self.draft_len > 0 and self.prefix_cache is not None:
+            self.spec_store = SpeculationStore(cfg.page_size)
+        self.speculate = self.spec_store is not None
 
         # traffic-aware frontend: admission order / page budgets /
         # preemption / pin policy (DESIGN.md §8).  The default budget is
@@ -397,7 +518,15 @@ class ServingEngine:
                       "pages_peak": 0, "pages_sum": 0,
                       "idle_steps": 0, "preemptions": 0,
                       "pins_created": 0, "pin_hit_reqs": 0,
-                      "pin_hit_tokens": 0}
+                      "pin_hit_tokens": 0,
+                      # token-lane telemetry (DESIGN.md §10): dispatched
+                      # lane-width histogram and, under speculation,
+                      # drafted/accepted tokens, an acceptance histogram
+                      # (accepted-per-lane -> lanes), and the whole-page
+                      # over-allocation rolled back by rejected drafts
+                      "chunk_hist": {}, "spec_drafted": 0,
+                      "spec_accepted": 0, "spec_lanes": 0,
+                      "accept_hist": {}, "spec_pages_rolled_back": 0}
 
     # ------------------------------------------------------------ control
     @property
@@ -454,11 +583,6 @@ class ServingEngine:
     def submit(self, req: Request) -> Admission:
         """Enqueue (or reject, with a reason) through the admission
         scheduler.  The return value is the backpressure signal."""
-        if self.legacy and (req.temperature > 0 or req.top_k > 0):
-            # the A/B baseline path has no sampler — failing fast beats
-            # silently decoding greedy under a sampled-looking config
-            raise ValueError("legacy=True path only decodes greedy; "
-                             "temperature/top_k need the chunked engine")
         req.submitted_at = time.time()
         return self.scheduler.submit(req, self.est_pages(req))
 
@@ -501,7 +625,7 @@ class ServingEngine:
         len(out_tokens)``, which both the budget check and the
         sampler's noise keying are relative to — so the resumed stream
         is the one the request would have produced unpreempted."""
-        # empty prompts degrade to the legacy BOS=1 convention
+        # empty prompts degrade to the BOS=1 convention
         toks = (list(req.prompt) + list(req.out_tokens)) or [1]
         slot = self._host_alloc_slot(shard)
         assert slot is not None, "scheduler admitted without a free slot"
@@ -519,15 +643,16 @@ class ServingEngine:
         if self.prefix_cache is not None:
             self.prefix_cache.insert(slot, d, toks)
             self.prefix_cache.update_progress(slot, shared_n)
-        if not self.legacy:
-            self.budget = self.budget.at[d, b].set(req.max_new_tokens)
-            self.out_count = self.out_count.at[d, b].set(
-                len(req.out_tokens))
-            self.temps = self.temps.at[d, b].set(float(req.temperature))
-            self.topks = self.topks.at[d, b].set(int(req.top_k))
-            self.seeds = self.seeds.at[d, b].set(int(req.seed))
-            if req.temperature > 0:
-                self._sampling_slots.add(slot)
+        if self.spec_store is not None:
+            req._spec_key = self.spec_store.key_of(req.prompt)
+        self.budget = self.budget.at[d, b].set(req.max_new_tokens)
+        self.out_count = self.out_count.at[d, b].set(
+            len(req.out_tokens))
+        self.temps = self.temps.at[d, b].set(float(req.temperature))
+        self.topks = self.topks.at[d, b].set(int(req.top_k))
+        self.seeds = self.seeds.at[d, b].set(int(req.seed))
+        if req.temperature > 0:
+            self._sampling_slots.add(slot)
         self.stats["admitted"] += 1
         return slot
 
@@ -649,26 +774,67 @@ class ServingEngine:
         return n
 
     # -------------------------------------------------------------- step
+    def _build_drafts(self, limit: int) -> Dict[int, List[int]]:
+        """Host-side draft proposals for this step's generating slots,
+        from the hot-prefix continuation store.  Drafted ONCE per hot
+        prefix per step: slots at the same (prefix, context) reuse one
+        lookup.  Never reads device state — the step keeps its single
+        sync.  Caps keep drafts within the slot's page-table capacity
+        and output budget (a draft past either is guaranteed waste)."""
+        out: Dict[int, List[int]] = {}
+        if limit <= 0:
+            return out
+        memo: Dict[tuple, List[int]] = {}
+        for slot, req in self.active.items():
+            if self.pending_tokens[slot] or req._spec_key is None:
+                continue
+            key = req._spec_key
+            k = min(limit, self.draft_len,
+                    self.capacity - 1 - self._fed[slot],
+                    req.max_new_tokens - len(req.out_tokens) - 1)
+            if k <= 0:
+                continue
+            suffix = tuple(req.prompt[len(key):]) + tuple(req.out_tokens)
+            mk = (key, suffix, k)
+            if mk not in memo:
+                memo[mk] = self.spec_store.draft(key, suffix, k)
+            if memo[mk]:
+                out[slot] = memo[mk]
+        return out
+
     def step(self) -> bool:
         """One engine step.  Returns True iff device work was
         dispatched (False = idle fast-path: admission ran but nothing
         is active, so the jitted step — and its sync — are skipped)."""
-        if self.legacy:
-            return self._step_legacy()
         self.scheduler.tick(self)
         if not self.active:
             self.stats["idle_steps"] += 1
             return False
 
-        # schedule this step's feeds (host-side bookkeeping only — no
-        # device sync; prompt chunks come from host queues, generation
-        # tokens from the device-resident last_tok register)
+        # schedule this step's lane widths (host-side bookkeeping only —
+        # no device sync; prompt chunks come from host queues, decode
+        # tokens from the device-resident last_tok register, draft
+        # tokens from the continuation store).  The prefill width is the
+        # scheduler's SLO-aware bucket choice; an all-decode step runs
+        # width 1, widened to draft_len + 1 when drafts exist.
         any_prompt = any(self.pending_tokens[s] for s in self.active)
-        T = self.chunk if any_prompt else 1
+        T = self.scheduler.pick_chunk(self, self.chunk) if any_prompt else 1
+        drafts: Dict[int, List[int]] = {}
+        if self.spec_store is not None and not any_prompt:
+            # drafts dispatch only on all-decode steps: the spec variant
+            # scores EVERY lane position, so a draft riding a
+            # chunk-width prefill step would charge a T-wide vocab
+            # projection to every slot — on a decode-only step the lane
+            # is draft_len + 1 wide and the verify cost really is k
+            # extra positions per slot (DESIGN.md §10)
+            drafts = self._build_drafts(self._spec_T - 1)
+            if drafts:
+                T = self._spec_T
         prompt_toks = np.zeros((self.dp, self.bl, T), np.int32)
         feed_lens = np.zeros((self.dp, self.bl), np.int32)
         is_prompt = np.zeros((self.dp, self.bl), bool)
         emit = np.zeros((self.dp, self.bl), bool)
+        gen_slots: Dict[int, int] = {}       # slot -> drafts fed
         for slot, req in self.active.items():
             d, b = divmod(slot, self.bl)
             pend = self.pending_tokens[slot]
@@ -688,44 +854,80 @@ class ServingEngine:
                         >= len(req.prompt) // self.cfg.page_size
                         * self.cfg.page_size):
                     # the prompt completes THIS step and its whole pages
-                    # are already resident (this chunk only covers the
-                    # partial tail): pin now, before dispatch — a request
-                    # that finishes on this very step (max_new=1, instant
-                    # EOS) releases in-device and could never pin after
+                    # are ALREADY resident — `_fed` is read before this
+                    # chunk is added, so the gate only passes when the
+                    # chunk covers nothing but the partial tail: pin
+                    # now, before dispatch — a request that finishes on
+                    # this very step (max_new=1, instant EOS) releases
+                    # in-device and could never pin after.  A prompt
+                    # whose final whole page rides in THIS chunk pins on
+                    # the post-status path below instead.
                     self._pinned_slots.add(slot)
                     self._maybe_pin(slot, list(req.prompt))
+                self._fed[slot] += n
             else:
-                feed_lens[d, b] = 1
+                dr = drafts.get(slot, [])
+                if dr:
+                    prompt_toks[d, b, 1:1 + len(dr)] = dr
+                feed_lens[d, b] = 1 + len(dr)
                 emit[d, b] = True
-            self._fed[slot] += int(feed_lens[d, b])
+                # the KV the lane keeps (== tokens emitted) is only
+                # known after verification: _fed advances on status read
+                gen_slots[slot] = len(dr)
 
-        serve = self._serve_variants[bool(self._sampling_slots)]
+        spec = any(gen_slots.values())
+        serve = self._serve_variants[(bool(self._sampling_slots), spec)]
         self.state, self.last_tok, self.out_count, status = serve(
             self.params, self.state, self.last_tok, self.out_count,
             self.budget, self.temps, self.topks, self.seeds,
             jnp.asarray(prompt_toks), jnp.asarray(feed_lens),
             jnp.asarray(is_prompt), jnp.asarray(emit))
         self.stats["steps"] += 1
+        hist = self.stats["chunk_hist"]
+        hist[T] = hist.get(T, 0) + 1
         status = np.asarray(status)      # the step's ONE device->host sync
+        n_emit = status[T + STATUS_EMITTED]
+        done_row = status[T + STATUS_DONE]
+        pages_row = status[T + STATUS_PAGES]
 
-        self.pages_used_shard = [int(x) for x in status[STATUS_PAGES, :, 0]]
-        pages_now = int(status[STATUS_PAGES, :, 0].sum())
+        self.pages_used_shard = [int(x) for x in pages_row[:, 0]]
+        pages_now = int(pages_row[:, 0].sum())
         self.stats["pages_peak"] = max(self.stats["pages_peak"], pages_now)
         self.stats["pages_sum"] += pages_now
-        row = status[STATUS_PAGES, :, 0].astype(np.int64)
+        row = pages_row[:, 0].astype(np.int64)
         self._pages_shard_sum += row
         np.maximum(self._pages_shard_peak, row, out=self._pages_shard_peak)
 
         now = time.time()
+        psz = self.cfg.page_size
         for slot, req in list(self.active.items()):
             d, b = divmod(slot, self.bl)
-            if status[STATUS_EMITTED, d, b]:
-                req.out_tokens.append(int(status[STATUS_TOKEN, d, b]))
-                self.stats["tokens_out"] += 1
+            ne = int(n_emit[d, b])
+            if ne:
+                req.out_tokens.extend(int(status[j, d, b])
+                                      for j in range(ne))
+                self.stats["tokens_out"] += ne
                 if req.first_token_at == 0.0:
                     req.first_token_at = now
                     self._ft_latencies.append(now - req.submitted_at)
-            if status[STATUS_DONE, d, b]:
+            if slot in gen_slots:
+                k = gen_slots[slot]
+                if k:
+                    acc = max(ne - 1, 0)
+                    self.stats["spec_lanes"] += 1
+                    self.stats["spec_drafted"] += k
+                    self.stats["spec_accepted"] += acc
+                    ah = self.stats["accept_hist"]
+                    ah[acc] = ah.get(acc, 0) + 1
+                    # whole-page rollback accounting (host math on the
+                    # _fed shadow — no extra sync): the lane fed 1 + k
+                    # tokens but kept only ne
+                    fed0 = self._fed[slot]
+                    over = (-(-(fed0 + 1 + k) // psz)
+                            - (-(-(fed0 + ne) // psz)))
+                    self.stats["spec_pages_rolled_back"] += over
+                self._fed[slot] += ne
+            if done_row[d, b]:
                 # pages were already released inside the jitted step
                 req.done = True
                 req.finished_at = now
@@ -736,6 +938,13 @@ class ServingEngine:
                 self._sampling_slots.discard(slot)
                 if self.prefix_cache is not None:
                     self.prefix_cache.remove(slot)
+                if self.spec_store is not None and req._spec_key:
+                    # feed the continuation history: this finished
+                    # stream is the next draft for its hot prefix
+                    self.spec_store.record(
+                        req._spec_key,
+                        tuple(req.prompt[len(req._spec_key):])
+                        + tuple(req.out_tokens))
                 self._host_free_slot(slot)
                 self.scheduler.on_released(slot)
             else:
@@ -751,65 +960,6 @@ class ServingEngine:
                     # retain its whole pages past the request's lifetime
                     self._pinned_slots.add(slot)
                     self._maybe_pin(slot, list(req.prompt))
-        return True
-
-    def _step_legacy(self) -> bool:
-        """Pre-refactor path: one token per step, host-side argmax."""
-        self.scheduler.tick(self)
-
-        tokens = np.zeros((self.dp, self.bl), np.int32)
-        active = np.zeros((self.dp, self.bl), bool)
-        feeding = {}
-        for slot, req in self.active.items():
-            d, b = divmod(slot, self.bl)
-            pend = self.pending_tokens[slot]
-            if pend:
-                tok = pend.pop(0)
-                feeding[slot] = ("prompt", tok)
-                self.stats["prompt_tokens"] += 1
-            else:
-                tok = req.out_tokens[-1] if req.out_tokens else 1
-                feeding[slot] = ("gen", tok)
-            tokens[d, b] = tok
-            active[d, b] = True
-        if not feeding:
-            self.stats["idle_steps"] += 1
-            return False
-        logits, self.state = self._decode(
-            self.params, jnp.asarray(tokens), self.state, jnp.asarray(active))
-        self.stats["steps"] += 1
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        # one seq_lens transfer per step, not one per active slot
-        seq_lens = np.asarray(self.state.seq_lens)
-
-        finished = []
-        for slot, req in list(self.active.items()):
-            d, b = divmod(slot, self.bl)
-            kind, _ = feeding[slot]
-            if kind == "gen" or not self.pending_tokens[slot]:
-                req.out_tokens.append(int(nxt[d, b]))
-                self.stats["tokens_out"] += 1
-                if req.first_token_at == 0.0:
-                    req.first_token_at = time.time()
-                    self._ft_latencies.append(
-                        req.first_token_at - req.submitted_at)
-            full = seq_lens[d, b] >= self.max_len - 1
-            if len(req.out_tokens) >= req.max_new_tokens or full:
-                finished.append(slot)
-        if finished:
-            mask = np.zeros((self.dp, self.bl), bool)
-            now = time.time()
-            for slot in finished:
-                d, b = divmod(slot, self.bl)
-                mask[d, b] = True
-                req = self.active.pop(slot)
-                req.done = True
-                req.finished_at = now
-                self._latencies.append(now - req.submitted_at)
-                self.pending_tokens.pop(slot, None)
-                self._host_free_slot(slot)
-                self.scheduler.on_released(slot)
-            self.state = self._release(self.state, jnp.asarray(mask))
         return True
 
     def idle(self) -> bool:

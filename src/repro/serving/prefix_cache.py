@@ -228,6 +228,76 @@ class PrefixCache:
         return best
 
 
+# ---------------------------------------------- speculative continuations
+
+class SpeculationStore:
+    """Continuation history of hot prefixes — the host-side draft model
+    for speculative decode (DESIGN.md §10).
+
+    A *key* is a whole-page prompt prefix (the same page-granular token
+    keys the trie and the pin ledger use, so a pinned prefix and its
+    recorded continuations age together).  Each completed request whose
+    prompt starts with key pages records its **continuation** — prompt
+    tail beyond the key plus every generated token — and a later slot
+    sitting at context ``key + suffix`` drafts the next ``k`` tokens
+    from the first recorded stream consistent with its suffix.  A
+    prefix is "hot" exactly when some stream is recorded under it:
+    drafting needs history, and history only exists for repeated
+    traffic.
+
+    Pure host bookkeeping: drafting never reads device state (the step
+    keeps its single sync), and a wrong draft costs only the rejected
+    lane's rolled-back pages.  Bounded: ``keep`` streams per key
+    (newest win), ``max_keys`` keys (LRU).
+    """
+
+    def __init__(self, page_size: int, keep: int = 4, max_keys: int = 64):
+        self.psz = int(page_size)
+        self.keep = int(keep)
+        self.max_keys = int(max_keys)
+        self.streams: Dict[tuple, List[tuple]] = {}
+        self._lru: Dict[tuple, int] = {}
+        self._clock = itertools.count()
+
+    def key_of(self, prompt: Sequence[int]) -> Optional[tuple]:
+        """The whole-page prefix key of a prompt (None below one page)."""
+        n = (len(prompt) // self.psz) * self.psz
+        return tuple(prompt[:n]) if n >= self.psz else None
+
+    def record(self, key: tuple, continuation: Sequence[int]) -> None:
+        rows = self.streams.setdefault(key, [])
+        cont = tuple(continuation)
+        if cont in rows:
+            rows.remove(cont)
+        rows.append(cont)                       # newest last (wins lookup)
+        del rows[:-self.keep]
+        self._lru[key] = next(self._clock)
+        while len(self.streams) > self.max_keys:
+            cold = min(self._lru, key=self._lru.get)
+            del self.streams[cold], self._lru[cold]
+
+    def draft(self, key: tuple, suffix: Sequence[int],
+              k: int) -> List[int]:
+        """Up to ``k`` draft tokens for a slot at context key+suffix.
+
+        Newest consistent stream wins (recent traffic predicts recent
+        traffic); an inconsistent or absent history drafts nothing —
+        the slot simply decodes a width-1 lane that step.
+        """
+        if k <= 0:
+            return []
+        rows = self.streams.get(key)
+        if not rows:
+            return []
+        suffix = tuple(suffix)
+        n = len(suffix)
+        for cont in reversed(rows):
+            if cont[:n] == suffix and len(cont) > n:
+                self._lru[key] = next(self._clock)
+                return list(cont[n:n + k])
+        return []
+
+
 # --------------------------------------------------- pinned host ledger
 
 class PinnedPrefixes:

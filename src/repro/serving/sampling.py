@@ -16,7 +16,12 @@ scheduler relies on (DESIGN.md §8):
 * a request preempted after k tokens and re-prefilled elsewhere resumes
   at ``out_count == k`` and therefore draws token k+1 from the same key
   it would have used unpreempted — preemption is invisible in sampled
-  output, not just greedy output.
+  output, not just greedy output;
+* a speculative draft lane (:func:`sample_lane`) scores position i with
+  key ``out_count + i``, and acceptance/rollback consume key indices in
+  order without skips — speculation is invisible in sampled output too
+  (DESIGN.md §10; all-rejected lanes draw exactly the one key the plain
+  step would).
 
 ``temperature <= 0`` short-circuits to plain argmax, bit-identical to
 the pre-sampler engine (the default: every existing token-identity test
@@ -64,3 +69,22 @@ def sample_tokens(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
     t = jnp.maximum(temp, 1e-6)[..., None]
     sampled = jnp.argmax(masked / t + g, axis=-1).astype(jnp.int32)
     return jnp.where(temp > 0, sampled, greedy)
+
+
+def sample_lane(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
+                seeds: jax.Array, counts: jax.Array) -> jax.Array:
+    """Sample one token per lane position from [DP, Bl, T, V] logits.
+
+    The speculative token-lane form of :func:`sample_tokens`: position
+    i of a slot's lane is that slot's candidate i-th *output* token, so
+    it draws with key ``fold_in(fold_in(key0, seed), counts[..., i])``
+    where the caller passes ``counts[..., i] = out_count + i`` for
+    draft/verify lanes (and a constant ``out_count`` for prefill lanes,
+    whose single emitting position is output index 0).  The key stream
+    is therefore EXACTLY the stream one-token-at-a-time decode draws
+    from — acceptance/rollback never skips or reuses an index, which is
+    what makes speculative sampling bit-identical to the
+    non-speculative run (DESIGN.md §10).
+    """
+    return jax.vmap(sample_tokens, in_axes=(2, None, None, None, 2),
+                    out_axes=2)(logits, temp, top_k, seeds, counts)

@@ -87,6 +87,15 @@ class SchedConfig:
     pin_rows: int = 4
     #: shed pins when a shard's pool occupancy crosses this fraction
     high_water: float = 0.9
+    #: SLO-aware chunk sizing (DESIGN.md §10): the static set of prefill
+    #: lane widths the engine may dispatch (each is one compiled step
+    #: variant).  () disables adaptation — every prefill step runs the
+    #: engine's full ``chunk_size``.  With buckets configured the
+    #: scheduler shrinks the prefill lane to the smallest bucket
+    #: whenever latency-class work is waiting on lower-priority prefill
+    #: (prefill/decode interference control); the engine's full chunk
+    #: is always a member, so an idle queue always runs full-width.
+    chunk_buckets: Tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -204,6 +213,47 @@ class AdmissionScheduler:
             if self.queues[cls.name]:
                 return cls, self.queues[cls.name][0]
         return None
+
+    # ------------------------------------------------- lane-width policy
+    def buckets(self, full_chunk: int) -> Tuple[int, ...]:
+        """The static compile set: configured buckets clipped to the
+        engine's full chunk, plus the full chunk itself (ascending)."""
+        bs = {b for b in self.config.chunk_buckets
+              if 1 <= b <= full_chunk}
+        bs.add(int(full_chunk))
+        return tuple(sorted(bs))
+
+    def pick_chunk(self, engine, full_chunk: int) -> int:
+        """Prefill lane width for this step (DESIGN.md §10).
+
+        The engine dispatches exactly one step shape per step, so a
+        long prefill chunk holds every decode lane in the batch hostage
+        for its whole wall-clock — the prefill/decode interference the
+        ROADMAP item names.  Policy: when work of the top latency class
+        is *waiting* on strictly-lower-priority prefill — queued for a
+        slot, or already decoding in a batch whose prompt feeds belong
+        to lower classes — shrink to the smallest bucket; otherwise run
+        the full chunk.  Width never affects output tokens (chunking is
+        token-invariant), only step latency, so the policy is free to
+        flip per step; each bucket is one compiled variant, chosen from
+        the static :meth:`buckets` set.
+        """
+        bs = self.buckets(full_chunk)
+        if len(bs) == 1:
+            return bs[-1]
+        top = self.classes[0]
+        waiting = bool(self.queues[top.name])
+        decoding_top = prefill_lower = False
+        for slot, req in engine.active.items():
+            cls = self.class_of(req)
+            if engine.pending_tokens.get(slot):
+                if cls.priority < top.priority:
+                    prefill_lower = True
+            elif cls.priority >= top.priority:
+                decoding_top = True
+        if (waiting or decoding_top) and prefill_lower:
+            return bs[0]
+        return bs[-1]
 
     def _place(self, engine, req, est):
         """(match, shard, blocked): a shard-local prefix match, an

@@ -170,10 +170,12 @@ def test_capacity_cap_when_max_len_not_page_multiple(engine_setup):
     assert eng.page_occupancy() == 0.0
 
 
-def test_chunked_prefill_token_identical_to_legacy(engine_setup):
-    """Chunked prefill (the fused device-resident step) must emit exactly
-    the tokens the pre-refactor single-token path emits, across ragged
-    prompt lengths, continuous batching, and several chunk sizes."""
+def test_token_identity_across_lane_widths(engine_setup):
+    """The unified token-lane step must emit exactly the same tokens at
+    every lane width — chunk_size=1 IS the pre-refactor single-token
+    baseline (a width-1 lane per slot per step), so this is the
+    legacy-deletion identity bar: greedy decode bit-identical across
+    ragged prompt lengths, continuous batching, and chunk sizes."""
     cfg, params = engine_setup
     rng = np.random.RandomState(42)
     prompts = [list(rng.randint(1, 255, rng.randint(2, 29)))
@@ -189,14 +191,14 @@ def test_chunked_prefill_token_identical_to_legacy(engine_setup):
         assert all(r.done for r in reqs)
         return [r.out_tokens for r in reqs], eng
 
-    legacy_out, legacy_eng = run(legacy=True)
-    for chunk in (1, 4, 16):
+    width1_out, width1_eng = run(chunk_size=1)
+    for chunk in (4, 16):
         out, eng = run(chunk_size=chunk)
-        assert out == legacy_out, f"chunk_size={chunk} diverged"
+        assert out == width1_out, f"chunk_size={chunk} diverged"
         assert eng.page_occupancy() == 0.0
     # chunked prefill takes fewer steps than one-token-per-step
     out16, eng16 = run(chunk_size=16)
-    assert eng16.stats["steps"] < legacy_eng.stats["steps"]
+    assert eng16.stats["steps"] < width1_eng.stats["steps"]
 
 
 def test_steady_state_decode_single_sync(engine_setup):
