@@ -330,6 +330,7 @@ def serving_throughput():
     report["mixes"]["overload"] = serving_overload(cfg, params)
     report["mixes"]["mesh_shards"] = serving_mesh_shards(cfg, params)
     report["mixes"]["speculative"] = serving_speculative(cfg, params)
+    report["mixes"]["chaos"] = serving_chaos(cfg, params)
     with open("BENCH_serving.json", "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
@@ -653,6 +654,136 @@ def serving_overload(cfg, params):
           f"prefill_pages_saved={row['prefill_pages_saved_by_pinning']} "
           f"token_identical={row['token_identical']} "
           f"leak_free={pinned['leak_free'] and nopin['leak_free']}")
+    return row
+
+
+def serving_chaos(cfg, params):
+    """Fault-tolerance axes (DESIGN.md §11): crash the host inside the
+    torn drain/refill rebalance window, rebuild the engine, reconcile
+    allocator state from the device arrays + admission journal, and
+    measure (a) recovery wall time, (b) token identity of the recovered
+    run vs an unfaulted reference (greedy AND sampled lanes), and
+    (c) warm vs cold restart — a warm restart carries pinned prefixes
+    and speculation streams through the checkpoint sidecar, so the hot
+    prefix needs no re-prefill."""
+    import tempfile
+
+    import numpy as np
+    from repro.checkpoint.ckpt import Checkpointer
+    from repro.serving import chaos
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.sched import SchedConfig
+
+    rng = np.random.RandomState(0)
+    hot = list(rng.randint(1, 255, 16))                  # 2 pages of 8
+    spec = [hot + list(rng.randint(1, 255, 4 + i % 5)) for i in range(8)]
+
+    def reqs():
+        return [Request(i, prompt=list(p), max_new_tokens=6,
+                        temperature=0.7 if i % 2 else 0.0, seed=40 + i)
+                for i, p in enumerate(spec)]
+
+    # ---- reference: no faults
+    ref_reqs = reqs()
+    eng = ServingEngine(cfg, params, dp=1, b_local=4, max_len=96,
+                        chunk_size=16)
+    for r in ref_reqs:
+        eng.submit(r)
+    eng.run(max_steps=1000)
+    ref_out = {r.rid: list(r.out_tokens) for r in ref_reqs}
+
+    # ---- crash mid-rebalance, recover, finish
+    journal = chaos.ServingJournal()
+    injector = chaos.parse_faults("crash@4:post_sync:torn")
+
+    def build():
+        return ServingEngine(cfg, params, dp=1, b_local=4, max_len=96,
+                             chunk_size=16, journal=journal,
+                             injector=injector)
+
+    eng = build()
+    for r in reqs():
+        eng.submit(r)
+    try:
+        eng.run(max_steps=1000)
+        raise AssertionError("injected crash never fired")
+    except chaos.HostCrash:
+        pass
+    t0 = time.perf_counter()
+    eng, report = chaos.recover_engine(build, eng, journal)
+    recovery_s = time.perf_counter() - t0
+    eng.run(max_steps=1000)
+    out = journal.outputs()
+    crash_identical = (journal.finished() == set(ref_out)
+                       and all(out[rid] == ref_out[rid] for rid in ref_out))
+    crash_row = {
+        "recovery_ms": round(recovery_s * 1e3, 1),
+        "reconciled_pages": report["reclaimed"],
+        "requeued": report["requeued"],
+        "never_dry": report["never_dry"],
+        "token_identical": crash_identical,
+        "leak_free": eng.leak_free(),
+    }
+
+    # ---- warm vs cold restart: do pins/speculation survive?
+    def fresh():
+        return ServingEngine(cfg, params, dp=1, b_local=4, max_len=96,
+                             chunk_size=16, speculate=True, draft_len=4,
+                             sched=SchedConfig(pin_pages=8))
+
+    def drive(eng, batch):
+        t0 = time.perf_counter()
+        for r in batch:
+            eng.submit(r)
+        eng.run(max_steps=1000)
+        dt = time.perf_counter() - t0
+        lat = eng.latency_quantiles()
+        return dt, lat["first_token_p50_s"]
+
+    def restart_stats(eng, dt):
+        s = eng.stats
+        return {
+            "wall_s": round(dt, 3),
+            "prompt_tokens": s["prompt_tokens"],
+            "pin_hit_reqs": s["pin_hit_reqs"],
+            "pin_hit_tokens": s["pin_hit_tokens"],
+            "spec_lanes": s["spec_lanes"],
+        }
+
+    with tempfile.TemporaryDirectory() as d:
+        warmup = fresh()
+        drive(warmup, reqs())                      # pins hot, records spec
+        ckptr = Checkpointer(d, keep=1)
+        warmup.save_warm(ckptr, step=1)
+
+        warm = fresh()
+        warm.restore_warm(ckptr)
+        dt_w, ftl_w = drive(warm, reqs())
+        warm_row = restart_stats(warm, dt_w)
+        warm_row["first_token_p50_ms"] = round(ftl_w * 1e3, 1)
+        warm_ok = warm.stats["pin_hit_reqs"] > 0
+
+        cold = fresh()
+        dt_c, ftl_c = drive(cold, reqs())
+        cold_row = restart_stats(cold, dt_c)
+        cold_row["first_token_p50_ms"] = round(ftl_c * 1e3, 1)
+
+    row = {
+        "crash_recovery": crash_row,
+        "warm_restart": warm_row,
+        "cold_restart": cold_row,
+        "prefill_tokens_saved_by_warm_restart":
+            cold_row["prompt_tokens"] - warm_row["prompt_tokens"],
+        "warm_restart_carried_pins": warm_ok,
+    }
+    print(f"serving_chaos,{crash_row['recovery_ms'] * 1e3:.0f},"
+          f"torn-crash recovery={crash_row['recovery_ms']}ms "
+          f"reconciled={crash_row['reconciled_pages']}pg "
+          f"token_identical={crash_row['token_identical']} "
+          f"leak_free={crash_row['leak_free']} "
+          f"warm_vs_cold_prefill_saved="
+          f"{row['prefill_tokens_saved_by_warm_restart']}tok "
+          f"warm_pin_hits={warm_row['pin_hit_reqs']}")
     return row
 
 

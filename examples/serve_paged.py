@@ -15,6 +15,14 @@ per step on a packed status array.
       --hot-prefix 24 --pin-pages 12 --bursts 3 --interactive-frac 0.25
   PYTHONPATH=src python examples/serve_paged.py \
       --hot-prefix 24 --speculate --draft-len 4 --chunk-buckets 1,4,8
+
+Fault-tolerant mode (DESIGN.md §11): ``--inject-fault`` takes a
+comma-joined spec of deterministic faults (serving/chaos.py), e.g.
+``crash@6:post_sync:torn,shard_loss@12:post_admission:1``.  Host
+crashes are caught here, the engine is rebuilt, and allocator state is
+reconciled from the surviving device arrays + the admission journal
+(``chaos.recover_engine``); the driver then proves the run drained
+with zero leaked pages.
 """
 
 import argparse
@@ -25,6 +33,7 @@ import numpy as np
 
 from repro import models
 from repro.configs import get_config, smoke_config
+from repro.serving import chaos
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.sched import SchedConfig
 
@@ -68,17 +77,32 @@ def main():
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k cutoff when sampling (0 = full vocab)")
+    ap.add_argument("--inject-fault", default="", metavar="SPEC",
+                    help="deterministic fault spec, comma-joined "
+                         "kind@step:phase[:extra] — kinds crash / "
+                         "shard_loss / straggler / poison / error "
+                         "(serving/chaos.py; DESIGN.md §11)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none)")
     args = ap.parse_args()
 
     cfg = smoke_config(get_config(args.arch))
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     buckets = tuple(int(b) for b in args.chunk_buckets.split(",") if b)
-    engine = ServingEngine(cfg, params, dp=2, b_local=4, max_len=96,
-                           scheduler_lanes=4, chunk_size=args.chunk,
-                           speculate=args.speculate,
-                           draft_len=args.draft_len,
-                           sched=SchedConfig(pin_pages=args.pin_pages,
-                                             chunk_buckets=buckets))
+    faults = bool(args.inject_fault)
+    journal = chaos.ServingJournal() if faults else None
+    injector = chaos.parse_faults(args.inject_fault) if faults else None
+
+    def build():
+        return ServingEngine(
+            cfg, params, dp=2, b_local=4, max_len=96,
+            scheduler_lanes=4, chunk_size=args.chunk,
+            speculate=args.speculate, draft_len=args.draft_len,
+            sched=SchedConfig(pin_pages=args.pin_pages,
+                              chunk_buckets=buckets),
+            journal=journal, injector=injector, max_restarts=4)
+
+    engine = build()
 
     rng = np.random.RandomState(0)
     hot = list(rng.randint(1, cfg.vocab - 1, args.hot_prefix))
@@ -97,16 +121,35 @@ def main():
         reqs.append(Request(
             rid, prompt=prompt,
             max_new_tokens=args.max_new, slo=slo,
-            temperature=args.temperature, top_k=args.top_k, seed=rid))
+            temperature=args.temperature, top_k=args.top_k, seed=rid,
+            deadline_s=args.deadline_s))
 
     t0 = time.time()
     peak_occ = 0.0
+    crashes = 0
     per_burst = -(-len(reqs) // max(args.bursts, 1))
     for i in range(0, len(reqs), per_burst):
         for r in reqs[i:i + per_burst]:
             engine.submit(r)
         while not engine.idle():
-            engine.step()
+            try:
+                # one protected step: engine.run owns the §11 exception
+                # discipline (poison -> bounded retry, step error ->
+                # in-place recovery); only a host crash escapes
+                engine.run(max_steps=1)
+            except chaos.HostCrash:
+                # the host process "died": rebuild from scratch and
+                # reconcile allocator state against the device arrays
+                # + journal — in-flight work requeues token-identically
+                crashes += 1
+                engine, report = chaos.recover_engine(
+                    build, engine, journal)
+                print(f"[chaos] host crash #{crashes} at "
+                      f"step={injector.step}: reconciled "
+                      f"{report['reclaimed']} leaked pages, "
+                      f"requeued {report['requeued']} requests, "
+                      f"restored {report['pins_restored']} pins "
+                      f"(never_dry={report['never_dry']})")
             peak_occ = max(peak_occ, engine.page_occupancy())
     dt = time.time() - t0
 
@@ -145,8 +188,22 @@ def main():
     print(f"host admission worst-case steps={s['alloc_steps_max']} "
           f"(paper Result 1: O(1))")
     engine.flush_pins()
-    assert engine.page_occupancy() == 0.0, "pages leaked after drain+flush"
-    assert all(r.done for r in reqs)
+    if faults:
+        print(f"[chaos] fired={injector.log} crashes={crashes} "
+              f"shards_lost={sorted(engine.lost_shards)} "
+              f"recoveries={s['recoveries']} retries={s['retries']} "
+              f"failed={s['failed']} "
+              f"deadline_expired={s['deadline_expired']}")
+        assert not injector.pending(), (
+            f"faults never reached: {injector.pending()}")
+        assert engine.leak_free(), "pages leaked on surviving shards"
+        assert not journal.in_flight(), "requests neither finished nor failed"
+        print(f"[chaos] drained clean: {len(journal.finished())} finished, "
+              f"zero leaked pages on surviving shards")
+    else:
+        assert engine.page_occupancy() == 0.0, \
+            "pages leaked after drain+flush"
+        assert all(r.done for r in reqs)
 
 
 if __name__ == "__main__":

@@ -2,12 +2,17 @@
 
 Layout: ``<dir>/step_<N>/``
   * ``shard_<k>.npz``  — flat {path: array} for this host's shard
+  * ``aux.json``       — optional JSON sidecar (host-side ledgers the
+    serving plane's warm restart carries: pin entries, speculation
+    streams, queued requests — serving/engine.py)
   * ``INDEX.json``     — written LAST (atomic rename); a checkpoint
     without INDEX is incomplete and ignored on restore
 
-Fault-tolerance contract (runtime/fault.py):
-  * saves never corrupt the previous checkpoint (new directory, atomic
-    index rename);
+Fault-tolerance contract (runtime/fault.py, serving/chaos.py):
+  * saves never corrupt the previous checkpoint: every file is written
+    to a temp name and atomically renamed into place, so a crash
+    mid-save — even one re-writing an existing step directory — leaves
+    either the old complete snapshot or the new one, never a torn file;
   * ``latest_step`` only reports complete checkpoints;
   * async mode runs serialization in a worker thread — the train loop's
     deamortized "delayed work" slice, the same discipline as the paper's
@@ -72,7 +77,8 @@ class Checkpointer:
         self._thread: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------- save
-    def save(self, step: int, state: Any, async_: bool = False) -> None:
+    def save(self, step: int, state: Any, async_: bool = False,
+             aux: Any = None) -> None:
         def np_safe(a):
             a = np.asarray(a)
             if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
@@ -82,25 +88,37 @@ class Checkpointer:
         if async_:
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, flat), daemon=True)
+                target=self._write, args=(step, flat, aux), daemon=True)
             self._thread.start()
         else:
-            self._write(step, flat)
+            self._write(step, flat, aux)
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               aux: Any = None) -> None:
         d = self.dir / f"step_{step:08d}"
         d.mkdir(parents=True, exist_ok=True)
-        np.savez(d / f"shard_{self.shard_id}.npz", **flat)
+        # write-temp-then-rename: a crash mid-serialization must never
+        # tear the npz a restore would read (tested by the kill-mid-save
+        # regression in tests/test_chaos.py)
+        tmp_npz = d / f".shard_{self.shard_id}.npz.tmp"
+        with open(tmp_npz, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp_npz, d / f"shard_{self.shard_id}.npz")
+        if aux is not None:
+            tmp_aux = d / ".aux.json.tmp"
+            tmp_aux.write_text(json.dumps(aux, default=int))
+            os.replace(tmp_aux, d / "aux.json")
         tmp = d / ".INDEX.tmp"
         tmp.write_text(json.dumps({
             "step": step,
             "shards": [self.shard_id],
             "keys": sorted(flat),
+            "aux": aux is not None,
         }))
         os.replace(tmp, d / "INDEX.json")       # atomic completion marker
         self._gc()
@@ -124,3 +142,10 @@ class Checkpointer:
         assert (d / "INDEX.json").exists(), "incomplete checkpoint"
         flat = dict(np.load(d / f"shard_{self.shard_id}.npz"))
         return _unflatten_into(like, flat)
+
+    def restore_aux(self, step: int) -> Any:
+        """The JSON sidecar saved alongside ``step`` (None if absent)."""
+        d = self.dir / f"step_{step:08d}"
+        assert (d / "INDEX.json").exists(), "incomplete checkpoint"
+        p = d / "aux.json"
+        return json.loads(p.read_text()) if p.exists() else None

@@ -33,10 +33,11 @@ that axis so page ids stay shard-local.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import block_pool
 from .block_pool import BlockPool, NULL
@@ -390,3 +391,123 @@ def free_shared_dp(pool: HierPool, ids: jax.Array) -> HierPool:
 
 def rebalance_dp(pool: HierPool) -> HierPool:
     return jax.vmap(rebalance, in_axes=(DP_AXES,))(pool)
+
+
+def rebalance_drain_dp(pool: HierPool) -> HierPool:
+    """Drain phase only — the torn mid-rebalance state fault injection
+    plants before a simulated host crash (DESIGN.md §11)."""
+    return jax.vmap(rebalance_drain, in_axes=(DP_AXES,))(pool)
+
+
+# ----------------------------------------------------------- crash recovery
+#
+# After a host crash the free stacks and the host's shadow of lane
+# occupancy are untrusted: the crash may have landed anywhere, including
+# inside the rebalance's torn drain/refill window.  What remains
+# trustworthy is *reachability* — the device-resident page-table rows
+# recovery keeps and the journaled pin rows.  Reconciliation recounts
+# references from those rows alone and rebuilds the whole pool; it is
+# host-side numpy, strictly off the hot path.
+
+
+def _reconcile_shard(shared: BlockPool, private_ids: np.ndarray,
+                     keep_rows: Optional[np.ndarray],
+                     pin_rows: Optional[np.ndarray]
+                     ) -> Tuple[HierPool, dict]:
+    old_ref = np.asarray(shared.refcount)
+    m = old_ref.shape[0]
+    lanes = np.asarray(private_ids)
+    L, cap = lanes.shape
+    ell = cap // 3
+
+    refs = np.zeros(m, np.int64)
+    for rows in (keep_rows, pin_rows):
+        if rows is None:
+            continue
+        ids = np.asarray(rows).reshape(-1)
+        ids = ids[(ids >= 0) & (ids < m)]
+        np.add.at(refs, ids, 1)
+
+    # pages a dead episode held (were referenced) that no keeping row
+    # reaches any more — exactly what reconcile returns to the free set
+    reclaimed = np.nonzero((old_ref > 0) & (refs == 0))[0]
+    # referenced pages the torn state thought free (counter corruption)
+    resurrected = int(np.sum((old_ref <= 0) & (refs > 0)))
+
+    free_list = np.nonzero(refs == 0)[0]           # ascending ids
+    # lanes first: exactly ell ids each while supply lasts, so the §4.2
+    # never-dry floor holds by construction whenever slack allows
+    new_lanes = np.full((L, cap), NULL, np.int32)
+    new_tops = np.zeros(L, np.int32)
+    pos = 0
+    for i in range(L):
+        take = min(ell, len(free_list) - pos)
+        if take <= 0:
+            break
+        new_lanes[i, :take] = free_list[pos:pos + take]
+        new_tops[i] = take
+        pos += take
+    rest = free_list[pos:]
+    new_free = np.full(m, NULL, np.int32)
+    new_free[:len(rest)] = rest[::-1]              # pops come off the end
+
+    shard_pool = HierPool(
+        shared=BlockPool(free_ids=jnp.asarray(new_free),
+                         top=jnp.asarray(np.int32(len(rest))),
+                         refcount=jnp.asarray(refs.astype(old_ref.dtype))),
+        private_ids=jnp.asarray(new_lanes),
+        private_top=jnp.asarray(new_tops))
+    report = {
+        "reclaimed": [int(b) for b in reclaimed],
+        "resurrected": resurrected,
+        "free": int(len(rest)) + int(new_tops.sum()),
+        "live": int(np.sum(refs > 0)),
+        "capacity": int(m),
+        "never_dry": bool(new_tops.min() >= ell) if L else True,
+    }
+    assert report["free"] + report["live"] == m, "reconcile broke conservation"
+    return shard_pool, report
+
+
+def audit_and_reconcile(pool: HierPool, keep_tables=None, pin_tables=None
+                        ) -> Tuple[HierPool, dict]:
+    """Rebuild a (possibly torn) pool from device-resident references.
+
+    ``keep_tables`` are the page-table rows recovery keeps (``[B, maxp]``
+    per shard; usually none — in-flight requests requeue through the
+    preemption-resume path) and ``pin_tables`` the journal-trusted pin
+    rows; both use NULL (-1) for empty entries.  Every block referenced
+    by a keeping row stays live with a freshly recounted refcount; every
+    other block becomes free — each lane refilled to exactly ``ell``,
+    the remainder restacked on the shared pool in deterministic order.
+
+    Accepts a single-shard pool or a DP-stacked one (leading ``[DP,...]``
+    leaf axes).  Returns ``(pool, report)``; conservation (free + live ==
+    capacity, per shard) is asserted, never-dry is reported per shard.
+    """
+    dp_form = np.asarray(pool.private_top).ndim == 2
+    if not dp_form:
+        shard_pool, rep = _reconcile_shard(
+            pool.shared, pool.private_ids, keep_tables, pin_tables)
+        return shard_pool, {
+            "shards": [rep], "reclaimed": len(rep["reclaimed"]),
+            "resurrected": rep["resurrected"],
+            "never_dry": rep["never_dry"], "conserved": True}
+    host = jax.tree.map(np.asarray, pool)
+    dp = host.private_top.shape[0]
+    shards, reps = [], []
+    for s in range(dp):
+        shard = jax.tree.map(lambda a: a[s], host)
+        sp, rep = _reconcile_shard(
+            shard.shared, shard.private_ids,
+            None if keep_tables is None else np.asarray(keep_tables)[s],
+            None if pin_tables is None else np.asarray(pin_tables)[s])
+        shards.append(sp)
+        reps.append(rep)
+    pool_out = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+    return pool_out, {
+        "shards": reps,
+        "reclaimed": sum(len(r["reclaimed"]) for r in reps),
+        "resurrected": sum(r["resurrected"] for r in reps),
+        "never_dry": all(r["never_dry"] for r in reps),
+        "conserved": True}

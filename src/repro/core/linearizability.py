@@ -115,6 +115,15 @@ def expand_batch_history(history: Sequence[OpRecord]) -> List[OpRecord]:
       batch free of same-step grants, so it must linearize like one
       (the episode-completeness conditions are a separate check,
       :func:`check_speculative_history`);
+    * ``reconcile`` (arg = iterable of reclaimed block ids; crash
+      recovery's :func:`hier_pool.audit_and_reconcile` returning a dead
+      episode's pages to the free set) becomes one ``free`` per id —
+      reclamation IS a batch free performed on the crashed processes'
+      behalf, so post-recovery re-grants of those pages must not look
+      like double allocation (the exactly-the-orphans condition is a
+      separate check, :func:`check_recovery_history`);
+    * ``crash`` (arg = iterable of crashed pids) passes through — it
+      moves no blocks; only the recovery checker interprets it;
     * ``allocate`` / ``free`` pass through unchanged.
 
     Every expanded op inherits the batch op's invocation/response
@@ -144,6 +153,13 @@ def expand_batch_history(history: Sequence[OpRecord]) -> List[OpRecord]:
                     result=None, response_step=op.response_step))
         elif op.name == "preempt":
             ids = [b for b in (op.result or []) if b is not None and b >= 0]
+            for j, b in enumerate(ids):
+                out.append(OpRecord(
+                    opid=op.opid * serial + j, pid=op.pid, name="free",
+                    arg=b, invoke_step=op.invoke_step, steps=op.steps,
+                    result=None, response_step=op.response_step))
+        elif op.name == "reconcile":
+            ids = [b for b in (op.arg or []) if b is not None and b >= 0]
             for j, b in enumerate(ids):
                 out.append(OpRecord(
                     opid=op.opid * serial + j, pid=op.pid, name="free",
@@ -213,6 +229,82 @@ def check_preemption_history(history: Sequence[OpRecord]) -> List[str]:
             for b in released:
                 owner.pop(b, None)
             held[victim] = set()
+    return errs
+
+
+def check_recovery_history(history: Sequence[OpRecord]) -> List[str]:
+    """Batch safety plus crash-recovery completeness.
+
+    On top of :func:`check_batch_alloc_history` (with ``reconcile``
+    expanding to frees), replays the completed ops in response order
+    tracking each pid's held blocks:
+
+    * a ``crash`` op (arg = iterable of crashed pids) orphans every
+      block those pids hold — the dead episodes can never free them;
+    * the next ``reconcile`` op (arg = iterable of reclaimed block ids)
+      must reclaim *exactly* the orphaned set: an orphan it misses is a
+      **leak** (a dead request's page never returns to the free
+      stacks), a reclaimed block nobody orphaned is a **double free**
+      (a surviving holder's live page was pushed back while still
+      mapped — the next grant hands one physical page to two lanes);
+    * orphans still outstanding when the history ends are leaks too.
+
+    Single id space — shard-split a multi-shard history with
+    :func:`split_history_by_shard` first, as for the other checkers.
+    Mirrors :func:`check_preemption_history`: both verify that a batch
+    release performed *on behalf of* a lane (eviction there, reconcile
+    here) matches exactly what the lane held.
+    """
+    errs = check_batch_alloc_history(history)
+    held: Dict[int, set] = {}
+    owner: Dict[Any, int] = {}
+    orphaned: Dict[Any, int] = {}          # block -> crashed pid
+    done = [op for op in history if op.completed]
+    for op in sorted(done, key=lambda o: (o.response_step, o.invoke_step)):
+        if op.name == "allocate":
+            if op.result is not None and op.result >= 0:
+                held.setdefault(op.pid, set()).add(op.result)
+                owner[op.result] = op.pid
+        elif op.name == "alloc_n":
+            for b in (op.result or []):
+                if b is not None and b >= 0:
+                    held.setdefault(op.pid, set()).add(b)
+                    owner[b] = op.pid
+        elif op.name == "free":
+            held.get(owner.pop(op.arg, op.pid), set()).discard(op.arg)
+        elif op.name == "free_n":
+            for b in (op.arg or []):
+                if b is not None and b >= 0:
+                    held.get(owner.pop(b, op.pid), set()).discard(b)
+        elif op.name == "crash":
+            for pid in (op.arg or []):
+                for b in held.get(pid, set()):
+                    orphaned[b] = pid
+                held[pid] = set()
+        elif op.name == "reconcile":
+            reclaimed = {b for b in (op.arg or [])
+                         if b is not None and b >= 0}
+            leaked = set(orphaned) - reclaimed
+            double = reclaimed - set(orphaned)
+            if leaked:
+                errs.append(
+                    f"reconcile op {op.opid}: leaked blocks "
+                    f"{sorted(leaked)} (orphaned by crashed pids "
+                    f"{sorted({orphaned[b] for b in leaked})}, "
+                    f"never reclaimed)")
+            if double:
+                errs.append(
+                    f"reconcile op {op.opid}: blocks {sorted(double)} "
+                    f"reclaimed but not orphaned (double free of a "
+                    f"live holder's pages)")
+            for b in reclaimed:
+                owner.pop(b, None)
+            orphaned.clear()
+    if orphaned:
+        errs.append(
+            f"end of history: blocks {sorted(orphaned)} orphaned by "
+            f"crashed pids {sorted(set(orphaned.values()))} were never "
+            f"reclaimed (leak)")
     return errs
 
 

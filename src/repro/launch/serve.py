@@ -14,6 +14,13 @@ scheduler a static set of prefill lane widths to shrink into when
 latency-class work waits; ``--speculate``/``--draft-len`` turn on
 speculative decode on shared prefixes (``--repeat-frac`` makes part of
 the trace repeat full prompts — the traffic shape speculation wins on).
+
+Fault knobs (DESIGN.md §11): ``--inject-fault kind@step:phase[:extra]``
+deterministically injects host crashes / shard loss / stragglers /
+poisoned requests at engine phase boundaries (serving/chaos.py); the
+driver recovers crashes by rebuilding the engine and reconciling
+allocator state from the device arrays + admission journal, then
+asserts the run drained with zero leaked pages on surviving shards.
 """
 
 from __future__ import annotations
@@ -26,6 +33,7 @@ import numpy as np
 
 from .. import models
 from ..configs import get_config, smoke_config
+from ..serving import chaos
 from ..serving.engine import Request, ServingEngine
 from ..serving.sched import SchedConfig
 
@@ -63,6 +71,11 @@ def main(argv=None):
                     help="shard_map the allocation plane over a ('dp',) "
                          "device mesh when >= dp devices exist "
                          "(DESIGN.md §9); off = single-device vmap")
+    ap.add_argument("--inject-fault", default="", metavar="SPEC",
+                    help="deterministic fault schedule, comma-joined "
+                         "kind@step:phase[:extra] (serving/chaos.py)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -70,14 +83,22 @@ def main(argv=None):
         cfg = smoke_config(cfg)
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     buckets = tuple(int(b) for b in args.chunk_buckets.split(",") if b)
-    engine = ServingEngine(cfg, params, dp=args.dp, b_local=args.b_local,
-                           max_len=args.max_len,
-                           speculate=args.speculate,
-                           draft_len=args.draft_len,
-                           mesh=("auto" if args.mesh == "auto" else None),
-                           sched=SchedConfig(pin_pages=args.pin_pages,
-                                             page_budget=args.page_budget,
-                                             chunk_buckets=buckets))
+    faults = bool(args.inject_fault)
+    journal = chaos.ServingJournal() if faults else None
+    injector = chaos.parse_faults(args.inject_fault) if faults else None
+
+    def build():
+        return ServingEngine(
+            cfg, params, dp=args.dp, b_local=args.b_local,
+            max_len=args.max_len,
+            speculate=args.speculate, draft_len=args.draft_len,
+            mesh=("auto" if args.mesh == "auto" else None),
+            sched=SchedConfig(pin_pages=args.pin_pages,
+                              page_budget=args.page_budget,
+                              chunk_buckets=buckets),
+            journal=journal, injector=injector, max_restarts=4)
+
+    engine = build()
     if engine.mesh is not None:
         print(f"allocation plane: shard_map over {engine.mesh} "
               f"({engine.dp} shard-owning devices)")
@@ -97,9 +118,22 @@ def main(argv=None):
                                             rng.randint(4, 12)))
         prompts.append(prompt)
         engine.submit(Request(rid, prompt=prompt,
-                              max_new_tokens=args.max_new, slo=slo))
+                              max_new_tokens=args.max_new, slo=slo,
+                              deadline_s=args.deadline_s))
     t0 = time.time()
-    engine.run()
+    crashes = 0
+    while True:
+        try:
+            engine.run()
+            break
+        except chaos.HostCrash:
+            crashes += 1
+            engine, report = chaos.recover_engine(build, engine, journal)
+            print(f"[chaos] host crash #{crashes} at step "
+                  f"{injector.step}: reconciled {report['reclaimed']} "
+                  f"leaked pages, requeued {report['requeued']} "
+                  f"requests, restored {report['pins_restored']} pins "
+                  f"(never_dry={report['never_dry']})")
     dt = time.time() - t0
     s = engine.stats
     lat = engine.latency_quantiles()
@@ -127,7 +161,21 @@ def main(argv=None):
     print(f"shard occupancy: mean={occ['pages_mean_shard']} "
           f"peak={occ['pages_peak_shard']} pages per shard")
     engine.flush_pins()
-    print(f"page occupancy after drain+flush: {engine.page_occupancy():.4f}")
+    if faults:
+        print(f"[chaos] fired={injector.log} crashes={crashes} "
+              f"shards_lost={sorted(engine.lost_shards)} "
+              f"retries={s['retries']} failed={s['failed']} "
+              f"deadline_expired={s['deadline_expired']}")
+        assert not injector.pending(), (
+            f"faults never reached: {injector.pending()}")
+        assert engine.leak_free(), "pages leaked on surviving shards"
+        assert not journal.in_flight(), (
+            "requests neither finished nor failed")
+        print(f"[chaos] drained clean: {len(journal.finished())} "
+              f"finished, zero leaked pages on surviving shards")
+    else:
+        print(f"page occupancy after drain+flush: "
+              f"{engine.page_occupancy():.4f}")
     return engine
 
 

@@ -8,11 +8,16 @@ stream to that step, continue" — correct because the data pipeline is a
 pure function of the step index (see data/pipeline.py).
 
 Components:
+  * :class:`StepWatchdog` — median-based straggler detection plus an
+    optional hard per-step timeout; shared by the training loop below
+    and the serving engine (serving/engine.py), so both planes classify
+    slow steps with one implementation.
   * :class:`FaultTolerantLoop` — wraps a step function with periodic
     (async) checkpointing, failure capture, bounded restart-with-backoff,
-    and a step-time watchdog for stragglers.
+    and the step-time watchdog for stragglers.
   * :class:`FailureInjector` — deterministic fault schedule for tests
-    (raise at step k / slow a step by t).
+    (raise at step k / slow a step by t).  The serving plane's richer
+    phase-boundary injector lives in serving/chaos.py.
 On a real cluster the same loop runs per host with jax.distributed;
 coordinator failures surface as exceptions here too.
 """
@@ -47,6 +52,50 @@ class LoopStats:
     step_times: List[float] = dataclasses.field(default_factory=list)
 
 
+class StepWatchdog:
+    """Step-time anomaly classifier: stragglers and hard timeouts.
+
+    ``observe(step, dt)`` returns ``None`` for a normal step,
+    ``"straggler"`` when ``dt`` exceeds ``straggler_factor`` times the
+    rolling median of the last ``window`` steps (needing at least
+    ``min_samples`` observations — cold-start compilations must not
+    count), or ``"timeout"`` when ``dt`` exceeds the absolute
+    ``timeout_s`` budget (0 disables).  A timeout outranks a straggler:
+    it is the caller's signal to fail the step, not merely to note it.
+    """
+
+    def __init__(self, straggler_factor: float = 3.0, timeout_s: float = 0.0,
+                 window: int = 64, min_samples: int = 8,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.straggler_factor = straggler_factor
+        self.timeout_s = timeout_s
+        self.window = window
+        self.min_samples = min_samples
+        self.on_straggler = on_straggler
+        self.step_times: List[float] = []
+        self.straggler_steps = 0
+        self.timeout_steps = 0
+
+    def observe(self, step: int, dt: float) -> Optional[str]:
+        times = self.step_times
+        times.append(dt)
+        verdict = None
+        if len(times) >= self.min_samples:
+            tail = times[-self.window:]
+            med = sorted(tail)[len(tail) // 2]
+            if dt > self.straggler_factor * med:
+                self.straggler_steps += 1
+                if self.on_straggler:
+                    self.on_straggler(step, dt)
+                verdict = "straggler"
+        if self.timeout_s > 0 and dt > self.timeout_s:
+            self.timeout_steps += 1
+            verdict = "timeout"
+        if len(times) > 4 * self.window:
+            del times[:2 * self.window]
+        return verdict
+
+
 class FaultTolerantLoop:
     def __init__(
         self,
@@ -68,6 +117,11 @@ class FaultTolerantLoop:
         self.injector = injector
         self.on_straggler = on_straggler
         self.stats = LoopStats()
+        self.watchdog = StepWatchdog(straggler_factor=straggler_factor,
+                                     on_straggler=on_straggler)
+        # LoopStats.step_times aliases the watchdog's rolling buffer so
+        # existing consumers keep reading the same list object
+        self.stats.step_times = self.watchdog.step_times
 
     def run(self, state: Any, n_steps: int) -> Any:
         start = self.ckpt.latest_step()
@@ -105,13 +159,5 @@ class FaultTolerantLoop:
         return state
 
     def _watchdog(self, step: int, dt: float) -> None:
-        times = self.stats.step_times
-        times.append(dt)
-        if len(times) >= 8:
-            med = sorted(times[-64:])[len(times[-64:]) // 2]
-            if dt > self.straggler_factor * med:
-                self.stats.straggler_steps += 1
-                if self.on_straggler:
-                    self.on_straggler(step, dt)
-        if len(times) > 256:
-            del times[:128]
+        if self.watchdog.observe(step, dt) == "straggler":
+            self.stats.straggler_steps += 1

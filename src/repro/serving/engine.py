@@ -95,6 +95,8 @@ from ..launch.steps import (serve_register_pspec, serve_shardings,
 from ..models.decode_init import empty_decode_state, empty_serve_arrays
 from ..models.layers import logits_apply
 from ..models.transformer import DecodeState, forward_decode_chunk
+from ..runtime.fault import StepWatchdog
+from .chaos import HostCrash, PoisonedRequest
 from .prefix_cache import (PinnedPrefixes, PrefixCache, SpeculationStore,
                            pin_id_of, pin_prefix_step, share_pinned_step,
                            share_prefix_step, unpin_step)
@@ -113,11 +115,17 @@ class Request:
     seed: int = 0
     # scheduling
     slo: str = "standard"
+    # deadline: relative seconds from submit (0 = none); the engine
+    # stamps the absolute ``deadline_at`` at first submission so the
+    # deadline survives preemption, crash requeue, and warm restart
+    deadline_s: float = 0.0
+    deadline_at: float = 0.0
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     done: bool = False
-    rejected: Optional[str] = None     # backpressure reason, terminal
+    rejected: Optional[str] = None     # typed failure reason, terminal
     preemptions: int = 0
+    retries: int = 0                   # fault-retry attempts consumed
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0
@@ -342,7 +350,10 @@ class ServingEngine:
                  prefix_sharing: bool = True,
                  speculate: bool = False, draft_len: int = 4,
                  sched: Optional[SchedConfig] = None,
-                 mesh="auto"):
+                 mesh="auto",
+                 journal=None, injector=None,
+                 watchdog: Optional[StepWatchdog] = None,
+                 clock=None, max_restarts: int = 0):
         self.cfg = cfg
         self.params = params
         self.dp, self.bl = dp, b_local
@@ -415,6 +426,7 @@ class ServingEngine:
                 donate_argnums=donate)
 
         eos = -1 if eos_id is None else int(eos_id)
+        self.eos_id = eos_id
         self._serve_variants = {
             (sampler, spec): wrap(
                 functools.partial(_serve_step, cfg, self.capacity, eos,
@@ -508,6 +520,17 @@ class ServingEngine:
         self._free_slots = deque(range(n_slots))
         self.lanes = itertools.cycle(range(scheduler_lanes))
 
+        # fault tolerance (DESIGN.md §11): optional admission/completion
+        # journal + phase-boundary failure injector (serving/chaos.py),
+        # the shared step watchdog, an injectable clock for deadline
+        # tests, and the in-place recovery budget for run()
+        self._journal = journal
+        self._injector = injector
+        self.watchdog = watchdog or StepWatchdog()
+        self._clock = clock or time.time
+        self.max_restarts = max_restarts
+        self.lost_shards: set = set()
+
         self.active: Dict[int, Request] = {}     # slot -> request
         self.pending_tokens: Dict[int, List[int]] = {}
         self._latencies: List[float] = []
@@ -526,7 +549,11 @@ class ServingEngine:
                       # over-allocation rolled back by rejected drafts
                       "chunk_hist": {}, "spec_drafted": 0,
                       "spec_accepted": 0, "spec_lanes": 0,
-                      "accept_hist": {}, "spec_pages_rolled_back": 0}
+                      "accept_hist": {}, "spec_pages_rolled_back": 0,
+                      # fault-tolerance telemetry (DESIGN.md §11)
+                      "stragglers": 0, "step_timeouts": 0,
+                      "recoveries": 0, "deadline_expired": 0,
+                      "failed": 0, "retries": 0, "shards_lost": 0}
 
     # ------------------------------------------------------------ control
     @property
@@ -579,12 +606,38 @@ class ServingEngine:
             pass
         self._free_slots.append(slot)
 
+    # --------------------------------------------------- fault tolerance
+    def _jrec(self, kind: str, **fields) -> None:
+        if self._journal is not None:
+            self._journal.record(kind, **fields)
+
+    def _fire(self, phase: str, **ctx) -> None:
+        if self._injector is not None:
+            self._injector.fire(self, phase, **ctx)
+
     # ------------------------------------------------ scheduler interface
     def submit(self, req: Request) -> Admission:
         """Enqueue (or reject, with a reason) through the admission
         scheduler.  The return value is the backpressure signal."""
-        req.submitted_at = time.time()
-        return self.scheduler.submit(req, self.est_pages(req))
+        now = self._clock()
+        req.submitted_at = now
+        if req.deadline_s > 0 and req.deadline_at == 0.0:
+            req.deadline_at = now + req.deadline_s
+        # write-ahead: the journal sees every request before the
+        # scheduler does, carrying any resumed token prefix — recovery's
+        # in_flight() replay is complete even if we crash mid-submit
+        self._jrec("submit", rid=req.rid,
+                   prompt=[int(t) for t in req.prompt],
+                   max_new_tokens=int(req.max_new_tokens),
+                   temperature=float(req.temperature),
+                   top_k=int(req.top_k), seed=int(req.seed), slo=req.slo,
+                   out_tokens=[int(t) for t in req.out_tokens],
+                   preemptions=int(req.preemptions),
+                   deadline_at=float(req.deadline_at))
+        adm = self.scheduler.submit(req, self.est_pages(req))
+        if not adm.accepted:
+            self._jrec("reject", rid=req.rid, reason=adm.reason)
+        return adm
 
     def est_pages(self, req: Request) -> int:
         """Worst-case page demand of a request: its full prompt plus
@@ -654,6 +707,7 @@ class ServingEngine:
         if req.temperature > 0:
             self._sampling_slots.add(slot)
         self.stats["admitted"] += 1
+        self._jrec("admit", rid=req.rid, slot=slot, shard=d)
         return slot
 
     def preempt(self, slot: int) -> Request:
@@ -680,7 +734,88 @@ class ServingEngine:
         req.slot = None
         req.preemptions += 1
         self.stats["preemptions"] += 1
+        self._jrec("preempt", rid=req.rid)
         return req
+
+    def fail_active(self, slot: int, reason: str, retry: bool = False
+                    ) -> Request:
+        """Terminate (or retry) a running request that hit a fault or an
+        expired deadline: release its pages through the normal
+        refcounted path, free the slot, then either park the request
+        for a bounded-backoff retry or mark it terminally rejected with
+        a typed reason (sched.FAILURE_REASONS)."""
+        req = self.active.pop(slot)
+        d, b = divmod(slot, self.bl)
+        mask = np.zeros((self.dp, self.bl), bool)
+        mask[d, b] = True
+        self.state = self._release(self.state, jnp.asarray(mask))
+        self.pending_tokens.pop(slot, None)
+        self._fed.pop(slot, None)
+        self._pinned_slots.discard(slot)
+        self._sampling_slots.discard(slot)
+        if self.prefix_cache is not None:
+            self.prefix_cache.remove(slot)
+        self._host_free_slot(slot)
+        self.scheduler.on_released(slot)
+        req.slot = None
+        if retry and req.retries < self.sched_config.retry_limit:
+            req.retries += 1
+            self.stats["retries"] += 1
+            self._jrec("preempt", rid=req.rid)
+            self.scheduler.park(
+                req, self.sched_config.retry_backoff * req.retries)
+        else:
+            req.rejected = reason
+            self.stats["failed"] += 1
+            if reason == "deadline":
+                self.stats["deadline_expired"] += 1
+            self._jrec("reject", rid=req.rid, reason=reason)
+        return req
+
+    def lose_shard(self, shard: int) -> None:
+        """Graceful degradation on shard loss (DESIGN.md §11): the dead
+        shard's device state — pages, pins, KV — is unreachable and
+        leaves the accounting with the shard.  Its running requests are
+        evacuated host-side through the requeue path (they re-prefill
+        on a surviving shard, token-identically, since generation is a
+        pure function of prompt + out_count); its slots are retired
+        from service and admission shrinks to the survivors
+        (runtime.elastic.plan_serving_for drives backlog shedding)."""
+        if shard in self.lost_shards:
+            return
+        self.lost_shards.add(shard)
+        self.stats["shards_lost"] += 1
+        self._jrec("shard_lost", shard=shard)
+        self.scheduler.lose_shard(shard)
+        for slot in [s for s in self.active if s // self.bl == shard]:
+            req = self.active.pop(slot)
+            # host bookkeeping only: no device release — the shard that
+            # owned the pages is gone
+            self.pending_tokens.pop(slot, None)
+            self._fed.pop(slot, None)
+            self._pinned_slots.discard(slot)
+            self._sampling_slots.discard(slot)
+            if self.prefix_cache is not None:
+                self.prefix_cache.remove(slot)
+            self._host_free_slot(slot)
+            self.scheduler.on_released(slot)
+            req.slot = None
+            req.preemptions += 1
+            self.stats["preemptions"] += 1
+            self._jrec("preempt", rid=req.rid)
+            self.scheduler.requeue_front(req)
+        # retire the dead shard's slots from service entirely
+        self._free_slots = deque(
+            s for s in self._free_slots if s // self.bl != shard)
+        if self.pins is not None:
+            for pid in [p for p, e in self.pins.entries.items()
+                        if e["shard"] == shard]:
+                self.pins.remove(pid)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.pin_remove(pid)
+                self._jrec("unpin", pin_id=pid)
+        if self.prefix_cache is not None:
+            self.prefix_cache.roots.pop(shard, None)
 
     # ------------------------------------------------------------ pinning
     def _maybe_pin(self, slot: int, tokens: List[int]) -> None:
@@ -714,6 +849,11 @@ class ServingEngine:
         self.state = self.state._replace(pool=pool)
         self.prefix_cache.pin_insert(pin_id, d, key_toks)
         self.stats["pins_created"] += 1
+        # write-behind: journaled only after the device op — a crash in
+        # between leaves device refs the journal never saw, which
+        # recovery reclaims (leak-fix, not leak)
+        self._jrec("pin", pin_id=pin_id, shard=d, row=row,
+                   tokens=[int(t) for t in key_toks], pages=int(n_pages))
 
     def evict_pin(self, pin_id: int) -> None:
         """Drop the cache's references on one pinned row (mechanism;
@@ -725,6 +865,7 @@ class ServingEngine:
             self.state.pool, self.pin_tables, jnp.asarray(oh))
         self.state = self.state._replace(pool=pool)
         self.prefix_cache.pin_remove(pin_id)
+        self._jrec("unpin", pin_id=pin_id)
 
     def flush_pins(self) -> int:
         """Evict every pinned prefix; returns how many.  After a full
@@ -805,8 +946,18 @@ class ServingEngine:
     def step(self) -> bool:
         """One engine step.  Returns True iff device work was
         dispatched (False = idle fast-path: admission ran but nothing
-        is active, so the jitted step — and its sync — are skipped)."""
+        is active, so the jitted step — and its sync — are skipped).
+
+        The named ``_fire`` points are the chaos-injection phase
+        boundaries (serving/chaos.py PHASES): ``feed`` fires BEFORE any
+        per-slot feed mutation so a fault there leaves host and device
+        consistent; ``post_sync`` fires after the device round-trip but
+        before bookkeeping/journaling — a crash there loses this step's
+        tokens and recovery must regenerate them."""
+        t0 = time.perf_counter()
+        self._fire("pre_tick")
         self.scheduler.tick(self)
+        self._fire("post_admission")
         if not self.active:
             self.stats["idle_steps"] += 1
             return False
@@ -830,6 +981,8 @@ class ServingEngine:
             drafts = self._build_drafts(self._spec_T - 1)
             if drafts:
                 T = self._spec_T
+        self._fire("feed", rids={req.rid: slot
+                                 for slot, req in self.active.items()})
         prompt_toks = np.zeros((self.dp, self.bl, T), np.int32)
         feed_lens = np.zeros((self.dp, self.bl), np.int32)
         is_prompt = np.zeros((self.dp, self.bl), bool)
@@ -885,7 +1038,9 @@ class ServingEngine:
         self.stats["steps"] += 1
         hist = self.stats["chunk_hist"]
         hist[T] = hist.get(T, 0) + 1
+        self._fire("dispatched")
         status = np.asarray(status)      # the step's ONE device->host sync
+        self._fire("post_sync")
         n_emit = status[T + STATUS_EMITTED]
         done_row = status[T + STATUS_DONE]
         pages_row = status[T + STATUS_PAGES]
@@ -898,14 +1053,15 @@ class ServingEngine:
         self._pages_shard_sum += row
         np.maximum(self._pages_shard_peak, row, out=self._pages_shard_peak)
 
-        now = time.time()
+        now = self._clock()
         psz = self.cfg.page_size
         for slot, req in list(self.active.items()):
             d, b = divmod(slot, self.bl)
             ne = int(n_emit[d, b])
             if ne:
-                req.out_tokens.extend(int(status[j, d, b])
-                                      for j in range(ne))
+                toks = [int(status[j, d, b]) for j in range(ne)]
+                req.out_tokens.extend(toks)
+                self._jrec("tokens", rid=req.rid, toks=toks)
                 self.stats["tokens_out"] += ne
                 if req.first_token_at == 0.0:
                     req.first_token_at = now
@@ -947,6 +1103,7 @@ class ServingEngine:
                         + tuple(req.out_tokens))
                 self._host_free_slot(slot)
                 self.scheduler.on_released(slot)
+                self._jrec("finish", rid=req.rid)
             else:
                 if self.prefix_cache is not None:
                     # this step's feed is now in device KV: the slot can
@@ -960,19 +1117,222 @@ class ServingEngine:
                     # retain its whole pages past the request's lifetime
                     self._pinned_slots.add(slot)
                     self._maybe_pin(slot, list(req.prompt))
+        self._fire("post_step")
+        verdict = self.watchdog.observe(self.stats["steps"],
+                                        time.perf_counter() - t0)
+        if verdict == "straggler":
+            self.stats["stragglers"] += 1
+        elif verdict == "timeout":
+            self.stats["step_timeouts"] += 1
         return True
 
     def idle(self) -> bool:
         """Nothing running and nothing admissible: the batch is empty
         and so is the scheduler backlog (rejected requests are terminal
-        — they never hold ``run`` open)."""
+        — they never hold ``run`` open; parked retries do)."""
         return not self.active and self.scheduler.backlog() == 0
 
-    def run(self, max_steps: int = 10_000) -> None:
+    def run(self, max_steps: int = 10_000,
+            max_restarts: Optional[int] = None) -> None:
+        """Exception-safe driver (DESIGN.md §11).
+
+        * :class:`~repro.serving.chaos.PoisonedRequest` fails exactly
+          the offending request (bounded retry, then terminal
+          ``rejected="poisoned"``) — everyone else keeps running;
+        * :class:`~repro.serving.chaos.HostCrash` re-raises — host
+          state is gone by definition and only
+          :func:`~repro.serving.chaos.recover_engine` may rebuild it;
+        * any other exception triggers an in-place recovery (requeue
+          all active work, reconcile the pool) and, past the restart
+          budget, re-raises AFTER recovering — so pool conservation
+          holds even on the propagating path.
+        """
+        budget = self.max_restarts if max_restarts is None else max_restarts
+        restarts = 0
         for _ in range(max_steps):
             if self.idle():
                 break
-            self.step()
+            try:
+                self.step()
+            except PoisonedRequest as e:
+                if e.slot in self.active:
+                    self.fail_active(e.slot, "poisoned", retry=True)
+            except HostCrash:
+                raise
+            except Exception:
+                restarts += 1
+                self._recover_inplace()
+                if restarts > budget:
+                    raise
+
+    # ----------------------------------------------------- crash recovery
+    def adopt_crashed_state(self, dead_state: DecodeState,
+                            pin_np: Optional[np.ndarray]) -> dict:
+        """Install a crashed engine's surviving device state (also the
+        tail of :meth:`_recover_inplace`): keep the KV page content —
+        pinned pages' data lives there — reconcile the pool against the
+        trusted pin rows via :func:`hier_pool.audit_and_reconcile`, and
+        clear every per-slot mapping and register (all in-flight work
+        re-enters through the preemption-resume path).  Returns the
+        reconcile report."""
+        assert not self.active, "adopt with active slots"
+        dp, bl, maxp = self.state.page_tables.shape
+        pool, report = hier_pool.audit_and_reconcile(
+            dead_state.pool, keep_tables=None, pin_tables=pin_np)
+
+        def zero(t):
+            return jax.tree.map(jnp.zeros_like, t)
+
+        state = dead_state._replace(
+            pool=pool,
+            page_tables=jnp.full((dp, bl, maxp), NULL, jnp.int32),
+            seq_lens=jnp.zeros((dp, bl), jnp.int32),
+            rings=zero(dead_state.rings), rec=zero(dead_state.rec))
+        if self.mesh is not None:
+            state = jax.device_put(
+                state, serve_shardings(self.mesh, self._pspecs))
+        self.state = state
+        self.last_tok, self.out_count, self.budget = \
+            empty_serve_arrays(self.dp, self.bl)
+        self.temps = jnp.zeros((self.dp, self.bl), jnp.float32)
+        self.topks = jnp.zeros((self.dp, self.bl), jnp.int32)
+        self.seeds = jnp.zeros((self.dp, self.bl), jnp.int32)
+        if self.pin_tables is not None:
+            self.pin_tables = (jnp.asarray(pin_np) if pin_np is not None
+                               else jnp.full_like(self.pin_tables, NULL))
+        if self.mesh is not None:
+            reg_ns = NamedSharding(self.mesh, self._rspec)
+            (self.last_tok, self.out_count, self.budget, self.temps,
+             self.topks, self.seeds) = jax.device_put(
+                (self.last_tok, self.out_count, self.budget, self.temps,
+                 self.topks, self.seeds), reg_ns)
+            if self.pin_tables is not None:
+                self.pin_tables = jax.device_put(self.pin_tables, reg_ns)
+        self.pending_tokens.clear()
+        self._fed.clear()
+        self._pinned_slots.clear()
+        self._sampling_slots.clear()
+        return report
+
+    def _recover_inplace(self) -> dict:
+        """Restore a consistent engine after a failed step without
+        losing the process: requeue every active request through the
+        preemption path (host bookkeeping only — the device may be
+        mid-operation, so per-slot release cannot be trusted) and
+        rebuild the pool from the ledger-trusted pin rows.  The host
+        survived, so the pin LEDGER is current; a device pin op whose
+        ledger insert never ran is reclaimed, exactly as in the
+        post-crash path."""
+        self.stats["recoveries"] += 1
+        for slot in list(self.active):
+            req = self.active.pop(slot)
+            self.pending_tokens.pop(slot, None)
+            self._fed.pop(slot, None)
+            self._pinned_slots.discard(slot)
+            self._sampling_slots.discard(slot)
+            if self.prefix_cache is not None:
+                self.prefix_cache.remove(slot)
+            self._host_free_slot(slot)
+            self.scheduler.on_released(slot)
+            req.slot = None
+            req.preemptions += 1
+            self.stats["preemptions"] += 1
+            self._jrec("preempt", rid=req.rid)
+            self.scheduler.requeue_front(req)
+        pin_np = None
+        if self.pin_tables is not None:
+            pin_np = np.asarray(self.pin_tables).copy()
+            ok = np.zeros(pin_np.shape[:2], bool)
+            for e in self.pins.entries.values():
+                ok[e["shard"], e["row"]] = True
+            pin_np[~ok] = NULL
+        return self.adopt_crashed_state(self.state, pin_np)
+
+    def leak_free(self) -> bool:
+        """Zero live pages on every surviving shard (a dead shard's
+        pages are unreachable by definition — they leave the accounting
+        with the shard).  The post-drain + flush_pins invariant every
+        chaos run closes with."""
+        live = np.asarray(hier_pool.live_per_shard(self.state.pool))
+        return all(int(live[s]) == 0 for s in range(self.dp)
+                   if s not in self.lost_shards)
+
+    # ------------------------------------------------------- warm restart
+    def save_warm(self, ckptr, step: int = 0) -> None:
+        """Persist the serving plane's warm state through the sharded
+        checkpointer: the DecodeState (pool + pinned KV content), the
+        device pin table, and a JSON sidecar with the host ledgers —
+        pin entries, speculation streams, and still-queued requests.
+        Must be called drained (no active slots): queued work requeues
+        exactly, but a running slot's device KV is not snapshot-
+        consistent with a host mid-step."""
+        assert not self.active, "drain the engine before a warm save"
+        ckptr.wait()
+        payload = {"state": self.state}
+        if self.pin_tables is not None:
+            payload["pin_tables"] = self.pin_tables
+        aux = {
+            "pins": (self.pins.to_state() if self.pins is not None else []),
+            "spec": (self.spec_store.to_state()
+                     if self.spec_store is not None else None),
+            "queued": [{
+                "rid": int(r.rid),
+                "prompt": [int(t) for t in r.prompt],
+                "max_new_tokens": int(r.max_new_tokens),
+                "temperature": float(r.temperature),
+                "top_k": int(r.top_k), "seed": int(r.seed), "slo": r.slo,
+                "out_tokens": [int(t) for t in r.out_tokens],
+                "preemptions": int(r.preemptions),
+                "deadline_at": float(r.deadline_at),
+            } for r in self.scheduler.pending()],
+        }
+        ckptr.save(step, payload, aux=aux)
+
+    def restore_warm(self, ckptr, step: Optional[int] = None) -> int:
+        """Rebuild a freshly constructed engine from a warm save: adopt
+        the device arrays (pool, pinned KV pages, pin table), reload
+        the pin ledger + prefix-trie pin entries and the speculation
+        store, and resubmit the queued requests.  The first post-
+        restart hot-prefix request shares pinned pages and drafts
+        without any re-prefill — the ROADMAP's warm-restart contract."""
+        if step is None:
+            step = ckptr.latest_step()
+        assert step is not None, "no complete warm checkpoint to restore"
+        like = {"state": self.state}
+        if self.pin_tables is not None:
+            like["pin_tables"] = self.pin_tables
+        got = ckptr.restore(step, like)
+        state = got["state"]
+        if self.mesh is not None:
+            state = jax.device_put(
+                state, serve_shardings(self.mesh, self._pspecs))
+        self.state = state
+        if self.pin_tables is not None and "pin_tables" in got:
+            self.pin_tables = got["pin_tables"]
+            if self.mesh is not None:
+                self.pin_tables = jax.device_put(
+                    self.pin_tables, NamedSharding(self.mesh, self._rspec))
+        aux = ckptr.restore_aux(step) or {}
+        if self.pins is not None and aux.get("pins"):
+            self.pins.load_state(aux["pins"])
+            if self.prefix_cache is not None:
+                for pid, e in self.pins.entries.items():
+                    self.prefix_cache.pin_insert(pid, e["shard"],
+                                                 list(e["tokens"]))
+        if self.spec_store is not None and aux.get("spec"):
+            self.spec_store.load_state(aux["spec"])
+        for spec in aux.get("queued", []):
+            req = Request(rid=int(spec["rid"]),
+                          prompt=list(spec["prompt"]),
+                          max_new_tokens=int(spec["max_new_tokens"]),
+                          temperature=float(spec["temperature"]),
+                          top_k=int(spec["top_k"]),
+                          seed=int(spec["seed"]), slo=spec["slo"],
+                          out_tokens=list(spec["out_tokens"]))
+            req.preemptions = int(spec.get("preemptions", 0))
+            req.deadline_at = float(spec.get("deadline_at", 0.0))
+            self.submit(req)
+        return step
 
     # ------------------------------------------------------------ metrics
     def pages_in_use(self) -> int:

@@ -297,6 +297,23 @@ class SpeculationStore:
                 return list(cont[n:n + k])
         return []
 
+    # -- warm restart (serving/engine.py save_warm/restore_warm) --------
+    def to_state(self) -> list:
+        """JSON-able snapshot, LRU-coldest key first so ``load_state``'s
+        re-recording reproduces the eviction order."""
+        keys = sorted(self.streams, key=lambda k: self._lru[k])
+        return [[[int(t) for t in k],
+                 [[int(t) for t in c] for c in self.streams[k]]]
+                for k in keys]
+
+    def load_state(self, rows: list) -> None:
+        self.streams.clear()
+        self._lru.clear()
+        for key, conts in rows:
+            for c in conts:
+                self.record(tuple(int(t) for t in key),
+                            tuple(int(t) for t in c))
+
 
 # --------------------------------------------------- pinned host ledger
 
@@ -364,6 +381,34 @@ class PinnedPrefixes:
     def touch(self, pin_id: int) -> None:
         if pin_id in self.entries:
             self.entries[pin_id]["used"] = next(self._clock)
+
+    # -- warm restart / crash recovery ----------------------------------
+    def to_state(self) -> list:
+        """JSON-able ledger snapshot, LRU-coldest entry first (the
+        journal's pin events and a warm save share this shape)."""
+        ents = sorted(self.entries.items(), key=lambda kv: kv[1]["used"])
+        return [{"pin_id": int(pid), "shard": int(e["shard"]),
+                 "row": int(e["row"]),
+                 "tokens": [int(t) for t in e["tokens"]],
+                 "pages": int(e["pages"])} for pid, e in ents]
+
+    def load_state(self, entries: list) -> None:
+        """Rebuild the ledger at its exact rows — the device pin table
+        being restored alongside references those rows, so a pin must
+        come back where its pages already are."""
+        self.entries.clear()
+        self.by_key.clear()
+        self.free_rows = {s: set(range(self.npin))
+                          for s in range(self.n_shards)}
+        for e in entries:                       # LRU-coldest first
+            shard, row = int(e["shard"]), int(e["row"])
+            toks = tuple(int(t) for t in e["tokens"])
+            pid = shard * self.npin + row
+            self.free_rows[shard].discard(row)
+            self.entries[pid] = {"shard": shard, "row": row,
+                                 "tokens": toks, "pages": int(e["pages"]),
+                                 "used": next(self._clock)}
+            self.by_key[(shard, toks)] = pid
 
 
 # --------------------------------------------------------- device steps

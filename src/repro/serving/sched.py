@@ -36,6 +36,15 @@ mechanisms (nothing here touches the per-token hot path):
   ``(seed, out_count)`` (serving/sampling.py), so a resumed request
   draws exactly the tokens it would have drawn unpreempted.
 
+* **Hardening** (DESIGN.md §11) — per-request deadlines (queued or
+  running, a request past ``deadline_at`` fails with the typed reason
+  ``"deadline"``), bounded-backoff retry parking for fault-failed
+  requests, and graceful shard-loss degradation: a dead shard leaves
+  the placement set, its evacuated work requeues at the front, and
+  when the recovery backlog's worst case exceeds the surviving
+  capacity (``runtime.elastic.plan_serving_for``) the lowest class
+  sheds from the tail with reason ``"shed"``.
+
 * **Pin policy** — which finished-or-finishing prefixes stay pinned
   (`serving/prefix_cache.py` holds the mechanism): pin at prompt
   completion and at preemption, deduplicated by exact token key, LRU
@@ -70,6 +79,14 @@ DEFAULT_CLASSES: Tuple[SLOClass, ...] = (
     SLOClass("batch", 0),
 )
 
+#: every typed terminal failure a request can carry in ``req.rejected``
+#: (DESIGN.md §11): admission backpressure (``too_large`` /
+#: ``queue_full``), deadline expiry, a poisoned request out of retries,
+#: and load shed under degraded capacity.
+FAILURE_REASONS: Tuple[str, ...] = (
+    "too_large", "queue_full", "deadline", "poisoned", "shed",
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class SchedConfig:
@@ -87,6 +104,13 @@ class SchedConfig:
     pin_rows: int = 4
     #: shed pins when a shard's pool occupancy crosses this fraction
     high_water: float = 0.9
+    #: retries granted to a request that fails mid-flight for a
+    #: retryable reason (poisoned step, injected fault) before it is
+    #: terminally rejected
+    retry_limit: int = 1
+    #: scheduler ticks a retrying request parks before re-queueing;
+    #: the wait grows linearly with the retry count (bounded backoff)
+    retry_backoff: int = 2
     #: SLO-aware chunk sizing (DESIGN.md §10): the static set of prefill
     #: lane widths the engine may dispatch (each is one compiled step
     #: variant).  () disables adaptation — every prefill step runs the
@@ -126,10 +150,18 @@ class AdmissionScheduler:
         self.committed = [0] * n_shards             # worst-case pages
         self.est_of: Dict[int, Tuple[int, int]] = {}   # slot -> (shard, est)
         self._seq = itertools.count()
+        #: shards lost to failure (engine.lose_shard): excluded from
+        #: placement; their budget leaves ``plan_serving_for`` capacity
+        self.dead_shards: set = set()
+        #: (ready_tick, req) retry parking — bounded-backoff staging
+        #: area for fault-failed requests (engine.fail_active)
+        self.parked: List[Tuple[int, object]] = []
+        self._ticks = 0
         # preemptions are counted by the mechanism (engine.preempt /
         # engine.stats) — one ledger, not two that can drift
         self.stats = {"deferred": 0, "rejected": 0, "pins_evicted": 0,
-                      "defer_slots": 0, "defer_pages": 0}
+                      "defer_slots": 0, "defer_pages": 0, "shed": 0,
+                      "retried": 0}
 
     # ---------------------------------------------------------- intake
     def class_of(self, req) -> SLOClass:
@@ -149,15 +181,36 @@ class AdmissionScheduler:
         return Admission(True)
 
     def backlog(self) -> int:
-        return sum(len(q) for q in self.queues.values())
+        # parked retries count: the engine's run/idle loops key
+        # liveness on backlog, and a parked request is still owed work
+        return sum(len(q) for q in self.queues.values()) + len(self.parked)
 
     def pending(self) -> List:
-        """Queued requests, admission order (priority then FIFO)."""
-        return [r for c in self.classes for r in self.queues[c.name]]
+        """Queued + parked requests, admission order (priority then
+        FIFO; parked retries last)."""
+        return ([r for c in self.classes for r in self.queues[c.name]]
+                + [r for _, r in self.parked])
 
     def requeue_front(self, req) -> None:
         """A preempted request resumes before its class peers."""
         self.queues[self.class_of(req).name].appendleft(req)
+
+    def park(self, req, delay: int) -> None:
+        """Stage a retrying request for ``delay`` scheduler ticks
+        before it rejoins its class queue (bounded backoff)."""
+        self.stats["retried"] += 1
+        self.parked.append((self._ticks + max(0, int(delay)), req))
+
+    def _unpark(self) -> None:
+        still = []
+        for ready, req in self.parked:
+            if ready <= self._ticks:
+                # back of the class queue: a retry yields to peers that
+                # have not failed, unlike a preempted request
+                self.queues[self.class_of(req).name].append(req)
+            else:
+                still.append((ready, req))
+        self.parked = still
 
     # ------------------------------------------------------ accounting
     def on_admitted(self, slot: int, shard: int, est: int) -> None:
@@ -179,6 +232,11 @@ class AdmissionScheduler:
         a blocked head before deferring it (strict priority — a blocked
         head blocks lower classes; admitting around it would consume
         the very pages it is waiting for)."""
+        self._ticks += 1
+        self._unpark()
+        self._expire_deadlines(engine)
+        if self.dead_shards:
+            self._shed_backlog(engine)
         self._shed_high_water(engine)
         preempted = 0
         while True:
@@ -213,6 +271,64 @@ class AdmissionScheduler:
             if self.queues[cls.name]:
                 return cls, self.queues[cls.name][0]
         return None
+
+    # ------------------------------------------------------- hardening
+    def _reject(self, engine, req, reason: str) -> None:
+        req.rejected = reason
+        self.stats["rejected"] += 1
+        engine._jrec("reject", rid=req.rid, reason=reason)
+
+    def _expire_deadlines(self, engine) -> None:
+        """Fail every request past its absolute deadline — queued,
+        parked, or running.  ``deadline_at`` is stamped at first submit
+        and survives preemption/recovery, so a request cannot reset its
+        own clock by failing (DESIGN.md §11)."""
+        now = engine._clock()
+
+        def expired(r):
+            return 0.0 < getattr(r, "deadline_at", 0.0) < now
+
+        for q in self.queues.values():
+            for r in [r for r in q if expired(r)]:
+                q.remove(r)
+                engine.stats["deadline_expired"] += 1
+                self._reject(engine, r, "deadline")
+        still = []
+        for ready, r in self.parked:
+            if expired(r):
+                engine.stats["deadline_expired"] += 1
+                self._reject(engine, r, "deadline")
+            else:
+                still.append((ready, r))
+        self.parked = still
+        for slot in [s for s, r in engine.active.items() if expired(r)]:
+            engine.fail_active(slot, "deadline")
+
+    def lose_shard(self, shard: int) -> None:
+        """Remove a shard from the placement set (engine.lose_shard
+        owns the evacuation mechanics)."""
+        self.dead_shards.add(shard)
+
+    def _shed_backlog(self, engine) -> None:
+        """Degraded-capacity load shedding: when the queued backlog's
+        worst-case pages exceed the surviving shards' budget
+        (``plan_serving_for``), drop from the lowest class's tail with
+        the typed reason ``"shed"`` rather than queue unservable work."""
+        from ..runtime.elastic import plan_serving_for
+        backlog_pages = sum(engine.est_pages(r) for r in self.pending())
+        plan = plan_serving_for(self.n_shards, self.dead_shards,
+                                self.page_budget, backlog_pages)
+        to_shed = plan.shed_pages
+        for cls in reversed(self.classes):          # lowest class first
+            q = self.queues[cls.name]
+            while to_shed > 0 and q:
+                victim = q.pop()                    # tail: newest work
+                to_shed -= engine.est_pages(victim)
+                victim.rejected = "shed"
+                self.stats["shed"] += 1
+                engine._jrec("reject", rid=victim.rid, reason="shed")
+            if to_shed <= 0:
+                break
 
     # ------------------------------------------------- lane-width policy
     def buckets(self, full_chunk: int) -> Tuple[int, ...]:
@@ -272,7 +388,8 @@ class AdmissionScheduler:
             return None, None, "slots"
         pinned = engine.pinned_pages_on
         fits = [s for s in sorted(slots)
-                if est <= self.headroom(s, pinned)]
+                if s not in self.dead_shards
+                and est <= self.headroom(s, pinned)]
         if not fits:
             return None, None, "pages"
         best = None                       # (n_tokens, shard, match)

@@ -1,0 +1,499 @@
+"""Fault-tolerant serving (DESIGN.md §11).
+
+Covers the chaos plane bottom-up:
+
+* ckpt — atomic saves: a kill mid-save never tears the previous
+  complete checkpoint (the warm-restart substrate);
+* watchdog — straggler/timeout detection against a rolling median;
+* linearizability — ``check_recovery_history`` flags leaks (orphaned
+  blocks never reconciled) AND double frees (reclaiming a live
+  holder's pages), mirroring ``check_preemption_history``'s style;
+* hier_pool — ``audit_and_reconcile`` rebuilds free stacks, lane
+  tops, and refcounts from page tables/pin rows alone, proving
+  conservation and the §4.2 never-dry refill even from torn
+  mid-rebalance state;
+* engine — host crashes at EVERY step phase boundary (including the
+  torn drain/refill window) recover token-identically for greedy and
+  sampled lanes with zero leaked pages; poisoned requests retry with
+  backoff then fail typed; deadlines expire queued and running work;
+  shard loss degrades to survivors; a transient step error triggers
+  exception-safe in-place recovery with pool conservation intact;
+* warm restart — pins + speculation streams + queued requests survive
+  an engine restart through the checkpoint sidecar, so the restarted
+  engine re-pins without re-prefilling.
+"""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import models
+from repro.configs import get_config, smoke_config
+from repro.checkpoint.ckpt import Checkpointer
+from repro.core import hier_pool
+from repro.core.linearizability import check_recovery_history
+from repro.core.sim import OpRecord
+from repro.runtime.fault import StepWatchdog
+from repro.runtime.elastic import plan_serving_for
+from repro.serving import chaos
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sched import FAILURE_REASONS, SchedConfig
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = smoke_config(get_config("olmo-1b"))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _conserved(eng):
+    total = eng.pages_local * eng.dp
+    free = int(hier_pool.total_free(eng.state.pool))
+    live = int(hier_pool.num_live(eng.state.pool))
+    assert free + live == total, "pages lost or duplicated"
+
+
+def _mk_reqs(n=4, max_new=6):
+    """Greedy and sampled lanes in one batch: rid 0, 2 greedy; 1, 3
+    sampled — one run checks identity for both decode modes."""
+    return [Request(rid=i, prompt=[2 + i, 3, 5, 7 + i],
+                    max_new_tokens=max_new,
+                    temperature=0.8 if i % 2 else 0.0, seed=100 + i)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def ref_outputs(engine_setup):
+    """Unfaulted reference outputs for the _mk_reqs trace."""
+    cfg, params = engine_setup
+    reqs = _mk_reqs()
+    eng = ServingEngine(cfg, params, dp=1, b_local=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=300)
+    assert all(r.done for r in reqs)
+    return {r.rid: list(r.out_tokens) for r in reqs}
+
+
+# ---------------------------------------------------------------- ckpt
+class TestAtomicCheckpoint:
+    def test_kill_mid_save_keeps_previous_checkpoint(self, tmp_path,
+                                                     monkeypatch):
+        """A crash mid-serialization — after bytes hit the temp file —
+        must leave the previous complete snapshot restorable and
+        ``latest_step`` pointing at it."""
+        from repro.checkpoint import ckpt as ckpt_mod
+        state = {"w": jnp.arange(8, dtype=jnp.float32)}
+        c = Checkpointer(str(tmp_path), keep=3)
+        c.save(1, state, aux={"pins": [1, 2]})
+        assert c.latest_step() == 1
+
+        real_savez = np.savez
+
+        def dying_savez(f, **kw):
+            f.write(b"torn garbage")          # partial bytes on disk
+            raise chaos.HostCrash("killed mid-save")
+
+        monkeypatch.setattr(ckpt_mod.np, "savez", dying_savez)
+        with pytest.raises(chaos.HostCrash):
+            c.save(2, {"w": jnp.ones(8)}, aux={"pins": []})
+        monkeypatch.setattr(ckpt_mod.np, "savez", real_savez)
+
+        # step 2 has no INDEX -> invisible; step 1 intact
+        assert c.latest_step() == 1
+        got = c.restore(1, {"w": jnp.zeros(8, jnp.float32)})
+        np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(8))
+        assert c.restore_aux(1) == {"pins": [1, 2]}
+
+    def test_overwrite_same_step_is_atomic(self, tmp_path, monkeypatch):
+        """Re-saving an existing step dies mid-write: the OLD npz for
+        that step must still load (write-temp-then-rename)."""
+        from repro.checkpoint import ckpt as ckpt_mod
+        c = Checkpointer(str(tmp_path), keep=3)
+        c.save(1, {"w": jnp.full(4, 7.0)})
+
+        def dying_savez(f, **kw):
+            f.write(b"x")
+            raise RuntimeError("killed")
+
+        monkeypatch.setattr(ckpt_mod.np, "savez", dying_savez)
+        with pytest.raises(RuntimeError):
+            c.save(1, {"w": jnp.zeros(4)})
+        got = c.restore(1, {"w": jnp.zeros(4, jnp.float32)})
+        np.testing.assert_array_equal(np.asarray(got["w"]), np.full(4, 7.0))
+
+
+# ------------------------------------------------------------ watchdog
+class TestStepWatchdog:
+    def test_straggler_against_rolling_median(self):
+        wd = StepWatchdog(straggler_factor=3.0, min_samples=8)
+        for i in range(10):
+            assert wd.observe(i, 0.01) is None
+        assert wd.observe(10, 0.05) == "straggler"
+        assert wd.observe(11, 0.011) is None
+
+    def test_timeout_outranks_straggler(self):
+        wd = StepWatchdog(straggler_factor=3.0, timeout_s=0.5,
+                          min_samples=4)
+        for i in range(6):
+            wd.observe(i, 0.01)
+        assert wd.observe(6, 0.6) == "timeout"
+
+    def test_needs_min_samples(self):
+        wd = StepWatchdog(min_samples=8)
+        assert wd.observe(0, 10.0) is None
+
+
+# ----------------------------------------------------- history checker
+def _ops(*specs):
+    out = []
+    for i, (pid, name, arg, inv, resp, result) in enumerate(specs):
+        out.append(OpRecord(opid=i, pid=pid, name=name, arg=arg,
+                            invoke_step=inv, response_step=resp,
+                            result=result))
+    return out
+
+
+class TestRecoveryHistoryChecker:
+    def test_clean_crash_reconcile(self):
+        h = _ops((0, "allocate", None, 0, 1, 5),
+                 (1, "crash", [0], 2, 3, None),
+                 (2, "reconcile", [5], 4, 5, None))
+        assert check_recovery_history(h) == []
+
+    def test_leak_detected(self):
+        h = _ops((0, "allocate", None, 0, 1, 5),
+                 (1, "crash", [0], 2, 3, None),
+                 (2, "reconcile", [], 4, 5, None))
+        errs = check_recovery_history(h)
+        assert any("leaked" in e for e in errs)
+
+    def test_double_free_detected(self):
+        # pid 1 still holds block 7 when the reconcile reclaims it
+        h = _ops((0, "allocate", None, 0, 1, 5),
+                 (1, "allocate", None, 1, 2, 7),
+                 (2, "crash", [0], 3, 4, None),
+                 (3, "reconcile", [5, 7], 5, 6, None))
+        errs = check_recovery_history(h)
+        assert any("double free" in e for e in errs)
+
+    def test_orphans_never_reconciled(self):
+        h = _ops((0, "allocate", None, 0, 1, 5),
+                 (1, "crash", [0], 2, 3, None))
+        errs = check_recovery_history(h)
+        assert any("never reclaimed" in e for e in errs)
+
+
+# --------------------------------------------------- pool reconcile
+class TestAuditAndReconcile:
+    def _torn_pool_with_tables(self, dp=2, m=16, lanes=2, ell=3):
+        pool = hier_pool.create_dp(dp, m, lanes, ell)
+        # allocate 3 pages on each shard's lane 0
+        counts = jnp.zeros((dp, lanes), jnp.int32).at[:, 0].set(3)
+        pool, ids = hier_pool.alloc_n_dp(pool, counts, 3)
+        tables = np.full((dp, lanes, 4), -1, np.int64)
+        tables[:, 0, :3] = np.asarray(ids)[:, 0, :3]
+        # tear the allocator mid-rebalance: drained, never refilled
+        pool = hier_pool.rebalance_drain_dp(pool)
+        return pool, tables
+
+    def test_torn_pool_reconciles_conserved_and_never_dry(self):
+        pool, tables = self._torn_pool_with_tables()
+        new, report = hier_pool.audit_and_reconcile(pool,
+                                                    keep_tables=tables)
+        assert report["conserved"] and report["never_dry"]
+        for s in report["shards"]:
+            assert s["free"] + s["live"] == s["capacity"]
+            assert s["live"] == 3
+        ell = hier_pool.lane_ell(new)
+        assert bool(jnp.all(new.private_top == ell))
+
+    def test_dead_rows_reclaimed_pins_kept(self):
+        pool, tables = self._torn_pool_with_tables()
+        pins = tables[:, :1, :]          # keep lane-0 rows as "pins"
+        dead = np.full_like(tables, -1)  # every slot row dead
+        new, report = hier_pool.audit_and_reconcile(
+            pool, keep_tables=dead, pin_tables=pins)
+        assert report["reclaimed"] == 0          # pins still hold them
+        assert int(hier_pool.num_live(new)) == 6
+        new2, report2 = hier_pool.audit_and_reconcile(
+            pool, keep_tables=dead, pin_tables=None)
+        assert report2["reclaimed"] == 6         # nobody holds them
+        assert int(hier_pool.num_live(new2)) == 0
+
+    def test_resurrection_shields_double_free(self):
+        pool, tables = self._torn_pool_with_tables()
+        # simulate a torn mirror that already dropped the refcounts
+        zeroed = pool._replace(shared=pool.shared._replace(
+            refcount=jnp.zeros_like(pool.shared.refcount)))
+        new, report = hier_pool.audit_and_reconcile(zeroed,
+                                                    keep_tables=tables)
+        assert report["resurrected"] == 6
+        assert report["conserved"] and report["never_dry"]
+
+
+# -------------------------------------------------- crash recovery e2e
+CRASH_CASES = [("pre_tick", False), ("post_admission", False),
+               ("feed", False), ("dispatched", True),
+               ("post_sync", True), ("post_step", False)]
+
+
+class TestCrashRecovery:
+    @pytest.mark.parametrize("phase,torn", CRASH_CASES,
+                             ids=[f"{p}{'-torn' if t else ''}"
+                                  for p, t in CRASH_CASES])
+    def test_crash_recovers_token_identical(self, engine_setup,
+                                            ref_outputs, phase, torn):
+        cfg, params = engine_setup
+        journal = chaos.ServingJournal()
+        injector = chaos.ServingFailureInjector(
+            [chaos.Fault(step=3, phase=phase, kind="crash", torn=torn)])
+
+        def build():
+            return ServingEngine(cfg, params, dp=1, b_local=4,
+                                 journal=journal, injector=injector)
+
+        eng = build()
+        for r in _mk_reqs():
+            eng.submit(r)
+        with pytest.raises(chaos.HostCrash):
+            eng.run(max_steps=300)
+        eng2, report = chaos.recover_engine(build, eng, journal)
+        assert report["conserved"] and report["never_dry"]
+        eng2.run(max_steps=300)
+        out = journal.outputs()
+        assert journal.finished() == set(ref_outputs)
+        for rid, toks in ref_outputs.items():
+            assert out[rid] == toks, f"rid {rid} diverged after {phase}"
+        assert eng2.leak_free()
+        _conserved(eng2)
+
+    def test_journal_jsonl_roundtrip(self, engine_setup, tmp_path):
+        cfg, params = engine_setup
+        path = tmp_path / "journal.jsonl"
+        journal = chaos.ServingJournal(path=str(path))
+        eng = ServingEngine(cfg, params, dp=1, b_local=4, journal=journal)
+        reqs = _mk_reqs(n=2)
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=300)
+        journal.close()
+        replay = chaos.ServingJournal.load(str(path))
+        assert replay.finished() == {0, 1}
+        assert replay.outputs()[0] == list(reqs[0].out_tokens)
+        assert not replay.in_flight()
+        # every line is valid JSON (the offline-analysis contract)
+        for line in path.read_text().splitlines():
+            json.loads(line)
+
+
+# --------------------------------------------- typed failures/deadlines
+class TestHardening:
+    def test_poison_retries_then_terminal(self, engine_setup):
+        cfg, params = engine_setup
+        injector = chaos.ServingFailureInjector(
+            [chaos.Fault(step=1, phase="feed", kind="poison", rid=1),
+             chaos.Fault(step=3, phase="feed", kind="poison", rid=1),
+             chaos.Fault(step=6, phase="feed", kind="poison", rid=1)])
+        eng = ServingEngine(cfg, params, dp=1, b_local=4,
+                            injector=injector,
+                            sched=SchedConfig(retry_limit=1,
+                                              retry_backoff=1))
+        reqs = _mk_reqs(n=3)
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=300)
+        assert reqs[1].rejected == "poisoned"
+        assert "poisoned" in FAILURE_REASONS
+        assert reqs[1].retries == 1
+        assert eng.stats["retries"] == 1 and eng.stats["failed"] == 1
+        assert reqs[0].done and reqs[2].done     # everyone else fine
+        _conserved(eng)
+        assert eng.leak_free()
+
+    def test_deadline_expires_queued_and_running(self, engine_setup):
+        cfg, params = engine_setup
+        clock = [0.0]
+        eng = ServingEngine(cfg, params, dp=1, b_local=4,
+                            clock=lambda: clock[0])
+        # 4 slots: rid 0-3 admit and run; rid 4 queues
+        reqs = [Request(rid=i, prompt=[2 + i, 3, 5], max_new_tokens=20,
+                        deadline_s=10.0) for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        assert all(r.deadline_at == 10.0 for r in reqs)
+        for _ in range(2):
+            eng.step()
+        clock[0] = 11.0                          # everyone expires
+        eng.run(max_steps=300)
+        assert all(r.rejected == "deadline" for r in reqs if not r.done)
+        assert any(r.rejected == "deadline" for r in reqs)
+        assert eng.stats["deadline_expired"] >= 1
+        _conserved(eng)
+        assert eng.leak_free()
+
+    def test_deadline_survives_crash_recovery(self, engine_setup):
+        cfg, params = engine_setup
+        clock = [0.0]
+        journal = chaos.ServingJournal()
+        injector = chaos.ServingFailureInjector(
+            [chaos.Fault(step=2, phase="post_sync", kind="crash")])
+
+        def build():
+            return ServingEngine(cfg, params, dp=1, b_local=4,
+                                 journal=journal, injector=injector,
+                                 clock=lambda: clock[0])
+
+        eng = build()
+        eng.submit(Request(rid=0, prompt=[2, 3, 5], max_new_tokens=20,
+                           deadline_s=10.0))
+        with pytest.raises(chaos.HostCrash):
+            eng.run(max_steps=300)
+        eng2, report = chaos.recover_engine(build, eng, journal)
+        # the requeued request carries the ORIGINAL absolute deadline
+        assert [r.deadline_at for r in report["requests"]] == [10.0]
+        clock[0] = 11.0
+        eng2.run(max_steps=300)
+        assert not journal.in_flight()
+        assert report["requests"][0].rejected == "deadline"
+        assert eng2.stats["deadline_expired"] == 1
+        assert eng2.leak_free()
+
+    def test_step_error_recovers_in_place_conserved(self, engine_setup):
+        cfg, params = engine_setup
+        injector = chaos.ServingFailureInjector(
+            [chaos.Fault(step=2, phase="post_sync", kind="error")])
+        eng = ServingEngine(cfg, params, dp=1, b_local=4,
+                            injector=injector, max_restarts=2)
+        reqs = _mk_reqs()
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=300)                   # error absorbed
+        assert eng.stats["recoveries"] == 1
+        assert all(r.done for r in reqs)
+        assert any(r.preemptions >= 1 for r in reqs)  # requeued + resumed
+        _conserved(eng)
+        assert eng.leak_free()
+
+    def test_step_error_past_budget_raises_conserved(self, engine_setup):
+        cfg, params = engine_setup
+        injector = chaos.ServingFailureInjector(
+            [chaos.Fault(step=2, phase="post_sync", kind="error"),
+             chaos.Fault(step=3, phase="post_sync", kind="error")])
+        eng = ServingEngine(cfg, params, dp=1, b_local=4,
+                            injector=injector, max_restarts=1)
+        for r in _mk_reqs():
+            eng.submit(r)
+        with pytest.raises(chaos.StepError):
+            eng.run(max_steps=300)
+        # recovery ran BEFORE the re-raise: conservation holds
+        _conserved(eng)
+        assert eng.leak_free()
+
+
+# ------------------------------------------------------------ shard loss
+class TestShardLoss:
+    def test_lost_shard_evacuates_and_degrades(self, engine_setup):
+        cfg, params = engine_setup
+        injector = chaos.ServingFailureInjector(
+            [chaos.Fault(step=3, phase="post_admission",
+                         kind="shard_loss", shard=1)])
+        eng = ServingEngine(cfg, params, dp=2, b_local=2,
+                            injector=injector)
+        reqs = _mk_reqs(n=6)
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=400)
+        assert eng.lost_shards == {1}
+        assert eng.stats["shards_lost"] == 1
+        done = [r for r in reqs if r.done]
+        shed = [r for r in reqs if r.rejected]
+        assert len(done) + len(shed) == len(reqs)
+        assert done, "no request survived shard loss"
+        # survivors leak-free; the dead shard's pages left the
+        # accounting with the shard (no release targets dead hardware)
+        assert eng.leak_free()
+        # no free slot maps to the dead shard anymore
+        assert all(s // eng.bl != 1 for s in eng._free_slots)
+
+    def test_plan_serving_for_sheds_over_capacity(self):
+        plan = plan_serving_for(4, {2}, page_budget=10, backlog_pages=35)
+        assert plan.surviving == (0, 1, 3)
+        assert plan.capacity_pages == 30 and plan.shed_pages == 5
+        full = plan_serving_for(4, set(), page_budget=10, backlog_pages=35)
+        assert full.shed_pages == 0 and "full mesh" in full.note
+
+
+# ----------------------------------------------------------- warm restart
+class TestWarmRestart:
+    def _hot_reqs(self, hot, base=0):
+        return [Request(rid=base + i, prompt=hot + [11 + i, 13],
+                        max_new_tokens=4) for i in range(3)]
+
+    def test_pins_and_speculation_survive_restart(self, engine_setup,
+                                                  tmp_path):
+        cfg, params = engine_setup
+        hot = list(range(2, 18))                 # 2 pages of 8
+
+        def fresh():
+            return ServingEngine(cfg, params, dp=1, b_local=4,
+                                 speculate=True, draft_len=4,
+                                 sched=SchedConfig(pin_pages=8))
+
+        warmup = fresh()
+        for r in self._hot_reqs(hot):
+            warmup.submit(r)
+        warmup.run(max_steps=300)
+        assert warmup.pinned_pages() > 0
+        ckptr = Checkpointer(str(tmp_path), keep=1)
+        warmup.save_warm(ckptr, step=1)
+
+        # cold: a fresh engine re-prefills the hot prefix from scratch
+        cold = fresh()
+        cold_reqs = self._hot_reqs(hot, base=100)
+        for r in cold_reqs:
+            cold.submit(r)
+        cold.run(max_steps=300)
+
+        # warm: restored pins serve the hot prefix without re-prefill
+        warm = fresh()
+        step = warm.restore_warm(ckptr)
+        assert step == 1
+        assert warm.pinned_pages() == warmup.pinned_pages()
+        assert warm.spec_store.to_state() == warmup.spec_store.to_state()
+        warm_reqs = self._hot_reqs(hot, base=200)
+        for r in warm_reqs:
+            warm.submit(r)
+        warm.run(max_steps=300)
+
+        assert warm.stats["pin_hit_reqs"] > 0, "restored pins unused"
+        assert (warm.stats["prompt_tokens"]
+                < cold.stats["prompt_tokens"]), "warm restart re-prefilled"
+        # identity: restart is invisible to outputs
+        assert ([r.out_tokens for r in warm_reqs]
+                == [r.out_tokens for r in cold_reqs])
+        warm.flush_pins()
+        _conserved(warm)
+        assert warm.leak_free()
+
+    def test_queued_requests_survive_restart(self, engine_setup,
+                                             tmp_path):
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, dp=1, b_local=4)
+        queued = [Request(rid=i, prompt=[3 + i, 5, 7], max_new_tokens=3,
+                          deadline_s=0.0) for i in range(2)]
+        for r in queued:
+            eng.submit(r)                        # never stepped: all queued
+        ckptr = Checkpointer(str(tmp_path), keep=1)
+        eng.save_warm(ckptr, step=1)
+
+        eng2 = ServingEngine(cfg, params, dp=1, b_local=4)
+        eng2.restore_warm(ckptr)
+        assert eng2.scheduler.backlog() == 2
+        eng2.run(max_steps=300)
+        assert eng2.stats["tokens_out"] > 0
+        assert eng2.leak_free()
