@@ -31,18 +31,35 @@ on them:
                                drain-to-idle gaps vs pinning disabled —
                                token-identical to an unconstrained run,
                                zero leaks after drain + pin flush
-  serving_speculative        — 80%-hot-prefix greedy trace with repeated
-                               full prompts (DESIGN.md §10): draft
-                               accept rate, generated tok/s vs the
-                               non-speculative run of the same trace,
-                               whole-page rollback volume, token
-                               identity, zero leaks
+  serving_speculative        — accept-regime sweep for speculative
+                               decode (DESIGN.md §10, §12): the same
+                               80%-hot-prefix greedy trace run under
+                               full-accept / partial-accept /
+                               adversarial all-reject draft streams at
+                               each draft_len, reporting accept rate,
+                               speedup_gen vs one shared non-spec
+                               baseline, the measured break-even accept
+                               rate per draft_len, and gated rows
+                               showing the accept-rate gate recovering
+                               throughput on hostile streams
   serving_mesh_shards        — dp=4 engine on the shard_map allocation
-                               plane (DESIGN.md §9; a real device mesh
-                               when the process has >= 4 devices):
-                               per-shard occupancy balance from the
-                               status row, token identity vs the
-                               single-device run, zero leaks
+                               plane (DESIGN.md §9).  Needs >= 4
+                               devices; a single-device process
+                               re-execs itself under
+                               ``--xla_force_host_platform_device_count=8``
+                               (``--emit-json mesh_shards``) so the
+                               numbers always measure the real mesh —
+                               never the silent vmap fallback — or
+                               records an explicit ``skipped_no_mesh``
+                               marker if even the re-exec fails
+
+CLI modes (besides the default full run):
+  --emit-json NAME   run one serving bench and print its row as a
+                     ``BENCH_JSON:{...}`` line (subprocess protocol for
+                     the mesh re-exec)
+  --spec-smoke       CI gate: assert speedup_gen >= 1.0 on the gated
+                     partial-accept mix and write a jax.profiler trace
+                     of a speculative step to spec_trace/
 
 Output: ``name,us_per_call,derived`` CSV rows, plus machine-readable
 ``BENCH_serving.json`` (written next to the CWD) so the serving perf
@@ -337,26 +354,75 @@ def serving_throughput():
     return report
 
 
-def serving_speculative(cfg, params):
-    """Speculative decode on shared prefixes (DESIGN.md §10): an
-    80%-hot-prefix greedy trace where hot traffic repeats full prompts
-    (the production shape speculation wins on — retried/templated
-    queries).  Reports the draft accept rate, generated-token
-    throughput vs the non-speculative run of the same trace, the
-    whole-page over-allocation rolled back by rejected drafts, and the
-    usual identity/leak axes."""
+def _garble(t):
+    """A token guaranteed != t for any t in [0, 255] (vocab stays 1..255,
+    clear of pad/EOS ids): t == ((t+1) % 255) + 1 would need 2 ≡ 0
+    (mod 255)."""
+    return ((int(t) + 1) % 255) + 1
+
+
+def _break_even_accept(eng, k):
+    """Smallest accept rate a where 1 + a + ... + a^k clears the
+    measured spec-step cost ratio cost(k+1, spec)/cost(1, decode) — the
+    same break-even the engine's ``_gate_k`` applies (DESIGN.md §12).
+    Falls back to the linear cost model when a width is unmeasured."""
+    c1 = eng._step_cost.get((1, False))
+    ck = eng._step_cost.get((k + 1, True))
+    measured = bool(c1 and ck)
+    ratio = (ck / c1) if measured else 1.0 + eng.spec_cost_slope * k
+    if k + 1 < ratio:                 # even accept=1.0 can't pay
+        return {"cost_ratio": round(ratio, 3), "measured": measured,
+                "accept": None}
+    lo, hi = 0.0, 1.0
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        if sum(mid ** i for i in range(k + 1)) >= ratio:
+            hi = mid
+        else:
+            lo = mid
+    return {"cost_ratio": round(ratio, 3), "measured": measured,
+            "accept": round(hi, 3)}
+
+
+def serving_speculative(cfg, params, smoke=False):
+    """Accept-regime sweep for speculative decode (DESIGN.md §10, §12).
+
+    One shared non-speculative baseline engine runs an 80%-hot-prefix
+    greedy trace (and is re-measured next to every regime row, so each
+    speedup compares thermally-local machine states), then the same
+    trace runs under three draft-stream regimes at each draft_len — ``full`` (recorded history is right: accept 1.0),
+    ``partial`` (history right for the first ~3/4 of each request's
+    continuation, then wrong — the boundary draft is partially
+    accepted and rolls back its rejected tail, and the per-prefix
+    accept EWMA stays clearly above the gate's break-even),
+    ``adversarial`` (history wrong from the first draft token:
+    all-reject, every draft page rolled back) — with the accept-rate
+    gate OFF so the regime's raw cost/benefit is what's measured.  Each
+    draft_len also reports its measured break-even accept rate (the
+    gate's decision boundary, from the EWMA step-cost model).  Two
+    gated rows close the loop: ``partial_gated`` must pay
+    (speedup_gen >= 1.0 is the CI spec-perf-smoke gate) and
+    ``adversarial_gated`` shows the gate switching hostile prefixes off
+    and recovering ~baseline throughput.  Token identity vs the
+    baseline holds in EVERY regime — verification guarantees output,
+    regimes only move cost."""
     import numpy as np
     from repro.serving.engine import Request, ServingEngine
 
     rng = np.random.RandomState(0)
     hot = list(rng.randint(1, 255, 16))                  # 2 pages of 8
     uniq = [hot + list(rng.randint(1, 255, 4 + i)) for i in range(4)]
-    spec = []
+    trace = []
     for i in range(24):
         if rng.random_sample() < 0.8:
-            spec.append(list(uniq[rng.randint(len(uniq))]))   # hot repeat
+            trace.append(list(uniq[rng.randint(len(uniq))]))  # hot repeat
         else:
-            spec.append(list(rng.randint(1, 255, 8 + i % 9)))
+            trace.append(list(rng.randint(1, 255, 8 + i % 9)))
+    # decode-heavy generations: at max_new=8 the trace wall time is
+    # ~70% chunked prefill (where drafts can't help) and the real
+    # decode-side win drowns in prefill-step timing variance; 24 new
+    # tokens per request puts the measurement where speculation acts
+    mn = 24
 
     def drive(eng, reqs, max_steps=2000):
         t0 = time.perf_counter()
@@ -367,8 +433,122 @@ def serving_speculative(cfg, params):
         assert all(r.done for r in reqs)
         return dt
 
-    def spec_stats(eng):
+    def reset(eng):
+        for k in ("steps", "tokens_out", "prompt_tokens", "spec_lanes",
+                  "spec_drafted", "spec_accepted", "spec_pages_rolled_back",
+                  "spec_gate_skips", "spec_mixed_steps"):
+            eng.stats[k] = 0
+        eng.stats["accept_hist"] = {}
+        eng.stats["chunk_hist"] = {}
+
+    def run_trace(eng, rid0, passes=3):
+        """Best-of-N measured passes.  A single trace is only ~50 steps
+        (~0.2s on the smoke config), so one stray jit compile or OS
+        hiccup inside the window swings the ratio by 30%+; pass 1
+        absorbs any residual compile, later passes are steady state,
+        and the fastest pass is reported.  The regimes are stationary
+        (recording is stubbed), so every pass must be token-identical —
+        asserted — which also pins tokens_out across passes, keeping
+        the last pass's stats consistent with the best pass's dt."""
+        outs0, best_dt = None, None
+        for p in range(passes):
+            reset(eng)
+            reqs = [Request(rid0 + 100 * p + i, prompt=list(pr),
+                            max_new_tokens=mn)
+                    for i, pr in enumerate(trace)]
+            dt = drive(eng, reqs)
+            outs = [r.out_tokens for r in reqs]
+            assert outs0 is None or outs == outs0, \
+                f"trace pass {p} diverged from pass 0"
+            outs0 = outs
+            best_dt = dt if best_dt is None else min(best_dt, dt)
+        return outs0, best_dt
+
+    def stagger_warm(eng):
+        """Replay the hot prompts with OVERLAPPING lifetimes: a repeat
+        admitted while its twin is live takes the prefix-share path,
+        whose jitted admission step otherwise compiles (~0.5s) inside
+        the first measured run — every engine warms through this so
+        trace runs compare steady states, not compile schedules."""
+        reqs = [Request(-101 - i, prompt=list(p), max_new_tokens=mn)
+                for i, p in enumerate(uniq)]
+        for r in reqs[:2]:
+            eng.submit(r)
+        for _ in range(3):
+            eng.step()
+        for r in reqs[2:]:
+            eng.submit(r)
+        eng.run(max_steps=500)
+        assert all(r.done for r in reqs)
+
+    def prep(draft_len, gate, regime):
+        """Engine warmed off the clock (pass 1 records the true
+        continuations and captures them for poisoning, pass 2 replays
+        so the spec variant compiles and the step-cost EWMA gets real
+        samples), then the hot streams are rewritten for the regime and
+        recording is stubbed so trace completions can't heal them."""
+        eng = ServingEngine(cfg, params, dp=1, b_local=4, max_len=96,
+                            chunk_size=16, speculate=True,
+                            draft_len=draft_len, spec_gate=gate)
+        # exact-replay-only drafting for the regime probes: all hot
+        # prompts share ONE key, and once a request crosses the
+        # poisoned boundary the n-gram fallback would keep
+        # extrapolating garbage from the same streams — its 0-accept
+        # lanes collapse the per-key EWMA that also gates the still-
+        # reliable exact replay of fresh requests, so the gate's
+        # on/off state becomes an order-dependent coin flip instead of
+        # a property of the regime.  The sweep isolates replay
+        # economics; n-gram drafting has its own identity/rollback
+        # tests.
+        eng.spec_store.ngram = 0
+        reqs = [Request(-1 - i, prompt=list(p), max_new_tokens=mn)
+                for i, p in enumerate(uniq)]
+        drive(eng, reqs, max_steps=500)
+        real = {tuple(p): list(r.out_tokens) for p, r in zip(uniq, reqs)}
+        # replay staggered: the first pair decodes (drafts live from the
+        # streams pass 1 recorded) while the second pair's prompts are
+        # still pending, so the MIXED prompt/decode spec width AND the
+        # prefix-share admission path compile here, not on the trace
+        stagger_warm(eng)
+        if regime != "full":
+            # prefill emits each prompt's first token before any draft
+            # fires, so a poisoned stream needs >= 1 true token for the
+            # exact-suffix replay to engage at all; after that the
+            # adversarial stream is pure garbage (0 accepts/draft)
+            # while the partial stream stays right for the first ~3/4
+            # of the continuation and garbage after — replay goes
+            # structurally dead at the first garbled position (the
+            # engine's correction token diverges the request suffix
+            # from the stream), so the boundary draft is the partially
+            # accepted one that pays a rejected-tail rollback, and the
+            # accept EWMA lands clearly above the gate's measured
+            # break-even (~0.3-0.4 on the smoke config; a stream
+            # that is only half-a-draft right sits ON that boundary
+            # and the gate legitimately oscillates — noise, not
+            # signal).  All hot prompts share ONE whole-page key
+            # (their page-aligned prefix is the same 2 hot pages), so
+            # clear that key's streams once, THEN record every
+            # prompt's poisoned stream under it — the per-suffix
+            # replay disambiguates.
+            for key in {eng.spec_store.key_of(p) for p in uniq}:
+                eng.spec_store.streams.pop(key, None)
+            for p in uniq:
+                key = eng.spec_store.key_of(p)
+                tail = tuple(p[len(key):])
+                r = real[tuple(p)]
+                keep = (1 if regime == "adversarial"
+                        else 1 + max(1, 3 * len(r) // 4))
+                cont = tail + tuple(r[:keep]) + tuple(
+                    _garble(r[j]) if j < len(r) else _garble(j + 31)
+                    for j in range(keep, keep + 8))
+                eng.spec_store.record(key, cont)
+            eng.spec_store.record = lambda *a, **kw: None
+        reset(eng)
+        return eng
+
+    def row_of(eng, dt, outs, base_now):
         s = eng.stats
+        tps = round(s["tokens_out"] / dt, 1)
         return {
             "steps": s["steps"],
             "spec_lanes": s["spec_lanes"],
@@ -376,87 +556,161 @@ def serving_speculative(cfg, params):
             "accepted": s["spec_accepted"],
             "accept_rate": round(s["spec_accepted"]
                                  / max(s["spec_drafted"], 1), 2),
-            "accept_hist": {str(k): v
-                            for k, v in sorted(s["accept_hist"].items())},
+            "gate_skips": s["spec_gate_skips"],
+            "mixed_steps": s["spec_mixed_steps"],
             "pages_rolled_back": s["spec_pages_rolled_back"],
-            "lane_hist": {str(k): v
-                          for k, v in sorted(s["chunk_hist"].items())},
+            "gen_tok_per_s": tps,
+            "baseline_tok_per_s": base_now,
+            "speedup_gen": round(tps / max(base_now, 1e-9), 2),
+            "token_identical": outs == base_outs,
+            "leak_free": eng.page_occupancy() == 0.0,
         }
 
-    def run(speculate):
-        eng = ServingEngine(cfg, params, dp=1, b_local=4, max_len=96,
-                            chunk_size=16, speculate=speculate,
-                            draft_len=4)
-        # warm twice: the first pass over the unique hot prompts records
-        # their continuations, the second replays them so draft lanes
-        # fire and the speculative step variant compiles off the clock
-        for w in range(2):
-            drive(eng, [Request(-1 - i - 100 * w, prompt=list(p),
-                                max_new_tokens=8)
-                        for i, p in enumerate(uniq)], max_steps=500)
-        for k in ("steps", "tokens_out", "prompt_tokens", "spec_lanes",
-                  "spec_drafted", "spec_accepted",
-                  "spec_pages_rolled_back"):
-            eng.stats[k] = 0
-        eng.stats["accept_hist"] = {}
-        eng.stats["chunk_hist"] = {}
-        reqs = [Request(i, prompt=list(p), max_new_tokens=8)
-                for i, p in enumerate(spec)]
-        dt = drive(eng, reqs)
-        row = spec_stats(eng)
-        row["gen_tok_per_s"] = round(eng.stats["tokens_out"] / dt, 1)
-        row["leak_free"] = eng.page_occupancy() == 0.0
-        return [r.out_tokens for r in reqs], row, eng
+    # ---- shared baseline: one non-speculative engine, kept alive so
+    # every regime row can re-measure it in the SAME machine state.
+    # The sweep interleaves minutes of multi-core jit compilation with
+    # its measured windows; a baseline captured once up front is 20-40%
+    # stale (thermal/frequency drift) by the later rows, which showed
+    # up as two behaviorally identical regime runs differing 0.75x vs
+    # 1.04x purely by when they ran.
+    base_eng = ServingEngine(cfg, params, dp=1, b_local=4, max_len=96,
+                             chunk_size=16)
+    drive(base_eng, [Request(-1 - i, prompt=list(p), max_new_tokens=mn)
+                     for i, p in enumerate(uniq)], max_steps=500)  # compile
+    stagger_warm(base_eng)
+    base_outs, base_dt = run_trace(base_eng, 0)
+    base_tps = round(base_eng.stats["tokens_out"] / base_dt, 1)
+    base = {"steps": base_eng.stats["steps"], "gen_tok_per_s": base_tps,
+            "leak_free": base_eng.page_occupancy() == 0.0}
+    _base_rid = [10000]
 
-    out_ns, base, _ = run(False)
-    out_sp, specd, eng = run(True)
+    def base_tps_now():
+        """Thermally-local baseline: best-of-2 fresh passes on the
+        warmed baseline engine, taken right after the regime row it
+        normalizes."""
+        _base_rid[0] += 1000
+        outs, dt = run_trace(base_eng, _base_rid[0], passes=2)
+        assert outs == base_outs
+        return round(base_eng.stats["tokens_out"] / dt, 1)
 
-    # rollback probe: greedy exact-match drafting only rejects when the
-    # recorded history is wrong, so force it — poison each hot prompt's
-    # continuation with its real first token + garbage and replay.
-    # Measures the cost of worst-case rejection: every draft rolled
-    # back, §4.2 and conservation intact, still leak-free.
-    for i, p in enumerate(uniq):
-        key = eng.spec_store.key_of(p)
-        real = out_sp[spec.index(p)] if p in spec else None
-        first = (real[0],) if real else ()
-        tail = tuple(p[len(key):])
-        garbage = tuple((t + 101) % 250 + 1 for t in range(4))
-        eng.spec_store.streams.pop(key, None)
-        eng.spec_store.record(key, tail + first + garbage)
-    s0 = dict(eng.stats)
-    probe = [Request(1000 + i, prompt=list(p), max_new_tokens=8)
-             for i, p in enumerate(uniq * 2)]
-    drive(eng, probe, max_steps=500)
-    rejected_probe = {
-        "drafted": eng.stats["spec_drafted"] - s0["spec_drafted"],
-        "accepted": eng.stats["spec_accepted"] - s0["spec_accepted"],
-        "pages_rolled_back": (eng.stats["spec_pages_rolled_back"]
-                              - s0["spec_pages_rolled_back"]),
-        "leak_free": eng.page_occupancy() == 0.0,
-    }
+    def gated_run(regime, rid0):
+        eng = prep(4, True, regime)
+        outs, dt = run_trace(eng, rid0)
+        r = row_of(eng, dt, outs, base_tps_now())
+        r["break_even"] = _break_even_accept(eng, 4)
+        print(f"serving_speculative,0,regime={regime}_gated draft_len=4 "
+              f"accept_rate={r['accept_rate']} "
+              f"speedup_gen={r['speedup_gen']} "
+              f"gate_skips={r['gate_skips']} "
+              f"token_identical={r['token_identical']} "
+              f"leak_free={r['leak_free']}")
+        return r
 
-    row = {"baseline": base, "speculative": specd,
-           "rejected_probe": rejected_probe,
-           "token_identical": out_ns == out_sp,
-           "steps_saved": base["steps"] - specd["steps"],
-           "speedup_gen": round(specd["gen_tok_per_s"]
-                                / max(base["gen_tok_per_s"], 1e-9), 2)}
-    print(f"serving_speculative,0,accept_rate={specd['accept_rate']} "
-          f"steps {base['steps']}->{specd['steps']} "
-          f"gen_tok_per_s {base['gen_tok_per_s']}->"
-          f"{specd['gen_tok_per_s']} "
-          f"probe_rolled_back={rejected_probe['pages_rolled_back']} "
-          f"token_identical={row['token_identical']} "
-          f"leak_free={specd['leak_free'] and rejected_probe['leak_free']}")
+    if smoke:
+        partial_gated = gated_run("partial", 3000)
+        return {"baseline": base, "partial_gated": partial_gated}
+
+    # ---- raw regimes, gate off: what each accept regime really costs
+    sweep = {}
+    for dl in (2, 4):
+        regimes = {}
+        for regime in ("full", "partial", "adversarial"):
+            eng = prep(dl, False, regime)
+            outs, dt = run_trace(eng, 1000 * dl)
+            regimes[regime] = row_of(eng, dt, outs, base_tps_now())
+            print(f"serving_speculative,0,regime={regime} draft_len={dl} "
+                  f"accept_rate={regimes[regime]['accept_rate']} "
+                  f"speedup_gen={regimes[regime]['speedup_gen']} "
+                  f"rolled_back={regimes[regime]['pages_rolled_back']} "
+                  f"token_identical={regimes[regime]['token_identical']} "
+                  f"leak_free={regimes[regime]['leak_free']}")
+        regimes["break_even"] = _break_even_accept(eng, dl)
+        print(f"serving_speculative,0,break_even draft_len={dl} "
+              f"cost_ratio={regimes['break_even']['cost_ratio']} "
+              f"accept={regimes['break_even']['accept']} "
+              f"measured={regimes['break_even']['measured']}")
+        sweep[f"draft_len_{dl}"] = regimes
+
+    # ---- gate on: partial must pay, adversarial must be defanged
+    partial_gated = gated_run("partial", 3000)
+    adversarial_gated = gated_run("adversarial", 4000)
+
+    all_identical = (partial_gated["token_identical"]
+                     and adversarial_gated["token_identical"]
+                     and all(r["token_identical"]
+                             for k, regs in sweep.items()
+                             for n, r in regs.items() if n != "break_even"))
+    row = {"baseline": base, "sweep": sweep,
+           "partial_gated": partial_gated,
+           "adversarial_gated": adversarial_gated,
+           "token_identical": all_identical}
+    print(f"serving_speculative,0,summary baseline={base_tps}tok/s "
+          f"partial_gated_speedup={partial_gated['speedup_gen']} "
+          f"adversarial_gated_speedup={adversarial_gated['speedup_gen']} "
+          f"token_identical_all_regimes={all_identical}")
     return row
 
 
+_JSON_TAG = "BENCH_JSON:"
+
+
 def serving_mesh_shards(cfg, params):
-    """Multi-host allocation plane smoke (DESIGN.md §9): a mixed
-    hot-prefix workload on a dp=4 engine — shard_mapped over a real
-    ("dp",) device mesh when the process has >= 4 devices (CI's mesh-8
-    job forces 8 CPU devices), vmap semantics otherwise.  Reports the
+    """Multi-host allocation plane smoke (DESIGN.md §9) — with the
+    mesh actually present.  A dp=4 engine only shard_maps over a real
+    ("dp",) device mesh when the process has >= 4 devices; below that
+    it silently falls back to vmap semantics, and this bench used to
+    report those single-device numbers as if they measured the mesh.
+    Now a single-device process re-execs itself under
+    ``--xla_force_host_platform_device_count=8`` (the ``--emit-json``
+    subprocess protocol) so the row always comes from a real mesh, and
+    if even the re-exec cannot produce one the row is an explicit
+    ``skipped_no_mesh`` marker instead of misleading numbers."""
+    import subprocess
+
+    import jax
+    if jax.local_device_count() >= 4:
+        return _serving_mesh_shards_inline(cfg, params)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    try:
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--emit-json", "mesh_shards"],
+            env=env, capture_output=True, text=True, timeout=1200)
+        row = None
+        for line in reversed(proc.stdout.splitlines()):
+            if line.startswith(_JSON_TAG):
+                row = json.loads(line[len(_JSON_TAG):])
+                break
+        if row is None:
+            raise RuntimeError(
+                f"re-exec produced no {_JSON_TAG} row "
+                f"(rc={proc.returncode}): {proc.stderr[-2000:]}")
+        row["mesh_via_subprocess"] = True
+        print(f"serving_mesh_shards,0,devices={row['mesh_devices']} "
+              f"shard_map={row['shard_map']} (via subprocess re-exec) "
+              f"pages_mean_shard={row['pages_mean_shard']} "
+              f"token_identical={row['token_identical_vs_single_device']} "
+              f"leak_free={row['leak_free']}")
+        return row
+    except Exception as e:  # noqa: BLE001 — any failure means "no mesh"
+        row = {"skipped_no_mesh": True,
+               "mesh_devices": jax.local_device_count(),
+               "reason": str(e)[:500]}
+        print(f"serving_mesh_shards,0,skipped_no_mesh=True "
+              f"devices={jax.local_device_count()} (dp=4 would fall back "
+              "to single-device vmap semantics; row suppressed)")
+        return row
+
+
+def _serving_mesh_shards_inline(cfg, params):
+    """The actual dp=4 mesh bench body — caller guarantees >= 4 devices
+    (directly, or via the forced-device re-exec above).  Reports the
     per-shard occupancy stats from the packed status row (the
     scheduler's placement balance across hosts) and the usual
     leak/identity axes vs a single-device run of the same trace."""
@@ -787,7 +1041,86 @@ def serving_chaos(cfg, params):
     return row
 
 
-def main() -> None:
+def spec_perf_smoke(cfg, params):
+    """CI gate (spec-perf-smoke job): speculation must PAY.  Runs the
+    shared baseline plus the gated partial-accept mix and asserts
+    ``speedup_gen >= 1.0`` — the regression this PR exists to fix (the
+    prior state of this path was 0.22x, ROADMAP §perf) — then profiles
+    a window containing one speculative verify step with jax.profiler
+    into ``spec_trace/`` for the job's artifact upload."""
+    import jax
+    import numpy as np
+    from repro.serving.engine import Request, ServingEngine
+
+    row = serving_speculative(cfg, params, smoke=True)
+    part = row["partial_gated"]
+    assert part["token_identical"], part
+    assert part["leak_free"], part
+    assert part["spec_lanes"] > 0, part
+    assert part["speedup_gen"] >= 1.0, (
+        f"speculation lost throughput on the partial-accept mix: {part}")
+
+    # profiler trace of a speculative step: record + compile off-trace,
+    # then step a hot replay until a draft lane fires inside the trace
+    rng = np.random.RandomState(0)
+    hot = list(rng.randint(1, 255, 16))
+    uniq = [hot + list(rng.randint(1, 255, 4 + i)) for i in range(4)]
+    eng = ServingEngine(cfg, params, dp=1, b_local=4, max_len=96,
+                        chunk_size=16, speculate=True, draft_len=4)
+    for w in range(2):
+        for i, p in enumerate(uniq):
+            eng.submit(Request(-1 - i - 100 * w, prompt=list(p),
+                               max_new_tokens=8))
+        eng.run(max_steps=500)
+    for i, p in enumerate(uniq):
+        eng.submit(Request(i, prompt=list(p), max_new_tokens=8))
+    s0 = eng.stats["spec_lanes"]
+    trace_dir = os.path.abspath("spec_trace")
+    os.makedirs(trace_dir, exist_ok=True)
+    with jax.profiler.trace(trace_dir):
+        for _ in range(50):
+            eng.step()
+            if eng.stats["spec_lanes"] > s0:
+                break
+    assert eng.stats["spec_lanes"] > s0, "no speculative step in trace"
+    eng.run(max_steps=500)
+    assert eng.page_occupancy() == 0.0
+    print(f"spec_perf_smoke,0,speedup_gen={part['speedup_gen']} "
+          f"accept_rate={part['accept_rate']} "
+          f"gate_skips={part['gate_skips']} trace_dir=spec_trace")
+
+
+# serving benches reachable via the --emit-json subprocess protocol
+_EMIT_JSON_FNS = {
+    "mesh_shards": _serving_mesh_shards_inline,
+    "speculative": serving_speculative,
+}
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit-json", metavar="NAME", default=None,
+                    choices=sorted(_EMIT_JSON_FNS),
+                    help="run one serving bench and print its row as a "
+                         f"'{_JSON_TAG}' line (subprocess protocol)")
+    ap.add_argument("--spec-smoke", action="store_true",
+                    help="CI gate: assert gated partial-accept "
+                         "speedup_gen >= 1.0 and write a jax.profiler "
+                         "trace of a speculative step to spec_trace/")
+    args = ap.parse_args(argv)
+    if args.emit_json or args.spec_smoke:
+        import jax
+        from repro import models
+        from repro.configs import get_config, smoke_config
+        cfg = smoke_config(get_config("olmo-1b"))
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        if args.spec_smoke:
+            spec_perf_smoke(cfg, params)
+            return
+        row = _EMIT_JSON_FNS[args.emit_json](cfg, params)
+        print(_JSON_TAG + json.dumps(row))
+        return
     print("name,us_per_call,derived")
     result1_worst_case_steps()
     result1_vs_baselines()

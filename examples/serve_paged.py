@@ -56,6 +56,10 @@ def main():
                          "verify+rollback inside the fused step)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="draft tokens per speculative lane")
+    ap.add_argument("--no-spec-gate", action="store_true",
+                    help="disable the per-prefix accept-rate break-even "
+                         "gate (DESIGN §12): always draft at full "
+                         "draft-len")
     ap.add_argument("--repeat-frac", type=float, default=0.0,
                     help="fraction of requests repeating a previous "
                          "full prompt (the traffic speculation wins on)")
@@ -98,6 +102,7 @@ def main():
             cfg, params, dp=2, b_local=4, max_len=96,
             scheduler_lanes=4, chunk_size=args.chunk,
             speculate=args.speculate, draft_len=args.draft_len,
+            spec_gate=not args.no_spec_gate,
             sched=SchedConfig(pin_pages=args.pin_pages,
                               chunk_buckets=buckets),
             journal=journal, injector=injector, max_restarts=4)
@@ -184,7 +189,9 @@ def main():
         print(f"speculative: {s['spec_lanes']} draft lanes, "
               f"{s['spec_drafted']} drafted, {s['spec_accepted']} accepted "
               f"(rate={rate:.2f}), {s['spec_pages_rolled_back']} pages "
-              f"rolled back, accept_hist={s['accept_hist']}")
+              f"rolled back, accept_hist={s['accept_hist']}, "
+              f"gate_skips={s['spec_gate_skips']}, "
+              f"mixed_steps={s['spec_mixed_steps']}")
     print(f"host admission worst-case steps={s['alloc_steps_max']} "
           f"(paper Result 1: O(1))")
     engine.flush_pins()

@@ -1,0 +1,3 @@
+from .ops import verify_attention  # noqa: F401
+from .kernel import build_verify_schedule  # noqa: F401
+from .ref import verify_attention_ref  # noqa: F401

@@ -59,6 +59,10 @@ def main(argv=None):
                          "(DESIGN.md §10)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="draft tokens per speculative lane")
+    ap.add_argument("--no-spec-gate", action="store_true",
+                    help="disable the per-prefix accept-rate break-even "
+                         "gate (DESIGN.md §12): always draft at full "
+                         "draft-len")
     ap.add_argument("--chunk-buckets", default="",
                     help="comma-separated SLO-aware prefill lane widths "
                          "(e.g. 1,4,8); empty = fixed chunk")
@@ -92,6 +96,7 @@ def main(argv=None):
             cfg, params, dp=args.dp, b_local=args.b_local,
             max_len=args.max_len,
             speculate=args.speculate, draft_len=args.draft_len,
+            spec_gate=not args.no_spec_gate,
             mesh=("auto" if args.mesh == "auto" else None),
             sched=SchedConfig(pin_pages=args.pin_pages,
                               page_budget=args.page_budget,
@@ -156,7 +161,9 @@ def main(argv=None):
         print(f"speculative: drafted={s['spec_drafted']} "
               f"accepted={s['spec_accepted']} (rate={rate:.2f}) "
               f"pages_rolled_back={s['spec_pages_rolled_back']} "
-              f"accept_hist={s['accept_hist']}")
+              f"accept_hist={s['accept_hist']} "
+              f"gate_skips={s['spec_gate_skips']} "
+              f"mixed_steps={s['spec_mixed_steps']}")
     occ = engine.shard_occupancy()
     print(f"shard occupancy: mean={occ['pages_mean_shard']} "
           f"peak={occ['pages_peak_shard']} pages per shard")

@@ -155,6 +155,47 @@ def logits_apply(cfg, params, x):
     return x @ w
 
 
+def logits_argmax_chunked(cfg, params, x, chunk: int = 1024):
+    """``jnp.argmax(logits_apply(cfg, params, x), -1)`` without ever
+    materializing the [..., V] logits tensor.
+
+    Scans vocabulary chunks keeping a running (max, argmax).  Each
+    candidate logit is the same dot product the full projection
+    computes, and ascending chunk order with a strict ``>`` preserves
+    ``jnp.argmax``'s first-max tie-break — so the winner is exactly the
+    full projection's argmax.  The speculative verify path uses this so
+    greedy draft verification never builds [T, V] (DESIGN.md §12).
+    """
+    w = params.get("lm_head")
+    if w is None:
+        w = params["tok"].T
+    D, V = w.shape
+    chunk = min(chunk, V)
+    n = V // chunk
+
+    def fold(carry, lg, off):
+        best, arg = carry
+        m = jnp.max(lg, axis=-1)
+        a = jnp.argmax(lg, axis=-1).astype(jnp.int32) + off
+        upd = m > best
+        return jnp.where(upd, m, best), jnp.where(upd, a, arg)
+
+    def body(carry, wc_off):
+        wc, off = wc_off
+        lg = (x @ wc).astype(jnp.float32)
+        return fold(carry, lg, off), None
+
+    ws = w[:, :n * chunk].reshape(D, n, chunk).transpose(1, 0, 2)
+    offs = jnp.arange(n, dtype=jnp.int32) * chunk
+    init = (jnp.full(x.shape[:-1], -jnp.inf, jnp.float32),
+            jnp.zeros(x.shape[:-1], jnp.int32))
+    (best, arg), _ = jax.lax.scan(body, init, (ws, offs))
+    if V % chunk:
+        lg = (x @ w[:, n * chunk:]).astype(jnp.float32)
+        best, arg = fold((best, arg), lg, jnp.int32(n * chunk))
+    return arg
+
+
 def chunked_softmax_xent(cfg, embed_params, x, labels, chunk: int = 512):
     """Cross-entropy without materializing [B, S, V] logits.
 

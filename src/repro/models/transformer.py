@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from ..configs.base import base_kind, is_moe_kind
 from ..core import block_pool, hier_pool
 from ..kernels.paged_attention.ops import paged_attention_chunk
+from ..kernels.verify_attention.ops import verify_attention
 from ..parallel.partition import constrain_batch
 from . import attention as attn
 from . import moe as moe_mod
@@ -376,12 +377,16 @@ def _paged_write_chunk(k_pages, v_pages, k_new, v_new, page_ids, pos_in_page,
     return jax.vmap(one)(k_pages, v_pages, k_new, v_new, pid, pos_in_page)
 
 
-def _paged_attn_chunk(q, k_pages, v_pages, tables, base):
+def _paged_attn_chunk(q, k_pages, v_pages, tables, base, verify=False):
     """q: [DP, Bl, T, H, hd]; pages: [DP, P, psz, KH, hd]; base: [DP, Bl].
 
     Folds DP into the kernel batch (shard-local page ids offset by d*P)
     so one pallas_call / ref call covers all shards — no vmap over the
     kernel.  Dispatches the Pallas chunk kernel on TPU, jnp ref elsewhere.
+    verify=True routes through the page-grouped verify-attention
+    schedule (kernels/verify_attention) — bit-identical math, but each
+    hot shared page is streamed from HBM once for all draft lanes
+    reading it instead of once per lane.
     """
     DP, Bl, T, H, hd = q.shape
     P = k_pages.shape[1]
@@ -390,8 +395,8 @@ def _paged_attn_chunk(q, k_pages, v_pages, tables, base):
     tg = jnp.where(tables >= 0, tables + off, -1).reshape(DP * Bl, maxp)
     kg = k_pages.reshape((DP * P,) + k_pages.shape[2:])
     vg = v_pages.reshape((DP * P,) + v_pages.shape[2:])
-    o = paged_attention_chunk(q.reshape(DP * Bl, T, H, hd), kg, vg, tg,
-                              base.reshape(DP * Bl))
+    op = verify_attention if verify else paged_attention_chunk
+    o = op(q.reshape(DP * Bl, T, H, hd), kg, vg, tg, base.reshape(DP * Bl))
     return o.reshape(DP, Bl, T, H, hd)
 
 
@@ -478,7 +483,8 @@ def _xattn_decode_chunk(cfg, lp, x, enc_kv_layer):
 
 
 def _mix_decode_chunk(cfg, lp, x, kind, st_kind, layer_state, state,
-                      positions, tok_valid, base, lens, enc_kv_layer=None):
+                      positions, tok_valid, base, lens, enc_kv_layer=None,
+                      verify=False):
     """One layer over a chunk of up to T tokens per sequence.
 
     x: [DP, Bl, T, d].  Attention layers process the chunk in parallel
@@ -510,7 +516,8 @@ def _mix_decode_chunk(cfg, lp, x, kind, st_kind, layer_state, state,
             write = tok_valid & (pid >= 0)
             kp, vp = _paged_write_chunk(kp, vp, kd, vd, pid,
                                         positions % psz, write)
-            o = _paged_attn_chunk(qd, kp, vp, state.page_tables, base)
+            o = _paged_attn_chunk(qd, kp, vp, state.page_tables, base,
+                                  verify=verify)
             new_state = (kp, vp)
         else:
             kr, vr = layer_state
@@ -562,7 +569,7 @@ def _mix_decode_chunk(cfg, lp, x, kind, st_kind, layer_state, state,
 
 
 def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
-                         active=None):
+                         active=None, verify=False):
     """Chunked decode/prefill: up to T tokens per sequence per call.
 
     tokens: int32 [DP, Bl, T]; lens: int32 [DP, Bl] — valid tokens per
@@ -628,7 +635,7 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
             x, ns = _mix_decode_chunk(
                 cfg, gparams[pos], x, kind, st_kinds[pos], gstate[pos],
                 state, positions, tok_valid, base, lens,
-                enc_kv_g if has_x else None)
+                enc_kv_g if has_x else None, verify=verify)
             new_gstate[pos] = ns
         return x, new_gstate
 
@@ -669,7 +676,8 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
             idx = cfg.n_groups * len(cfg.pattern) + j
             enc_l = (state.enc_kv[0][idx], state.enc_kv[1][idx])
         x, ns = _mix_decode_chunk(cfg, lp, x, kind, st_kind, ls0, state,
-                                  positions, tok_valid, base, lens, enc_l)
+                                  positions, tok_valid, base, lens, enc_l,
+                                  verify=verify)
         new_rem_states[pos] = jax.tree.map(lambda a: a[None], ns)
 
     kv_pages, rings, rec = {}, {}, {}

@@ -80,7 +80,7 @@ import functools
 import itertools
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,7 +93,7 @@ from ..launch.mesh import SERVE_DP_AXIS, make_dp_mesh
 from ..launch.steps import (serve_register_pspec, serve_shardings,
                             serve_state_pspecs)
 from ..models.decode_init import empty_decode_state, empty_serve_arrays
-from ..models.layers import logits_apply
+from ..models.layers import logits_apply, logits_argmax_chunked
 from ..models.transformer import DecodeState, forward_decode_chunk
 from ..runtime.fault import StepWatchdog
 from .chaos import HostCrash, PoisonedRequest
@@ -173,9 +173,9 @@ STATUS_DONE = 1      # + T: 1 iff the slot finished (pages released)
 STATUS_PAGES = 2     # + T: pages-in-use on the slot's DP shard
 
 
-def _serve_step(cfg, max_len, eos_id, use_sampler, spec, axis_name, params,
-                state, last_tok, out_count, budget, temps, topks, seeds,
-                prompt_toks, feed_lens, is_prompt, emit):
+def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
+                params, state, last_tok, out_count, budget, temps, topks,
+                seeds, prompt_toks, feed_lens, is_prompt, emit):
     """One fully device-resident token-lane step (jitted per lane width
     T x the two static feature flags).
 
@@ -199,8 +199,10 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, axis_name, params,
     per-position logits of draft verification — plain serving pays
     nothing for either feature.
 
-    Speculative verify+rollback (``spec``; DESIGN.md §10): every lane
-    position is scored (one vocab projection over the lane), position
+    Speculative verify+rollback (``spec``; DESIGN.md §10, §12): the
+    ``n_verify`` (static: draft_len + 1) verify positions of each lane
+    are gathered and scored — never the full lane width — attention
+    runs through the page-grouped verify kernel, position
     i's candidate is sampled with key index ``out_count + i``, and a
     draft is accepted iff it equals the previous position's candidate —
     so an accepted stream is exactly the stream sequential decode would
@@ -237,26 +239,45 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, axis_name, params,
     base = state.seq_lens
 
     hidden, state = forward_decode_chunk(cfg, params, toks, state,
-                                         feed_lens, active=active)
+                                         feed_lens, active=active,
+                                         verify=spec)
     idx = jnp.maximum(feed_lens - 1, 0)
     emit = emit & active
     if spec:
-        # --- score every lane position (draft verification needs them
-        # all; the host only dispatches this variant on all-decode
-        # steps of width draft_len + 1, so the extra vocab projections
-        # are k per slot, never chunk-sized)
-        logits = logits_apply(cfg, params["embed"], hidden)  # [DP,Bl,T,V]
-        j = jnp.arange(T, dtype=jnp.int32)
+        # --- projection slimming (DESIGN.md §12): only the k + 1
+        # verify positions of a draft lane need logits.  Gather those
+        # hidden rows FIRST — a generating lane's verify positions are
+        # lane positions 0..Tv-1, a prompt lane needs only its single
+        # emitting position idx (broadcast over the gathered rows) —
+        # then project the [DP, Bl, Tv, d] gather instead of the whole
+        # [DP, Bl, T, d] lane, so a draft riding a chunk-width step
+        # pays k + 1 vocab columns per slot, never T
+        Tv = min(T, n_verify) if n_verify > 0 else T
+        j = jnp.arange(Tv, dtype=jnp.int32)
+        vpos = jnp.where(is_prompt[..., None], idx[..., None],
+                         jnp.minimum(j, T - 1)[None, None])  # [DP,Bl,Tv]
+        hidden_v = jnp.take_along_axis(hidden, vpos[..., None], axis=2)
         # output-key index per position: generating lanes emit from
         # position 0 on (key out_count + i); a prompt lane's single
-        # emitting position is output index 0 (key out_count)
+        # emitting position is output index 0 (key out_count) — the
+        # gather changes WHICH rows are scored, never the key a given
+        # output index draws with, so the fold_in(seed, out_count + i)
+        # stream stays bit-exact
         cnt = out_count[..., None] + jnp.where(is_prompt[..., None], 0,
                                                j[None, None])
         if use_sampler:
+            logits = logits_apply(cfg, params["embed"],
+                                  hidden_v)            # [DP,Bl,Tv,V]
             nxt_all = sample_lane(logits, temps, topks, seeds, cnt)
         else:
-            nxt_all = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        last_pos = jnp.take_along_axis(nxt_all, idx[..., None],
+            # chunked-vocab argmax: greedy verification never builds
+            # the [Tv, V] tensor either
+            nxt_all = logits_argmax_chunked(cfg, params["embed"], hidden_v)
+        # a prompt lane's gathered rows all hold position idx, so row 0
+        # is its emitting candidate; a generating lane's last fed
+        # position is row feed_lens - 1 (feed <= Tv by dispatch)
+        vidx = jnp.where(is_prompt, 0, jnp.minimum(idx, Tv - 1))
+        last_pos = jnp.take_along_axis(nxt_all, vidx[..., None],
                                        axis=2)[..., 0]
         # emission stream: generating lanes emit candidates in lane
         # order; prompt lanes emit (at most) their last position's
@@ -264,7 +285,7 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, axis_name, params,
                           nxt_all)
         # draft i (lane position i >= 1) is accepted iff position i-1's
         # candidate equals it and every earlier draft was accepted
-        dmatch = ((nxt_all[..., :-1] == toks[..., 1:]) &
+        dmatch = ((nxt_all[..., :-1] == toks[..., 1:Tv]) &
                   (j[None, None, 1:] < feed_lens[..., None]))
         accepted = jnp.sum(jnp.cumprod(dmatch.astype(jnp.int32), axis=-1),
                            axis=-1)
@@ -274,7 +295,7 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, axis_name, params,
         # included, then the slot finishes)
         is_e = (etoks == eos_id) & (j[None, None] < n_cand[..., None])
         eos_cut = jnp.where(jnp.any(is_e, axis=-1),
-                            jnp.argmax(is_e, axis=-1) + 1, T + 1)
+                            jnp.argmax(is_e, axis=-1) + 1, Tv + 1)
         room = jnp.maximum(budget - out_count, 0)
         n_emit = jnp.minimum(n_cand, jnp.minimum(room, eos_cut))
         hit_eos = jnp.any(is_e & (j[None, None] < n_emit[..., None]),
@@ -305,6 +326,10 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, axis_name, params,
             etoks, jnp.maximum(n_emit - 1, 0)[..., None], axis=2)[..., 0]
         last_tok = jnp.where(n_emit > 0, last_emitted, last_tok)
         tok_rows = jnp.where(j[None, None] < n_emit[..., None], etoks, -1)
+        if Tv < T:      # pad the gathered rows back to the lane width
+            tok_rows = jnp.concatenate(
+                [tok_rows, jnp.full((DP, Bl, T - Tv), -1, jnp.int32)],
+                axis=-1)
     else:
         h_last = jnp.take_along_axis(hidden, idx[..., None, None],
                                      axis=2)[:, :, 0]     # [DP, Bl, d]
@@ -349,6 +374,7 @@ class ServingEngine:
                  eos_id: Optional[int] = None,
                  prefix_sharing: bool = True,
                  speculate: bool = False, draft_len: int = 4,
+                 spec_gate: bool = True,
                  sched: Optional[SchedConfig] = None,
                  mesh="auto",
                  journal=None, injector=None,
@@ -427,10 +453,11 @@ class ServingEngine:
 
         eos = -1 if eos_id is None else int(eos_id)
         self.eos_id = eos_id
+        self._spec_T = self.draft_len + 1
         self._serve_variants = {
             (sampler, spec): wrap(
                 functools.partial(_serve_step, cfg, self.capacity, eos,
-                                  sampler, spec, self._axis),
+                                  sampler, spec, self._spec_T, self._axis),
                 in_specs=(P(), S) + (R,) * 10,
                 out_specs=(S, R, R, P()),
                 donate=(1, 2, 3))
@@ -458,10 +485,21 @@ class ServingEngine:
         # back pages and seq_lens, but ring/recurrent state cannot be
         # un-evolved, so those models never dispatch the spec variant
         self.spec_store: Optional[SpeculationStore] = None
-        self._spec_T = self.draft_len + 1
         if speculate and self.draft_len > 0 and self.prefix_cache is not None:
             self.spec_store = SpeculationStore(cfg.page_size)
         self.speculate = self.spec_store is not None
+        # accept-rate-gated drafting (DESIGN.md §12): per-prefix EWMA
+        # accept rate (lives in the SpeculationStore, so it survives
+        # warm restarts with the streams) against a measured per-step
+        # cost model — an EWMA of step wall time keyed by (lane width,
+        # spec).  Before both sides are measured, the break-even test
+        # falls back to a linear cost model: a width-(k+1) verify step
+        # costs ~ (1 + slope * k) plain decode steps (the slope is what
+        # the verify kernel + projection slimming shrink).
+        self.spec_gate = bool(spec_gate)
+        self.spec_cost_slope = 0.25
+        self._step_cost: Dict[Tuple[int, bool], float] = {}
+        self._cost_seen: set = set()
 
         # traffic-aware frontend: admission order / page budgets /
         # preemption / pin policy (DESIGN.md §8).  The default budget is
@@ -550,6 +588,7 @@ class ServingEngine:
                       "chunk_hist": {}, "spec_drafted": 0,
                       "spec_accepted": 0, "spec_lanes": 0,
                       "accept_hist": {}, "spec_pages_rolled_back": 0,
+                      "spec_gate_skips": 0, "spec_mixed_steps": 0,
                       # fault-tolerance telemetry (DESIGN.md §11)
                       "stragglers": 0, "step_timeouts": 0,
                       "recoveries": 0, "deadline_expired": 0,
@@ -915,13 +954,48 @@ class ServingEngine:
         return n
 
     # -------------------------------------------------------------- step
+    def _gate_k(self, key, k_max: int) -> int:
+        """Break-even draft length for this prefix (DESIGN.md §12).
+
+        Expected tokens per step at accept rate ``a`` with k drafts is
+        ``1 + a + a^2 + ... + a^k`` (draft i lands only if every earlier
+        draft did); a width-(k+1) verify step costs ``cost(k+1, spec) /
+        cost(1, decode)`` plain steps, from the measured per-step EWMA
+        when both widths have run, else the linear fallback model.
+        Returns the largest k <= k_max whose expected tokens clear its
+        cost — so draft_len SHRINKS before speculation disables — or 0
+        to skip drafting this prefix.  An unmeasured prefix drafts at
+        k_max: optimism is how the EWMA gets its first sample.
+        """
+        if not self.spec_gate or k_max <= 0:
+            return k_max
+        a = self.spec_store.accept_rate(key)
+        if a is None:
+            return k_max
+        c1 = self._step_cost.get((1, False))
+        exp_tokens = 1.0
+        gain = 1.0
+        best = 0
+        for k in range(1, k_max + 1):
+            gain *= a
+            exp_tokens += gain
+            ck = self._step_cost.get((k + 1, True))
+            ratio = (ck / c1 if c1 and ck
+                     else 1.0 + self.spec_cost_slope * k)
+            if exp_tokens >= ratio:
+                best = k
+        return best
+
     def _build_drafts(self, limit: int) -> Dict[int, List[int]]:
         """Host-side draft proposals for this step's generating slots,
         from the hot-prefix continuation store.  Drafted ONCE per hot
         prefix per step: slots at the same (prefix, context) reuse one
         lookup.  Never reads device state — the step keeps its single
         sync.  Caps keep drafts within the slot's page-table capacity
-        and output budget (a draft past either is guaranteed waste)."""
+        and output budget (a draft past either is guaranteed waste);
+        the accept-rate gate then shrinks or zeroes the draft length
+        for prefixes whose measured accept rate can't pay for the wider
+        verify lane."""
         out: Dict[int, List[int]] = {}
         if limit <= 0:
             return out
@@ -935,10 +1009,14 @@ class ServingEngine:
                     req.max_new_tokens - len(req.out_tokens) - 1)
             if k <= 0:
                 continue
+            k_gated = self._gate_k(key, k)
+            if k_gated <= 0:
+                self.stats["spec_gate_skips"] += 1
+                continue
             suffix = tuple(req.prompt[len(key):]) + tuple(req.out_tokens)
-            mk = (key, suffix, k)
+            mk = (key, suffix, k_gated)
             if mk not in memo:
-                memo[mk] = self.spec_store.draft(key, suffix, k)
+                memo[mk] = self.spec_store.draft(key, suffix, k_gated)
             if memo[mk]:
                 out[slot] = memo[mk]
         return out
@@ -971,16 +1049,22 @@ class ServingEngine:
         any_prompt = any(self.pending_tokens[s] for s in self.active)
         T = self.scheduler.pick_chunk(self, self.chunk) if any_prompt else 1
         drafts: Dict[int, List[int]] = {}
-        if self.spec_store is not None and not any_prompt:
-            # drafts dispatch only on all-decode steps: the spec variant
-            # scores EVERY lane position, so a draft riding a
-            # chunk-width prefill step would charge a T-wide vocab
-            # projection to every slot — on a decode-only step the lane
-            # is draft_len + 1 wide and the verify cost really is k
-            # extra positions per slot (DESIGN.md §10)
-            drafts = self._build_drafts(self._spec_T - 1)
-            if drafts:
-                T = self._spec_T
+        if self.spec_store is not None:
+            if not any_prompt:
+                drafts = self._build_drafts(self._spec_T - 1)
+                if drafts:
+                    T = self._spec_T
+            elif T > 1:
+                # drafts ride mixed prompt/decode steps too: projection
+                # slimming made the spec variant's extra cost k + 1
+                # gathered vocab rows per slot instead of a T-wide
+                # projection, so a decode slot sharing a step with
+                # prefill chunks no longer starves of speculation
+                # (DESIGN.md §12; PR 5 restricted drafts to all-decode
+                # steps precisely because of that T-wide cost)
+                drafts = self._build_drafts(min(self._spec_T, T) - 1)
+                if drafts:
+                    self.stats["spec_mixed_steps"] += 1
         self._fire("feed", rids={req.rid: slot
                                  for slot, req in self.active.items()})
         prompt_toks = np.zeros((self.dp, self.bl, T), np.int32)
@@ -1075,6 +1159,12 @@ class ServingEngine:
                     self.stats["spec_accepted"] += acc
                     ah = self.stats["accept_hist"]
                     ah[acc] = ah.get(acc, 0) + 1
+                    if req._spec_key is not None:
+                        # feed the per-prefix accept-rate EWMA the gate
+                        # reads (n_emit may be budget/EOS-truncated
+                        # below the true accept count — a conservative
+                        # under-estimate on the request's last step)
+                        self.spec_store.observe(req._spec_key, k, acc)
                     # whole-page rollback accounting (host math on the
                     # _fed shadow — no extra sync): the lane fed 1 + k
                     # tokens but kept only ne
@@ -1118,6 +1208,18 @@ class ServingEngine:
                     self._pinned_slots.add(slot)
                     self._maybe_pin(slot, list(req.prompt))
         self._fire("post_step")
+        # measured per-step cost model for the break-even gate: EWMA of
+        # wall time keyed (lane width, spec).  The first dispatch at a
+        # key pays jit compilation, so it is discarded — the second
+        # sample seeds the EWMA.
+        dt = time.perf_counter() - t0
+        ck = (T, spec)
+        if ck in self._cost_seen:
+            prev = self._step_cost.get(ck)
+            self._step_cost[ck] = dt if prev is None else (
+                0.8 * prev + 0.2 * dt)
+        else:
+            self._cost_seen.add(ck)
         verdict = self.watchdog.observe(self.stats["steps"],
                                         time.perf_counter() - t0)
         if verdict == "straggler":

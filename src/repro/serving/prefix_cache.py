@@ -251,11 +251,15 @@ class SpeculationStore:
     (newest win), ``max_keys`` keys (LRU).
     """
 
-    def __init__(self, page_size: int, keep: int = 4, max_keys: int = 64):
+    def __init__(self, page_size: int, keep: int = 4, max_keys: int = 64,
+                 ngram: int = 3, ewma_alpha: float = 0.3):
         self.psz = int(page_size)
         self.keep = int(keep)
         self.max_keys = int(max_keys)
+        self.ngram = int(ngram)
+        self.ewma_alpha = float(ewma_alpha)
         self.streams: Dict[tuple, List[tuple]] = {}
+        self._accept: Dict[tuple, float] = {}   # per-key accept-rate EWMA
         self._lru: Dict[tuple, int] = {}
         self._clock = itertools.count()
 
@@ -275,14 +279,42 @@ class SpeculationStore:
         while len(self.streams) > self.max_keys:
             cold = min(self._lru, key=self._lru.get)
             del self.streams[cold], self._lru[cold]
+            self._accept.pop(cold, None)
+
+    # -- accept-rate EWMA (the engine's break-even gate reads this) -----
+    def observe(self, key: tuple, drafted: int, accepted: int) -> None:
+        """Fold one verified lane's accept fraction into the key's EWMA.
+
+        Called by the engine on the step's status read; the gate in
+        ``ServingEngine._gate_k`` compares this against the measured
+        cost ratio before drafting the key again (DESIGN.md §12)."""
+        if drafted <= 0:
+            return
+        r = min(max(accepted / drafted, 0.0), 1.0)
+        prev = self._accept.get(key)
+        self._accept[key] = r if prev is None else (
+            (1.0 - self.ewma_alpha) * prev + self.ewma_alpha * r)
+
+    def accept_rate(self, key: tuple) -> Optional[float]:
+        """EWMA accept rate for a key, or None before any observation
+        (the gate drafts unmeasured prefixes optimistically — the first
+        verified lane seeds the EWMA)."""
+        return self._accept.get(key)
 
     def draft(self, key: tuple, suffix: Sequence[int],
               k: int) -> List[int]:
         """Up to ``k`` draft tokens for a slot at context key+suffix.
 
-        Newest consistent stream wins (recent traffic predicts recent
-        traffic); an inconsistent or absent history drafts nothing —
-        the slot simply decodes a width-1 lane that step.
+        Exact-suffix replay first: the newest stream whose recorded
+        continuation starts with the slot's whole suffix wins (recent
+        traffic predicts recent traffic).  When no stream matches
+        exactly, an n-gram fallback matches the suffix's last g tokens
+        (g = ngram down to 1) ANYWHERE in a recorded stream and drafts
+        what followed there — drafting extends beyond exact replay
+        while the verify/rollback plane stays unchanged (a wrong draft
+        still costs only the rejected lane's rolled-back pages).  An
+        absent history drafts nothing — the slot simply decodes a
+        width-1 lane that step.
         """
         if k <= 0:
             return []
@@ -295,24 +327,40 @@ class SpeculationStore:
             if cont[:n] == suffix and len(cont) > n:
                 self._lru[key] = next(self._clock)
                 return list(cont[n:n + k])
+        # n-gram fallback: longest recent-gram match, newest stream
+        # first, rightmost occurrence within a stream (most context)
+        for g in range(min(self.ngram, n), 0, -1):
+            tail = suffix[-g:]
+            for cont in reversed(rows):
+                for i in range(len(cont) - g, -1, -1):
+                    if cont[i:i + g] == tail and i + g < len(cont):
+                        self._lru[key] = next(self._clock)
+                        return list(cont[i + g:i + g + k])
         return []
 
     # -- warm restart (serving/engine.py save_warm/restore_warm) --------
     def to_state(self) -> list:
         """JSON-able snapshot, LRU-coldest key first so ``load_state``'s
-        re-recording reproduces the eviction order."""
+        re-recording reproduces the eviction order.  Carries the
+        accept-rate EWMA so the break-even gate stays warm across
+        restarts."""
         keys = sorted(self.streams, key=lambda k: self._lru[k])
         return [[[int(t) for t in k],
-                 [[int(t) for t in c] for c in self.streams[k]]]
+                 [[int(t) for t in c] for c in self.streams[k]],
+                 self._accept.get(k)]
                 for k in keys]
 
     def load_state(self, rows: list) -> None:
         self.streams.clear()
         self._lru.clear()
-        for key, conts in rows:
+        self._accept.clear()
+        for row in rows:
+            key, conts = row[0], row[1]
+            kt = tuple(int(t) for t in key)
             for c in conts:
-                self.record(tuple(int(t) for t in key),
-                            tuple(int(t) for t in c))
+                self.record(kt, tuple(int(t) for t in c))
+            if len(row) > 2 and row[2] is not None:
+                self._accept[kt] = float(row[2])
 
 
 # --------------------------------------------------- pinned host ledger
