@@ -307,6 +307,7 @@ def _run_serving_mix(cfg, params, prompts, max_new, chunk):
         "wall_s": round(dt, 3),
         "alloc_O1_max": eng.stats["alloc_steps_max"],
         "leak_free": eng.page_occupancy() == 0.0,
+        "telemetry": eng.telemetry.snapshot(),
     }
 
 
@@ -564,6 +565,7 @@ def serving_speculative(cfg, params, smoke=False):
             "speedup_gen": round(tps / max(base_now, 1e-9), 2),
             "token_identical": outs == base_outs,
             "leak_free": eng.page_occupancy() == 0.0,
+            "telemetry": eng.telemetry.snapshot(),
         }
 
     # ---- shared baseline: one non-speculative engine, kept alive so
@@ -757,6 +759,7 @@ def _serving_mesh_shards_inline(cfg, params):
                                  / max(eng4.stats["admitted"], 1), 2),
         "token_identical_vs_single_device": out4 == out1,
         "leak_free": eng4.page_occupancy() == 0.0,
+        "telemetry": eng4.telemetry.snapshot(),
     }
     print(f"serving_mesh_shards,0,devices={row['mesh_devices']} "
           f"shard_map={row['shard_map']} "
@@ -809,6 +812,7 @@ def serving_pool_churn(cfg, params):
             "prefix_shared_tokens": eng.stats["prefix_shared_tokens"],
             "prefix_shared_reqs": eng.stats["prefix_shared_reqs"],
             "leak_free": eng.page_occupancy() == 0.0,
+            "telemetry": eng.telemetry.snapshot(),
         }
 
     out_u, unshared = run(False)
@@ -892,6 +896,7 @@ def serving_overload(cfg, params):
             "deferred": eng.scheduler.stats["deferred"],
             "pinned_pages_steady": pinned_steady,
             "leak_free": eng.page_occupancy() == 0.0,
+            "telemetry": eng.telemetry.snapshot(),
         }
 
     out_ref, _ = run(b_local=8, pin_pages=0, bursts=1)   # unconstrained
@@ -977,6 +982,7 @@ def serving_chaos(cfg, params):
         "never_dry": report["never_dry"],
         "token_identical": crash_identical,
         "leak_free": eng.leak_free(),
+        "telemetry": eng.telemetry.snapshot(),
     }
 
     # ---- warm vs cold restart: do pins/speculation survive?

@@ -36,6 +36,8 @@ from repro.configs import get_config, smoke_config
 from repro.serving import chaos
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.sched import SchedConfig
+from repro.serving.telemetry import FlightRecorder, install_signal_dump
+from repro.serving.trace import Tracer
 
 
 def main():
@@ -88,6 +90,20 @@ def main():
                          "(serving/chaos.py; DESIGN.md §11)")
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="per-request deadline in seconds (0 = none)")
+    ap.add_argument("--metrics-path", default="", metavar="FILE",
+                    help="write a Prometheus text-format telemetry "
+                         "snapshot at end of run (DESIGN.md §13)")
+    ap.add_argument("--trace-path", default="", metavar="FILE",
+                    help="write the request-lifecycle trace at end of "
+                         "run (chrome trace_event JSON; .jsonl suffix "
+                         "writes one event per line)")
+    ap.add_argument("--flight-recorder", default="", metavar="FILE",
+                    help="crash flight-recorder dump path (last-N-steps "
+                         "ring; dumps on crash / watchdog / reconcile / "
+                         "SIGTERM)")
+    ap.add_argument("--flight-sync", type=int, default=0, metavar="N",
+                    help="also dump the flight ring every N steps "
+                         "(covers SIGKILL; 0 = crash paths only)")
     args = ap.parse_args()
 
     cfg = smoke_config(get_config(args.arch))
@@ -97,15 +113,26 @@ def main():
     journal = chaos.ServingJournal() if faults else None
     injector = chaos.parse_faults(args.inject_fault) if faults else None
 
+    tracer = Tracer() if args.trace_path else None
+
     def build():
-        return ServingEngine(
+        # a fresh recorder per build: chaos.recover_engine adopts the
+        # crashed ring into it, so the forensic window spans the crash
+        flight = (FlightRecorder(path=args.flight_recorder,
+                                 sync_every=args.flight_sync)
+                  if args.flight_recorder or args.flight_sync else None)
+        eng = ServingEngine(
             cfg, params, dp=2, b_local=4, max_len=96,
             scheduler_lanes=4, chunk_size=args.chunk,
             speculate=args.speculate, draft_len=args.draft_len,
             spec_gate=not args.no_spec_gate,
             sched=SchedConfig(pin_pages=args.pin_pages,
                               chunk_buckets=buckets),
-            journal=journal, injector=injector, max_restarts=4)
+            journal=journal, injector=injector, max_restarts=4,
+            tracer=tracer, flight=flight)
+        if args.flight_recorder:
+            install_signal_dump(eng.flight)
+        return eng
 
     engine = build()
 
@@ -211,6 +238,20 @@ def main():
         assert engine.page_occupancy() == 0.0, \
             "pages leaked after drain+flush"
         assert all(r.done for r in reqs)
+    m = engine.telemetry.never_dry_margin_min()
+    print(f"never-dry margin (min over shards x steps): {m} "
+          f"(>= 0 proves §4.2 held with slack)")
+    if args.metrics_path:
+        with open(args.metrics_path, "w") as fh:
+            fh.write(engine.telemetry.render_prom())
+        print(f"telemetry: prometheus snapshot -> {args.metrics_path}")
+    if args.trace_path:
+        if args.trace_path.endswith(".jsonl"):
+            engine.tracer.write_jsonl(args.trace_path)
+        else:
+            engine.tracer.write_chrome(args.trace_path)
+        print(f"telemetry: {len(engine.tracer.events)} trace events -> "
+              f"{args.trace_path}")
 
 
 if __name__ == "__main__":

@@ -399,6 +399,14 @@ def rebalance_drain_dp(pool: HierPool) -> HierPool:
     return jax.vmap(rebalance_drain, in_axes=(DP_AXES,))(pool)
 
 
+def rebalance_refill_dp(pool: HierPool) -> HierPool:
+    """Refill phase only.  ``rebalance_refill_dp(rebalance_drain_dp(p))
+    == rebalance_dp(p)``; the serve step calls the phases separately so
+    the telemetry counter block can meter drain and refill traffic from
+    the ``sum(private_top)`` deltas between them (DESIGN.md §13)."""
+    return jax.vmap(rebalance_refill, in_axes=(DP_AXES,))(pool)
+
+
 # ----------------------------------------------------------- crash recovery
 #
 # After a host crash the free stacks and the host's shadow of lane

@@ -36,6 +36,8 @@ from ..configs import get_config, smoke_config
 from ..serving import chaos
 from ..serving.engine import Request, ServingEngine
 from ..serving.sched import SchedConfig
+from ..serving.telemetry import FlightRecorder, install_signal_dump
+from ..serving.trace import Tracer
 
 
 def main(argv=None):
@@ -80,6 +82,20 @@ def main(argv=None):
                          "kind@step:phase[:extra] (serving/chaos.py)")
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="per-request deadline in seconds (0 = none)")
+    ap.add_argument("--metrics-path", default="", metavar="FILE",
+                    help="write a Prometheus text-format telemetry "
+                         "snapshot here at end of run (DESIGN.md §13)")
+    ap.add_argument("--trace-path", default="", metavar="FILE",
+                    help="write the request-lifecycle trace here at end "
+                         "of run (chrome trace_event JSON; a .jsonl "
+                         "suffix writes one event per line instead)")
+    ap.add_argument("--flight-recorder", default="", metavar="FILE",
+                    help="crash flight-recorder dump path: the last-N-"
+                         "steps ring dumps here on crash, watchdog "
+                         "timeout, reconcile, or SIGTERM")
+    ap.add_argument("--flight-sync", type=int, default=0, metavar="N",
+                    help="also dump the flight ring every N steps "
+                         "(covers SIGKILL; 0 = only on crash paths)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -91,8 +107,15 @@ def main(argv=None):
     journal = chaos.ServingJournal() if faults else None
     injector = chaos.parse_faults(args.inject_fault) if faults else None
 
+    tracer = Tracer() if args.trace_path else None
+
     def build():
-        return ServingEngine(
+        # a fresh recorder per build: chaos.recover_engine adopts the
+        # crashed ring into it, so the forensic window spans the crash
+        flight = (FlightRecorder(path=args.flight_recorder,
+                                 sync_every=args.flight_sync)
+                  if args.flight_recorder or args.flight_sync else None)
+        eng = ServingEngine(
             cfg, params, dp=args.dp, b_local=args.b_local,
             max_len=args.max_len,
             speculate=args.speculate, draft_len=args.draft_len,
@@ -101,7 +124,11 @@ def main(argv=None):
             sched=SchedConfig(pin_pages=args.pin_pages,
                               page_budget=args.page_budget,
                               chunk_buckets=buckets),
-            journal=journal, injector=injector, max_restarts=4)
+            journal=journal, injector=injector, max_restarts=4,
+            tracer=tracer, flight=flight)
+        if args.flight_recorder:
+            install_signal_dump(eng.flight)
+        return eng
 
     engine = build()
     if engine.mesh is not None:
@@ -183,6 +210,20 @@ def main(argv=None):
     else:
         print(f"page occupancy after drain+flush: "
               f"{engine.page_occupancy():.4f}")
+    m = engine.telemetry.never_dry_margin_min()
+    print(f"never-dry margin (min over shards x steps): {m} "
+          f"(>= 0 proves §4.2 held with slack)")
+    if args.metrics_path:
+        with open(args.metrics_path, "w") as fh:
+            fh.write(engine.telemetry.render_prom())
+        print(f"telemetry: prometheus snapshot -> {args.metrics_path}")
+    if args.trace_path:
+        if args.trace_path.endswith(".jsonl"):
+            engine.tracer.write_jsonl(args.trace_path)
+        else:
+            engine.tracer.write_chrome(args.trace_path)
+        print(f"telemetry: {len(engine.tracer.events)} trace events -> "
+              f"{args.trace_path}")
     return engine
 
 

@@ -134,7 +134,11 @@ def decode_state_shardings(cfg: ModelConfig, state_defs: tfm.DecodeState,
 # the engine's jitted steps are shard_mapped over these specs
 # (DESIGN.md §9).  Leaf layouts: kv_pages/rings/rec/enc_kv carry DP at
 # axis 1 ([stack, DP, ...]); page_tables/seq_lens/pool leaves and the
-# per-slot serving registers carry it at axis 0.
+# per-slot serving registers carry it at axis 0.  The §13 telemetry
+# counter block widens the packed status array ([T+3+N_CTR, DP, Bl],
+# DP at axis 1) — the extra rows ride the *existing* status out-spec
+# and all_gather, so enabling telemetry changes no sharding and adds
+# no collective.
 
 def serve_register_pspec() -> P:
     """[DP, Bl(, ...)] per-slot register / mask / pin-table spec."""

@@ -300,6 +300,14 @@ def recover_engine(factory, crashed, journal: ServingJournal):
     assert eng.dp == crashed.dp and eng.bl == crashed.bl, \
         "recovery requires an identical topology"
 
+    # observability survives the crash (DESIGN.md §13): the dead
+    # engine's flight ring and trace buffer carry into the recovered
+    # engine, so the pre-crash window stays in the next dump and spans
+    # opened before the crash close correctly after it
+    eng.flight.adopt(crashed.flight)
+    eng.telemetry.tracer = eng.tracer = crashed.telemetry.tracer
+    eng.tracer.begin("recover", kind="host_crash")
+
     # journal-trusted pin rows: mask the device pin tables down to rows
     # the journal confirms; everything else is reclaimed by reconcile
     pins_live = journal.live_pins() if eng.pins is not None else []
@@ -355,4 +363,22 @@ def recover_engine(factory, crashed, journal: ServingJournal):
     report["finished_at_crash"] = finished_now
     report["pins_restored"] = len(pins_live)
     report["requests"] = requeued
+    # structured reconcile report through the tracer — pages rebuilt,
+    # refcount deltas, journal replay length — then one flight dump
+    # that records the recovery outcome next to the pre-crash window
+    eng.tracer.instant(
+        "reconcile", kind="host_crash",
+        reclaimed=int(report.get("reclaimed", 0)),
+        resurrected=int(report.get("resurrected", 0)),
+        never_dry=bool(report.get("never_dry", True)),
+        conserved=bool(report.get("conserved", True)),
+        requeued=len(requeued), finished_at_crash=finished_now,
+        pins_restored=len(pins_live),
+        journal_events=len(journal.events))
+    eng.tracer.end("recover")
+    if eng.flight.dump("recover_engine", {
+            "report": {k: v for k, v in report.items()
+                       if k != "requests"},
+            "journal_events": len(journal.events)}):
+        eng.telemetry.inc("flight_dumps")
     return eng, report

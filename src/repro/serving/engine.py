@@ -102,6 +102,10 @@ from .prefix_cache import (PinnedPrefixes, PrefixCache, SpeculationStore,
                            share_prefix_step, unpin_step)
 from .sampling import sample_lane, sample_tokens
 from .sched import Admission, AdmissionScheduler, SchedConfig
+from .telemetry import (CTR_ALLOC, CTR_DRAIN, CTR_FREED, CTR_MARGIN,
+                        CTR_REFILL, CTR_ROLLBACK, CTR_SHARED_FREE,
+                        N_CTR, FlightRecorder, Telemetry)
+from .trace import Tracer
 
 
 @dataclasses.dataclass
@@ -163,14 +167,19 @@ def _release_slots(state: DecodeState, mask):
 
 
 # Packed per-step status (the step's single device->host transfer),
-# int32[T + 3, DP, Bl] for a width-T step: rows [0, T) carry each
-# slot's emitted tokens this step in order (-1 padding — one row per
-# lane position, so a fully-accepted draft lane reports k + 1 tokens in
-# the same single sync), then three bookkeeping rows addressed relative
-# to T:
+# int32[T + 3 + N_CTR, DP, Bl] for a width-T step: rows [0, T) carry
+# each slot's emitted tokens this step in order (-1 padding — one row
+# per lane position, so a fully-accepted draft lane reports k + 1
+# tokens in the same single sync), then three bookkeeping rows
+# addressed relative to T:
 STATUS_EMITTED = 0   # + T: emitted-token count this step
 STATUS_DONE = 1      # + T: 1 iff the slot finished (pages released)
 STATUS_PAGES = 2     # + T: pages-in-use on the slot's DP shard
+# followed by the N_CTR telemetry counter rows (telemetry.CTR_* order,
+# per-shard values broadcast over Bl like the PAGES row): allocator
+# events metered INSIDE the jit from pool free-level deltas the step
+# already computes, harvested through the same single sync and the same
+# single all_gather — the DESIGN.md §13 zero-extra-sync argument.
 
 
 def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
@@ -237,10 +246,17 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
     toks = jnp.where(is_prompt[..., None], prompt_toks, gen_lane)
     active = feed_lens > 0
     base = state.seq_lens
+    # telemetry counter block (DESIGN.md §13): allocator events are
+    # metered from per-shard pool free-level deltas between the step's
+    # existing phases — pure arithmetic on values the step already
+    # holds, no extra device work beyond a few scalar subtractions
+    free_in = hier_pool.free_per_shard(state.pool)           # int32[DP]
 
     hidden, state = forward_decode_chunk(cfg, params, toks, state,
                                          feed_lens, active=active,
                                          verify=spec)
+    free_fwd = hier_pool.free_per_shard(state.pool)
+    ctr_alloc = free_in - free_fwd       # forward only allocates
     idx = jnp.maximum(feed_lens - 1, 0)
     emit = emit & active
     if spec:
@@ -319,6 +335,9 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
             pool=pool,
             page_tables=jnp.where(roll, NULL, state.page_tables),
             seq_lens=base + n_keep)
+        # rollback pages are refcount-1 by construction (granted this
+        # very step), so the free-level delta counts them exactly
+        ctr_roll = hier_pool.free_per_shard(state.pool) - free_fwd
         out_count = out_count + n_emit
         seq_full = state.seq_lens >= max_len - 1
         done = active & ((out_count >= budget) | seq_full | hit_eos)
@@ -331,6 +350,7 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
                 [tok_rows, jnp.full((DP, Bl, T - Tv), -1, jnp.int32)],
                 axis=-1)
     else:
+        ctr_roll = jnp.zeros_like(free_in)    # no drafts, no rollback
         h_last = jnp.take_along_axis(hidden, idx[..., None, None],
                                      axis=2)[:, :, 0]     # [DP, Bl, d]
         logits = logits_apply(cfg, params["embed"], h_last)
@@ -348,18 +368,44 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
             [jnp.where(emit, nxt, -1)[..., None],
              jnp.full((DP, Bl, T - 1), -1, jnp.int32)], axis=-1)
     state = _release_slots(state, done)
+    # everything freed since the forward pass actually returned free —
+    # spec rollback plus finished-slot release (shared/pinned pages a
+    # sibling still maps only decrement, and correctly don't count)
+    ctr_freed = hier_pool.free_per_shard(state.pool) - free_fwd
     # deamortized shared<->lane traffic: once per step, off the
-    # per-token path (the paper's run_delayed_step)
-    state = state._replace(pool=hier_pool.rebalance_dp(state.pool))
+    # per-token path (the paper's run_delayed_step).  Phases run
+    # separately (== rebalance_dp by definition) so the counter block
+    # meters drain and refill traffic from the lane-stock deltas.
+    lane0 = jnp.sum(state.pool.private_top, axis=-1)
+    pool = hier_pool.rebalance_drain_dp(state.pool)
+    lane_drained = jnp.sum(pool.private_top, axis=-1)
+    pool = hier_pool.rebalance_refill_dp(pool)
+    state = state._replace(pool=pool)
+    ctr_drain = lane0 - lane_drained
+    ctr_refill = jnp.sum(pool.private_top, axis=-1) - lane_drained
 
     pages_local = state.pool.shared.free_ids.shape[1]
     free_now = state.pool.shared.top + jnp.sum(state.pool.private_top, axis=1)
     pages_used = (pages_local - free_now).astype(jnp.int32)      # [DP]
+    # post-rebalance invariant gauges: the shared stack's free level
+    # (host min-accumulates the low-water mark) and the §4.2 never-dry
+    # margin min(private_top) - ell (>= 0 iff the invariant held)
+    ell = hier_pool.lane_ell(state.pool)
+    margin = jnp.min(state.pool.private_top, axis=-1) - ell
+    ctr = jnp.empty((N_CTR, DP), jnp.int32)
+    ctr = ctr.at[CTR_ALLOC].set(ctr_alloc)
+    ctr = ctr.at[CTR_FREED].set(ctr_freed)
+    ctr = ctr.at[CTR_ROLLBACK].set(ctr_roll)
+    ctr = ctr.at[CTR_DRAIN].set(ctr_drain)
+    ctr = ctr.at[CTR_REFILL].set(ctr_refill)
+    ctr = ctr.at[CTR_SHARED_FREE].set(state.pool.shared.top)
+    ctr = ctr.at[CTR_MARGIN].set(margin)
     status = jnp.concatenate(
         [tok_rows.transpose(2, 0, 1),
          n_emit[None],
          done.astype(jnp.int32)[None],
-         jnp.broadcast_to(pages_used[:, None], (DP, Bl))[None]])
+         jnp.broadcast_to(pages_used[:, None], (DP, Bl))[None],
+         jnp.broadcast_to(ctr[:, :, None], (N_CTR, DP, Bl))])
     if axis_name is not None:
         # the step's single collective: only the packed status row
         # crosses shards (DESIGN.md §9 one-sync argument)
@@ -379,10 +425,24 @@ class ServingEngine:
                  mesh="auto",
                  journal=None, injector=None,
                  watchdog: Optional[StepWatchdog] = None,
-                 clock=None, max_restarts: int = 0):
+                 clock=None, max_restarts: int = 0,
+                 telemetry: Optional[Telemetry] = None,
+                 tracer: Optional[Tracer] = None,
+                 flight: Optional[FlightRecorder] = None):
         self.cfg = cfg
         self.params = params
         self.dp, self.bl = dp, b_local
+        # observability plane (DESIGN.md §13): ONE facade every
+        # subsystem emits through.  engine.stats stays a live property
+        # view of telemetry.counters, so pre-§13 callers (and the
+        # benches) read the same ledger the typed counters write.
+        if telemetry is None:
+            telemetry = Telemetry(dp, tracer=tracer, flight=flight)
+        self.telemetry = telemetry
+        self.tracer = telemetry.tracer
+        if telemetry.flight is None:
+            telemetry.flight = FlightRecorder()
+        self.flight = telemetry.flight
         self.max_len = max_len
         self.chunk = max(int(chunk_size), 1)
         self.draft_len = max(int(draft_len), 0)
@@ -573,26 +633,42 @@ class ServingEngine:
         self.pending_tokens: Dict[int, List[int]] = {}
         self._latencies: List[float] = []
         self._ft_latencies: List[float] = []
-        self.stats = {"steps": 0, "tokens_out": 0, "admitted": 0,
-                      "prompt_tokens": 0, "alloc_steps_max": 0,
-                      "prefix_shared_tokens": 0, "prefix_shared_reqs": 0,
-                      "pages_peak": 0, "pages_sum": 0,
-                      "idle_steps": 0, "preemptions": 0,
-                      "pins_created": 0, "pin_hit_reqs": 0,
-                      "pin_hit_tokens": 0,
-                      # token-lane telemetry (DESIGN.md §10): dispatched
-                      # lane-width histogram and, under speculation,
-                      # drafted/accepted tokens, an acceptance histogram
-                      # (accepted-per-lane -> lanes), and the whole-page
-                      # over-allocation rolled back by rejected drafts
-                      "chunk_hist": {}, "spec_drafted": 0,
-                      "spec_accepted": 0, "spec_lanes": 0,
-                      "accept_hist": {}, "spec_pages_rolled_back": 0,
-                      "spec_gate_skips": 0, "spec_mixed_steps": 0,
-                      # fault-tolerance telemetry (DESIGN.md §11)
-                      "stragglers": 0, "step_timeouts": 0,
-                      "recoveries": 0, "deadline_expired": 0,
-                      "failed": 0, "retries": 0, "shards_lost": 0}
+        # wire the facade through the subsystems that emit (DESIGN §13)
+        self.scheduler.telemetry = self.telemetry
+        if self.prefix_cache is not None:
+            self.prefix_cache.telemetry = self.telemetry
+        self.flight.meta.update(
+            dp=dp, b_local=b_local, page_size=int(cfg.page_size),
+            pages_local=int(self.pages_local),
+            lane_ell=int(self.state.pool.private_ids.shape[-1]) // 3,
+            speculate=self.speculate, arch=getattr(cfg, "name", "?"))
+
+    @property
+    def stats(self):
+        """Backward-compatible live view of the typed telemetry
+        counters (one ledger — external ``engine.stats[...]`` reads and
+        writes land on the same dict :class:`Telemetry` maintains)."""
+        return self.telemetry.counters
+
+    # ---------------------------------------------------------- tracing
+    def _tr_begin(self, name: str, tid: int, **args) -> None:
+        """Idempotent span open: a resubmitted request (crash requeue,
+        warm restart) must not double-open its span."""
+        if not self.tracer.is_open(name, tid):
+            self.tracer.begin(name, tid, **args)
+
+    def _tr_end(self, name: str, tid: int, **args) -> None:
+        if self.tracer.is_open(name, tid):
+            self.tracer.end(name, tid, **args)
+
+    def _trace_terminal(self, req, reason: str) -> None:
+        """Close a request's spans on any terminal rejection path —
+        also called by the scheduler's deadline/shed paths."""
+        name = ("deadline_expired" if reason == "deadline"
+                else "shed" if reason == "shed" else "reject")
+        self.tracer.instant(name, tid=req.rid, reason=reason)
+        self._tr_end("active", req.rid)
+        self._tr_end("request", req.rid)
 
     # ------------------------------------------------------------ control
     @property
@@ -626,8 +702,7 @@ class ServingEngine:
         except StopIteration as e:
             block = e.value
         op = self.lane_ctx.history[-1]
-        self.stats["alloc_steps_max"] = max(
-            self.stats["alloc_steps_max"], op.steps)
+        self.telemetry.set_max("alloc_steps_max", op.steps)
         slot = self._free_slots.popleft()
         self._slot_of_block[block] = slot
         self._block_of_slot[slot] = block
@@ -673,9 +748,13 @@ class ServingEngine:
                    out_tokens=[int(t) for t in req.out_tokens],
                    preemptions=int(req.preemptions),
                    deadline_at=float(req.deadline_at))
+        self._tr_begin("request", req.rid, slo=req.slo,
+                       prompt_len=len(req.prompt))
+        self.tracer.instant("submit", tid=req.rid, slo=req.slo)
         adm = self.scheduler.submit(req, self.est_pages(req))
         if not adm.accepted:
             self._jrec("reject", rid=req.rid, reason=adm.reason)
+            self._trace_terminal(req, adm.reason)
         return adm
 
     def est_pages(self, req: Request) -> int:
@@ -745,7 +824,13 @@ class ServingEngine:
         self.seeds = self.seeds.at[d, b].set(int(req.seed))
         if req.temperature > 0:
             self._sampling_slots.add(slot)
-        self.stats["admitted"] += 1
+        self.telemetry.inc("admitted")
+        self._tr_begin("active", req.rid, slot=slot, shard=d)
+        self.tracer.instant("admit", tid=req.rid, slot=slot, shard=d,
+                            shared_tokens=shared_n)
+        if req.out_tokens or req.preemptions:
+            self.tracer.instant("resume", tid=req.rid,
+                                tokens_done=len(req.out_tokens))
         self._jrec("admit", rid=req.rid, slot=slot, shard=d)
         return slot
 
@@ -772,7 +857,9 @@ class ServingEngine:
         self.scheduler.on_released(slot)
         req.slot = None
         req.preemptions += 1
-        self.stats["preemptions"] += 1
+        self.telemetry.inc("preemptions")
+        self.tracer.instant("preempt", tid=req.rid, slot=slot)
+        self._tr_end("active", req.rid)
         self._jrec("preempt", rid=req.rid)
         return req
 
@@ -797,18 +884,22 @@ class ServingEngine:
         self._host_free_slot(slot)
         self.scheduler.on_released(slot)
         req.slot = None
+        self._tr_end("active", req.rid)
         if retry and req.retries < self.sched_config.retry_limit:
             req.retries += 1
-            self.stats["retries"] += 1
+            self.telemetry.inc("retries")
+            self.tracer.instant("retry", tid=req.rid, reason=reason,
+                                attempt=req.retries)
             self._jrec("preempt", rid=req.rid)
             self.scheduler.park(
                 req, self.sched_config.retry_backoff * req.retries)
         else:
             req.rejected = reason
-            self.stats["failed"] += 1
+            self.telemetry.inc("failed")
             if reason == "deadline":
-                self.stats["deadline_expired"] += 1
+                self.telemetry.inc("deadline_expired")
             self._jrec("reject", rid=req.rid, reason=reason)
+            self._trace_terminal(req, reason)
         return req
 
     def lose_shard(self, shard: int) -> None:
@@ -823,7 +914,8 @@ class ServingEngine:
         if shard in self.lost_shards:
             return
         self.lost_shards.add(shard)
-        self.stats["shards_lost"] += 1
+        self.telemetry.inc("shards_lost")
+        self.tracer.instant("shard_loss", shard=shard)
         self._jrec("shard_lost", shard=shard)
         self.scheduler.lose_shard(shard)
         for slot in [s for s in self.active if s // self.bl == shard]:
@@ -840,7 +932,10 @@ class ServingEngine:
             self.scheduler.on_released(slot)
             req.slot = None
             req.preemptions += 1
-            self.stats["preemptions"] += 1
+            self.telemetry.inc("preemptions")
+            self.tracer.instant("preempt", tid=req.rid, slot=slot,
+                                reason="shard_loss")
+            self._tr_end("active", req.rid)
             self._jrec("preempt", rid=req.rid)
             self.scheduler.requeue_front(req)
         # retire the dead shard's slots from service entirely
@@ -887,7 +982,9 @@ class ServingEngine:
             jnp.asarray(pin_oh), jnp.asarray(src), jnp.int32(n_pages))
         self.state = self.state._replace(pool=pool)
         self.prefix_cache.pin_insert(pin_id, d, key_toks)
-        self.stats["pins_created"] += 1
+        self.telemetry.inc("pins_created")
+        self.tracer.instant("pin", pin_id=pin_id, shard=d,
+                            pages=int(n_pages))
         # write-behind: journaled only after the device op — a crash in
         # between leaves device refs the journal never saw, which
         # recovery reclaims (leak-fix, not leak)
@@ -904,6 +1001,7 @@ class ServingEngine:
             self.state.pool, self.pin_tables, jnp.asarray(oh))
         self.state = self.state._replace(pool=pool)
         self.prefix_cache.pin_remove(pin_id)
+        self.tracer.instant("unpin", pin_id=pin_id, shard=shard)
         self._jrec("unpin", pin_id=pin_id)
 
     def flush_pins(self) -> int:
@@ -940,8 +1038,10 @@ class ServingEngine:
             if not bool(ok):   # shared pool dry for the COW page
                 return 0
             self.pins.touch(pin_id)
-            self.stats["pin_hit_reqs"] += 1
-            self.stats["pin_hit_tokens"] += n
+            self.telemetry.inc("pin_hit_reqs")
+            self.telemetry.inc("pin_hit_tokens", n)
+            self.tracer.instant("pin_hit", tid=self.active[slot].rid,
+                                tokens=n)
         else:
             src = np.zeros((self.dp, self.bl), bool)
             src[match.slot // self.bl, match.slot % self.bl] = True
@@ -949,8 +1049,19 @@ class ServingEngine:
                                          jnp.asarray(src), jnp.int32(n))
             if not bool(ok):   # lane dry for the COW page — admit unshared
                 return 0
-        self.stats["prefix_shared_tokens"] += n
-        self.stats["prefix_shared_reqs"] += 1
+        self.telemetry.inc("prefix_shared_tokens", n)
+        self.telemetry.inc("prefix_shared_reqs")
+        rid = self.active[slot].rid
+        self.tracer.instant("share", tid=rid, tokens=n,
+                            shard=match.shard, pinned=bool(match.pinned))
+        if n % self.cfg.page_size != 0:
+            # the share step gave the slot a private copy of the donor's
+            # partial tail page — the COW copy counter lives here, at
+            # the share-step boundary, because COW never happens inside
+            # _serve_step (DESIGN.md §13: counted host-side, zero extra
+            # transfer — ``ok`` already crossed in the share's own sync)
+            self.telemetry.inc("cow_copies")
+            self.tracer.instant("cow_copy", tid=rid)
         return n
 
     # -------------------------------------------------------------- step
@@ -1011,7 +1122,7 @@ class ServingEngine:
                 continue
             k_gated = self._gate_k(key, k)
             if k_gated <= 0:
-                self.stats["spec_gate_skips"] += 1
+                self.telemetry.inc("spec_gate_skips")
                 continue
             suffix = tuple(req.prompt[len(key):]) + tuple(req.out_tokens)
             mk = (key, suffix, k_gated)
@@ -1037,7 +1148,7 @@ class ServingEngine:
         self.scheduler.tick(self)
         self._fire("post_admission")
         if not self.active:
-            self.stats["idle_steps"] += 1
+            self.telemetry.inc("idle_steps")
             return False
 
         # schedule this step's lane widths (host-side bookkeeping only —
@@ -1064,7 +1175,7 @@ class ServingEngine:
                 # steps precisely because of that T-wide cost)
                 drafts = self._build_drafts(min(self._spec_T, T) - 1)
                 if drafts:
-                    self.stats["spec_mixed_steps"] += 1
+                    self.telemetry.inc("spec_mixed_steps")
         self._fire("feed", rids={req.rid: slot
                                  for slot, req in self.active.items()})
         prompt_toks = np.zeros((self.dp, self.bl, T), np.int32)
@@ -1084,7 +1195,9 @@ class ServingEngine:
                 feed_lens[d, b] = n
                 is_prompt[d, b] = True
                 emit[d, b] = not pend
-                self.stats["prompt_tokens"] += n
+                self.telemetry.inc("prompt_tokens", n)
+                self.tracer.instant("prefill_chunk", tid=req.rid,
+                                    tokens=n, fed=self._fed[slot] + n)
                 if (emit[d, b] and self.pins is not None
                         and slot not in self._pinned_slots
                         and self._fed[slot]
@@ -1119,20 +1232,23 @@ class ServingEngine:
             self.budget, self.temps, self.topks, self.seeds,
             jnp.asarray(prompt_toks), jnp.asarray(feed_lens),
             jnp.asarray(is_prompt), jnp.asarray(emit))
-        self.stats["steps"] += 1
-        hist = self.stats["chunk_hist"]
-        hist[T] = hist.get(T, 0) + 1
+        self.telemetry.inc("steps")
+        self.telemetry.observe_hist("chunk_hist", T)
         self._fire("dispatched")
         status = np.asarray(status)      # the step's ONE device->host sync
         self._fire("post_sync")
         n_emit = status[T + STATUS_EMITTED]
         done_row = status[T + STATUS_DONE]
         pages_row = status[T + STATUS_PAGES]
+        # device counter block: the N_CTR trailing rows (per-shard
+        # values broadcast over Bl — column 0 is the value)
+        ctr_block = status[T + 3:, :, 0]
+        self.telemetry.absorb_counter_block(ctr_block)
 
         self.pages_used_shard = [int(x) for x in pages_row[:, 0]]
         pages_now = int(pages_row[:, 0].sum())
-        self.stats["pages_peak"] = max(self.stats["pages_peak"], pages_now)
-        self.stats["pages_sum"] += pages_now
+        self.telemetry.set_max("pages_peak", pages_now)
+        self.telemetry.inc("pages_sum", pages_now)
         row = pages_row[:, 0].astype(np.int64)
         self._pages_shard_sum += row
         np.maximum(self._pages_shard_peak, row, out=self._pages_shard_peak)
@@ -1146,19 +1262,21 @@ class ServingEngine:
                 toks = [int(status[j, d, b]) for j in range(ne)]
                 req.out_tokens.extend(toks)
                 self._jrec("tokens", rid=req.rid, toks=toks)
-                self.stats["tokens_out"] += ne
+                self.telemetry.inc("tokens_out", ne)
                 if req.first_token_at == 0.0:
                     req.first_token_at = now
                     self._ft_latencies.append(now - req.submitted_at)
+                    self.tracer.instant("first_token", tid=req.rid)
             if slot in gen_slots:
                 k = gen_slots[slot]
                 if k:
                     acc = max(ne - 1, 0)
-                    self.stats["spec_lanes"] += 1
-                    self.stats["spec_drafted"] += k
-                    self.stats["spec_accepted"] += acc
-                    ah = self.stats["accept_hist"]
-                    ah[acc] = ah.get(acc, 0) + 1
+                    self.telemetry.inc("spec_lanes")
+                    self.telemetry.inc("spec_drafted", k)
+                    self.telemetry.inc("spec_accepted", acc)
+                    self.telemetry.observe_hist("accept_hist", acc)
+                    self.tracer.instant("spec_accept", tid=req.rid,
+                                        drafted=k, accepted=acc)
                     if req._spec_key is not None:
                         # feed the per-prefix accept-rate EWMA the gate
                         # reads (n_emit may be budget/EOS-truncated
@@ -1171,7 +1289,10 @@ class ServingEngine:
                     fed0 = self._fed[slot]
                     over = (-(-(fed0 + 1 + k) // psz)
                             - (-(-(fed0 + ne) // psz)))
-                    self.stats["spec_pages_rolled_back"] += over
+                    self.telemetry.inc("spec_pages_rolled_back", over)
+                    if over:
+                        self.tracer.instant("spec_rollback",
+                                            tid=req.rid, pages=over)
                 self._fed[slot] += ne
             if done_row[d, b]:
                 # pages were already released inside the jitted step
@@ -1193,6 +1314,10 @@ class ServingEngine:
                         + tuple(req.out_tokens))
                 self._host_free_slot(slot)
                 self.scheduler.on_released(slot)
+                self.tracer.instant("finish", tid=req.rid,
+                                    tokens=len(req.out_tokens))
+                self._tr_end("active", req.rid)
+                self._tr_end("request", req.rid)
                 self._jrec("finish", rid=req.rid)
             else:
                 if self.prefix_cache is not None:
@@ -1223,9 +1348,27 @@ class ServingEngine:
         verdict = self.watchdog.observe(self.stats["steps"],
                                         time.perf_counter() - t0)
         if verdict == "straggler":
-            self.stats["stragglers"] += 1
+            self.telemetry.inc("stragglers")
         elif verdict == "timeout":
-            self.stats["step_timeouts"] += 1
+            self.telemetry.inc("step_timeouts")
+        if verdict is not None:
+            self.tracer.instant("watchdog", verdict=verdict,
+                                step=self.stats["steps"])
+        # flight recorder (DESIGN.md §13): ring-buffer this step's full
+        # forensic record — the packed status (tokens + bookkeeping +
+        # counter block), the gate decisions that shaped the dispatch,
+        # and the watchdog verdict
+        self.flight.record(
+            step=self.stats["steps"], t=now, T=T, spec=spec,
+            status=status.tolist(),
+            ctr=ctr_block.tolist(),
+            drafts={int(s): len(d) for s, d in drafts.items()},
+            rids={int(s): int(r.rid) for s, r in self.active.items()},
+            watchdog=verdict, dt_ms=round(dt * 1e3, 3))
+        if verdict == "timeout" and self.flight.dump(
+                "watchdog_timeout", {"step": self.stats["steps"]}):
+            self.telemetry.inc("flight_dumps")
+            self.tracer.instant("flight_dump", reason="watchdog_timeout")
         return True
 
     def idle(self) -> bool:
@@ -1260,9 +1403,22 @@ class ServingEngine:
                 if e.slot in self.active:
                     self.fail_active(e.slot, "poisoned", retry=True)
             except HostCrash:
+                # host state dies here by definition: the flight ring is
+                # the crash's forensic record — dump it on the way out
+                # (recover_engine re-dumps with the reconcile report)
+                self.tracer.instant("crash", step=self.stats["steps"])
+                if self.flight.dump("host_crash",
+                                    {"step": self.stats["steps"]}):
+                    self.telemetry.inc("flight_dumps")
                 raise
-            except Exception:
+            except Exception as e:
                 restarts += 1
+                if self.flight.dump("step_error",
+                                    {"step": self.stats["steps"],
+                                     "error": repr(e)}):
+                    self.telemetry.inc("flight_dumps")
+                    self.tracer.instant("flight_dump",
+                                        reason="step_error")
                 self._recover_inplace()
                 if restarts > budget:
                     raise
@@ -1314,6 +1470,16 @@ class ServingEngine:
         self._fed.clear()
         self._pinned_slots.clear()
         self._sampling_slots.clear()
+        # structured reconcile report through the tracer (DESIGN §13) —
+        # recovery is never silent reconstruction
+        self.tracer.instant(
+            "reconcile",
+            reclaimed=int(report.get("reclaimed", 0)),
+            resurrected=int(report.get("resurrected", 0)),
+            never_dry=bool(report.get("never_dry", True)),
+            conserved=bool(report.get("conserved", True)))
+        if self.flight.dump("audit_and_reconcile", {"report": report}):
+            self.telemetry.inc("flight_dumps")
         return report
 
     def _recover_inplace(self) -> dict:
@@ -1325,7 +1491,8 @@ class ServingEngine:
         survived, so the pin LEDGER is current; a device pin op whose
         ledger insert never ran is reclaimed, exactly as in the
         post-crash path."""
-        self.stats["recoveries"] += 1
+        self.telemetry.inc("recoveries")
+        self.tracer.begin("recover", kind="inplace")
         for slot in list(self.active):
             req = self.active.pop(slot)
             self.pending_tokens.pop(slot, None)
@@ -1338,7 +1505,10 @@ class ServingEngine:
             self.scheduler.on_released(slot)
             req.slot = None
             req.preemptions += 1
-            self.stats["preemptions"] += 1
+            self.telemetry.inc("preemptions")
+            self.tracer.instant("preempt", tid=req.rid, slot=slot,
+                                reason="recovery")
+            self._tr_end("active", req.rid)
             self._jrec("preempt", rid=req.rid)
             self.scheduler.requeue_front(req)
         pin_np = None
@@ -1348,7 +1518,9 @@ class ServingEngine:
             for e in self.pins.entries.values():
                 ok[e["shard"], e["row"]] = True
             pin_np[~ok] = NULL
-        return self.adopt_crashed_state(self.state, pin_np)
+        report = self.adopt_crashed_state(self.state, pin_np)
+        self.tracer.end("recover")
+        return report
 
     def leak_free(self) -> bool:
         """Zero live pages on every surviving shard (a dead shard's

@@ -117,6 +117,9 @@ class PrefixCache:
         self.tokens: Dict[int, List[int]] = {}
         self.shard_of: Dict[int, int] = {}
         self.completed: Dict[int, int] = {}
+        #: set by the engine: the §13 Telemetry facade (trie hit/miss
+        #: counters); None keeps the cache usable standalone
+        self.telemetry = None
 
     # -- bookkeeping ----------------------------------------------------
     def _pages(self, tokens: Sequence[int]):
@@ -224,7 +227,11 @@ class PrefixCache:
                     # pages either way; live donors keep LRU honest)
                     best = Match(slot=s, shard=shard, n_tokens=n)
         if best is None or best.n_tokens < self.psz:
+            if self.telemetry is not None:
+                self.telemetry.inc("trie_misses")
             return None
+        if self.telemetry is not None:
+            self.telemetry.inc("trie_hits")
         return best
 
 

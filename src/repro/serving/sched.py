@@ -162,6 +162,14 @@ class AdmissionScheduler:
         self.stats = {"deferred": 0, "rejected": 0, "pins_evicted": 0,
                       "defer_slots": 0, "defer_pages": 0, "shed": 0,
                       "retried": 0}
+        #: set by the engine: the §13 Telemetry facade; every counter
+        #: below mirrors into its typed ``sched_*`` namespace
+        self.telemetry = None
+
+    def _count(self, name: str, n: int = 1) -> None:
+        self.stats[name] = self.stats.get(name, 0) + n
+        if self.telemetry is not None:
+            self.telemetry.inc("sched_" + name, n)
 
     # ---------------------------------------------------------- intake
     def class_of(self, req) -> SLOClass:
@@ -170,11 +178,11 @@ class AdmissionScheduler:
 
     def submit(self, req, est_pages: int) -> Admission:
         if est_pages > self.page_budget:
-            self.stats["rejected"] += 1
+            self._count("rejected")
             req.rejected = "too_large"
             return Admission(False, "too_large")
         if self.config.max_queue and self.backlog() >= self.config.max_queue:
-            self.stats["rejected"] += 1
+            self._count("rejected")
             req.rejected = "queue_full"
             return Admission(False, "queue_full")
         self.queues[self.class_of(req).name].append(req)
@@ -198,7 +206,7 @@ class AdmissionScheduler:
     def park(self, req, delay: int) -> None:
         """Stage a retrying request for ``delay`` scheduler ticks
         before it rejoins its class queue (bounded backoff)."""
-        self.stats["retried"] += 1
+        self._count("retried")
         self.parked.append((self._ticks + max(0, int(delay)), req))
 
     def _unpark(self) -> None:
@@ -262,8 +270,8 @@ class AdmissionScheduler:
                     self.requeue_front(vreq)
                     preempted += 1
                     continue
-            self.stats["deferred"] += 1
-            self.stats[f"defer_{blocked}"] += 1
+            self._count("deferred")
+            self._count(f"defer_{blocked}")
             return
 
     def _head(self):
@@ -275,8 +283,9 @@ class AdmissionScheduler:
     # ------------------------------------------------------- hardening
     def _reject(self, engine, req, reason: str) -> None:
         req.rejected = reason
-        self.stats["rejected"] += 1
+        self._count("rejected")
         engine._jrec("reject", rid=req.rid, reason=reason)
+        engine._trace_terminal(req, reason)
 
     def _expire_deadlines(self, engine) -> None:
         """Fail every request past its absolute deadline — queued,
@@ -291,12 +300,12 @@ class AdmissionScheduler:
         for q in self.queues.values():
             for r in [r for r in q if expired(r)]:
                 q.remove(r)
-                engine.stats["deadline_expired"] += 1
+                engine.telemetry.inc("deadline_expired")
                 self._reject(engine, r, "deadline")
         still = []
         for ready, r in self.parked:
             if expired(r):
-                engine.stats["deadline_expired"] += 1
+                engine.telemetry.inc("deadline_expired")
                 self._reject(engine, r, "deadline")
             else:
                 still.append((ready, r))
@@ -325,8 +334,9 @@ class AdmissionScheduler:
                 victim = q.pop()                    # tail: newest work
                 to_shed -= engine.est_pages(victim)
                 victim.rejected = "shed"
-                self.stats["shed"] += 1
+                self._count("shed")
                 engine._jrec("reject", rid=victim.rid, reason="shed")
+                engine._trace_terminal(victim, "shed")
             if to_shed <= 0:
                 break
 
@@ -430,7 +440,7 @@ class AdmissionScheduler:
                    and engine.pins.pages_on(shard) > 0):
                 pin_id = engine.pins.lru(shard)
                 engine.evict_pin(pin_id)
-                self.stats["pins_evicted"] += 1
+                self._count("pins_evicted")
                 progressed = True
             if self.headroom(shard, engine.pinned_pages_on) >= est:
                 return True
@@ -451,7 +461,7 @@ class AdmissionScheduler:
                 pin_id = engine.pins.lru(shard)
                 pages = engine.pins.entries[pin_id]["pages"]
                 engine.evict_pin(pin_id)
-                self.stats["pins_evicted"] += 1
+                self._count("pins_evicted")
                 # the status row is one step stale — account the evicted
                 # pages here so the loop terminates without a sync
                 engine.pages_used_shard[shard] -= pages
@@ -468,12 +478,12 @@ class AdmissionScheduler:
             if pin_id is None:
                 return False
             engine.evict_pin(pin_id)
-            self.stats["pins_evicted"] += 1
+            self._count("pins_evicted")
         if not engine.pins.has_free_row(shard):
             pin_id = engine.pins.lru(shard)
             if pin_id is None:
                 return False
             engine.evict_pin(pin_id)
-            self.stats["pins_evicted"] += 1
+            self._count("pins_evicted")
         return (self.committed[shard] + engine.pinned_pages_on(shard)
                 + pages <= self.page_budget)

@@ -591,6 +591,7 @@ class TestMeshPlumbing:
         finally:
             engine_mod.np = orig
         assert len(syncs) == 3, f"expected 1 sync/step, saw {syncs}"
-        assert all(s == (4, 4, 2) for s in syncs)
+        from repro.serving.telemetry import N_CTR
+        assert all(s == (4 + N_CTR, 4, 2) for s in syncs)
         eng.run(max_steps=200)
         assert eng.page_occupancy() == 0.0

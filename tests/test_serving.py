@@ -236,7 +236,9 @@ def test_steady_state_decode_single_sync(engine_setup):
         engine_mod.np = orig
     assert eng.stats["steps"] == steps0 + 3
     assert len(syncs) == 3, f"expected 1 sync/step, saw {syncs}"
-    assert all(s == (4, 1, 2) for s in syncs), "sync is the packed status"
+    from repro.serving.telemetry import N_CTR
+    assert all(s == (4 + N_CTR, 1, 2) for s in syncs), \
+        "sync is the packed status (+ telemetry counter rows)"
 
 
 def test_eos_stops_generation(engine_setup):

@@ -541,8 +541,9 @@ def test_speculative_step_one_sync_one_collective(engine_setup):
         engine_mod.np = orig
     assert eng.stats["steps"] == steps0 + 2
     assert len(syncs) == 2, f"expected 1 sync/step, saw {syncs}"
-    # width-4 draft lanes: status is [spec_T + 3, DP, Bl]
-    assert all(s == (eng._spec_T + 3, 4, 2) for s in syncs), syncs
+    # width-4 draft lanes: status is [spec_T + 3 + N_CTR, DP, Bl]
+    from repro.serving.telemetry import N_CTR
+    assert all(s == (eng._spec_T + 3 + N_CTR, 4, 2) for s in syncs), syncs
     assert eng.stats["spec_lanes"] > 0, "steps were not speculative"
 
     # exactly one collective in the compiled speculative step
