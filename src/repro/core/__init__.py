@@ -13,20 +13,25 @@ from .psim import PSimStack
 from .allocator import WaitFreeAllocator, PoolExhausted, DEAMORT_C
 from .scheduler import Scheduler, closed_loop
 from .linearizability import (check_alloc_history, check_batch_alloc_history,
+                              check_classed_batch_history,
+                              check_cross_class_frees,
                               check_cross_shard_frees,
                               check_preemption_history,
                               check_sharded_batch_history,
-                              expand_batch_history, split_history_by_shard,
+                              expand_batch_history, split_history_by_class,
+                              split_history_by_shard,
                               WGStackChecker, Event)
-from . import block_pool, hier_pool, kv_cache, refpool
+from . import block_pool, classed_pool, hier_pool, kv_cache, refpool
 
 __all__ = [
     "NULL", "SimContext", "Register", "RegisterArray", "CASWord", "LLSC",
     "BlockMemory", "PSimStack", "WaitFreeAllocator", "PoolExhausted",
     "DEAMORT_C", "Scheduler", "closed_loop", "check_alloc_history",
-    "check_batch_alloc_history", "check_cross_shard_frees",
+    "check_batch_alloc_history", "check_classed_batch_history",
+    "check_cross_class_frees", "check_cross_shard_frees",
     "check_preemption_history", "check_sharded_batch_history",
-    "expand_batch_history", "split_history_by_shard",
-    "WGStackChecker", "Event", "block_pool", "hier_pool", "kv_cache",
-    "refpool",
+    "expand_batch_history", "split_history_by_class",
+    "split_history_by_shard",
+    "WGStackChecker", "Event", "block_pool", "classed_pool", "hier_pool",
+    "kv_cache", "refpool",
 ]

@@ -80,6 +80,44 @@ def lane_ell(pool: HierPool) -> int:
     return pool.private_ids.shape[-1] // 3
 
 
+def validate_plan(num_blocks: int, num_lanes: int, ell: int,
+                  max_live: int, *, degraded_ok: bool = False,
+                  what: str = "pool") -> bool:
+    """Plan-time §4.2 never-dry validation (engine/sizing layer).
+
+    :func:`create` only asserts ``num_blocks >= num_lanes * ell`` — one
+    warm batch per lane — which is enough to *construct* the pool but
+    NOT enough for the paper's §4.2 never-dry-by-construction argument:
+    ``rebalance`` guarantees every lane leaves with >= ell blocks only
+    when the pool-wide slack over the worst-case live demand is at
+    least ``3 * ell * num_lanes`` (each lane may hold up to its full
+    3*ell capacity while another sits empty).  A config that passes the
+    create assert but lacks that slack compiles and runs — and its
+    lanes can run dry mid-step (negative never-dry margin, NULL grants
+    on the hot path).
+
+    Raises ``ValueError`` when the slack is insufficient, unless
+    ``degraded_ok`` — the documented degraded mode: the pool still
+    conserves blocks and ``alloc_n_or_shared`` falls back to the shared
+    stack synchronously, but the O(1)-per-lane hot-path guarantee is
+    forfeit.  Returns True when fully provisioned, False when admitted
+    degraded.
+    """
+    slack = num_blocks - max_live
+    need = 3 * ell * num_lanes
+    if slack >= need:
+        return True
+    msg = (f"{what}: num_blocks={num_blocks} leaves slack {slack} over "
+           f"max_live={max_live}, but the §4.2 never-dry argument needs "
+           f"3*ell*L = {need} (ell={ell}, lanes={num_lanes}); lanes can "
+           f"run dry between rebalances. Provision num_blocks >= "
+           f"{max_live + need}, or pass degraded_ok to accept "
+           f"synchronous shared-pool fallback on the hot path.")
+    if not degraded_ok:
+        raise ValueError(msg)
+    return False
+
+
 def alloc(pool: HierPool, want: jax.Array) -> Tuple[HierPool, jax.Array]:
     """Per-lane allocate: want bool[L] -> ids int32[L] (NULL if denied).
 
@@ -179,16 +217,16 @@ def addref(pool: HierPool, ids: jax.Array) -> HierPool:
     return pool._replace(shared=block_pool.addref(pool.shared, ids))
 
 
-def free_n(pool: HierPool, ids: jax.Array) -> HierPool:
-    """Per-lane batched free: ids int32[L, K] (NULL entries = no-op).
+def free_n_metered(pool: HierPool, ids: jax.Array
+                   ) -> Tuple[HierPool, jax.Array]:
+    """:func:`free_n` that also reports the lane-cap spill.
 
-    Drops one reference per valid id; blocks whose refcount reaches
-    zero return to the owning lane's private stack (up to capacity),
-    the overflow spilling to the shared stack — so a whole sequence's
-    pages release in one fixed-shape call with nothing lost: every
-    block released in this call lands on exactly one stack, duplicate
-    ids (two lanes releasing a shared page together) release once, and
-    still-referenced blocks stay off both stacks.
+    Returns ``(pool, n_spilled)`` where ``n_spilled`` (int32 scalar) is
+    the number of released blocks that overflowed their lane's 3*ell
+    stack and landed on the SHARED stack instead.  The §13 counter
+    block meters this row explicitly: without it the shared-free
+    telescoping ``shared_top' - shared_top == drain - refill`` is only
+    an inequality whenever a release overflows a lane (DESIGN.md §13).
     """
     L, K = ids.shape
     cap = pool.private_ids.shape[1]
@@ -206,9 +244,26 @@ def free_n(pool: HierPool, ids: jax.Array) -> HierPool:
         rel_ids, mode="drop")
     private_top = pool.private_top + jnp.sum(
         to_lane.astype(jnp.int32), axis=1)
-    spill = jnp.where(released & ~to_lane, rel_ids, NULL).reshape(-1)
+    spilled = released & ~to_lane
+    spill = jnp.where(spilled, rel_ids, NULL).reshape(-1)
     shared = block_pool._push(pool.shared._replace(refcount=refcount), spill)
-    return HierPool(shared, private_ids, private_top)
+    return (HierPool(shared, private_ids, private_top),
+            jnp.sum(spilled.astype(jnp.int32)))
+
+
+def free_n(pool: HierPool, ids: jax.Array) -> HierPool:
+    """Per-lane batched free: ids int32[L, K] (NULL entries = no-op).
+
+    Drops one reference per valid id; blocks whose refcount reaches
+    zero return to the owning lane's private stack (up to capacity),
+    the overflow spilling to the shared stack — so a whole sequence's
+    pages release in one fixed-shape call with nothing lost: every
+    block released in this call lands on exactly one stack, duplicate
+    ids (two lanes releasing a shared page together) release once, and
+    still-referenced blocks stay off both stacks.
+    """
+    pool, _ = free_n_metered(pool, ids)
+    return pool
 
 
 def free(pool: HierPool, ids: jax.Array) -> HierPool:
@@ -383,6 +438,14 @@ def free_n_dp(pool: HierPool, ids: jax.Array) -> HierPool:
     return jax.vmap(free_n, in_axes=(DP_AXES, 0))(pool, ids)
 
 
+def free_n_metered_dp(pool: HierPool, ids: jax.Array
+                      ) -> Tuple[HierPool, jax.Array]:
+    """ids int32[DP, L, K] -> (pool, spilled int32[DP]) — batched
+    release that meters each shard's lane-cap spill to the shared
+    stack (the §13 spill counter row)."""
+    return jax.vmap(free_n_metered, in_axes=(DP_AXES, 0))(pool, ids)
+
+
 def free_shared_dp(pool: HierPool, ids: jax.Array) -> HierPool:
     """ids int32[DP, K] — shard-local cache-owner release (pin
     eviction); zero-refcount blocks land on the shard's shared stack."""
@@ -442,6 +505,15 @@ def _reconcile_shard(shared: BlockPool, private_ids: np.ndarray,
     # referenced pages the torn state thought free (counter corruption)
     resurrected = int(np.sum((old_ref <= 0) & (refs > 0)))
 
+    # the recount runs in int64 but the pool stores int16 refcounts: a
+    # pathologically shared page (> 32767 keeping rows) would silently
+    # wrap negative on the narrow, turning a live page "free".  Clamp
+    # to the dtype max and report — the page stays live (releases
+    # decrement, so a clamped count errs toward never freeing early).
+    ref_cap = np.iinfo(old_ref.dtype).max
+    clamped = np.nonzero(refs > ref_cap)[0]
+    refs = np.minimum(refs, ref_cap)
+
     free_list = np.nonzero(refs == 0)[0]           # ascending ids
     # lanes first: exactly ell ids each while supply lasts, so the §4.2
     # never-dry floor holds by construction whenever slack allows
@@ -468,6 +540,7 @@ def _reconcile_shard(shared: BlockPool, private_ids: np.ndarray,
     report = {
         "reclaimed": [int(b) for b in reclaimed],
         "resurrected": resurrected,
+        "clamped": [int(b) for b in clamped],
         "free": int(len(rest)) + int(new_tops.sum()),
         "live": int(np.sum(refs > 0)),
         "capacity": int(m),
@@ -500,6 +573,7 @@ def audit_and_reconcile(pool: HierPool, keep_tables=None, pin_tables=None
         return shard_pool, {
             "shards": [rep], "reclaimed": len(rep["reclaimed"]),
             "resurrected": rep["resurrected"],
+            "clamped": len(rep["clamped"]),
             "never_dry": rep["never_dry"], "conserved": True}
     host = jax.tree.map(np.asarray, pool)
     dp = host.private_top.shape[0]
@@ -517,5 +591,6 @@ def audit_and_reconcile(pool: HierPool, keep_tables=None, pin_tables=None
         "shards": reps,
         "reclaimed": sum(len(r["reclaimed"]) for r in reps),
         "resurrected": sum(r["resurrected"] for r in reps),
+        "clamped": sum(len(r["clamped"]) for r in reps),
         "never_dry": all(r["never_dry"] for r in reps),
         "conserved": True}

@@ -466,6 +466,94 @@ def check_sharded_batch_history(history: Sequence[OpRecord]) -> List[str]:
     return errs
 
 
+# ---------------------------------------------------------- classed ops
+
+def split_history_by_class(history: Sequence[OpRecord]
+                           ) -> Dict[int, List[OpRecord]]:
+    """Partition a size-classed history by ``op.meta["cls"]``.
+
+    The classed pool keeps one id space PER CLASS per shard (class 0's
+    block 7 and class 1's block 7 are different physical blocks on the
+    same shard — DESIGN.md §14), so per-block interval checks are only
+    sound on a single class's sub-history, exactly as for shards.  Ops
+    missing the class tag default to class 0 (single-class histories
+    pass through unchanged)."""
+    out: Dict[int, List[OpRecord]] = {}
+    for op in history:
+        out.setdefault(op.meta.get("cls", 0), []).append(op)
+    return out
+
+
+def check_cross_class_frees(history: Sequence[OpRecord]) -> List[str]:
+    """Cross-class theft check: a grant observed in class i must be
+    freed in class i (on its own shard).
+
+    The class-axis mirror of :func:`check_cross_shard_frees`: id spaces
+    are class-local, so a release naming block b under (class j, shard
+    s) while b has no live grant there but does under (class i != j,
+    shard s) freed a foreign class's block through its own class's
+    allocator — corrupting class j's stack while leaking class i's
+    block.  The classes never exchange blocks, so this can never be
+    legitimate."""
+    errs: List[str] = []
+    live: Dict[Tuple[int, int, Any], int] = {}   # (cls, shard, block)
+
+    def key(op, b):
+        return (op.meta.get("cls", 0), op.meta.get("shard", 0), b)
+
+    def grant(op, b):
+        k = key(op, b)
+        live[k] = live.get(k, 0) + 1
+
+    def release(op, b):
+        k = key(op, b)
+        if live.get(k, 0) > 0:
+            live[k] -= 1
+            return
+        cls, shard, _ = k
+        holders = [c for (c, s, blk), n in live.items()
+                   if blk == b and s == shard and n > 0 and c != cls]
+        if holders:
+            errs.append(
+                f"op {op.opid} ({op.name}): block {b} freed in class "
+                f"{cls} (shard {shard}) but granted in class(es) "
+                f"{sorted(holders)} — cross-class theft")
+
+    done = [op for op in history if op.completed]
+    for op in sorted(done, key=lambda o: (o.response_step, o.invoke_step)):
+        if op.name == "allocate":
+            if op.result is not None and op.result >= 0:
+                grant(op, op.result)
+        elif op.name == "alloc_n":
+            for b in (op.result or []):
+                if b is not None and b >= 0:
+                    grant(op, b)
+        elif op.name == "free":
+            release(op, op.arg)
+        elif op.name in ("free_n", "spec_rollback"):
+            for b in (op.arg or []):
+                if b is not None and b >= 0:
+                    release(op, b)
+        elif op.name == "preempt":
+            for b in (op.result or []):
+                if b is not None and b >= 0:
+                    release(op, b)
+    return errs
+
+
+def check_classed_batch_history(history: Sequence[OpRecord]) -> List[str]:
+    """Size-classed multi-shard safety (DESIGN.md §14): the cross-class
+    theft check on the whole history, then every class's sub-history
+    through the full sharded batch checks independently — conservation
+    and interval safety are per class per shard, because both the id
+    spaces and the §4.2 argument are."""
+    errs = check_cross_class_frees(history)
+    for cls, ops in sorted(split_history_by_class(history).items()):
+        errs += [f"class {cls}: {e}"
+                 for e in check_sharded_batch_history(ops)]
+    return errs
+
+
 # ---------------------------------------------------------------- WG checker
 
 @dataclass

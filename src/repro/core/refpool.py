@@ -120,10 +120,12 @@ class RefShardPool:
             if b >= 0:
                 self.refcount[b] += 1
 
-    def free_n(self, ids: Sequence[Sequence[int]]) -> None:
+    def free_n(self, ids: Sequence[Sequence[int]]) -> int:
         """hier_pool.free_n: decrement everything first, release each
         zero-count block once (first occurrence, row-major), lane rows
-        keep what fits in column order, the rest spills row-major."""
+        keep what fits in column order, the rest spills row-major.
+        Returns the spill count — the sequential spec of
+        :func:`hier_pool.free_n_metered`'s second output."""
         flat = [b for row in ids for b in row if b >= 0]
         for b in flat:
             self.refcount[b] -= 1
@@ -139,6 +141,7 @@ class RefShardPool:
                 else:
                     spill.append(b)
         self.shared.extend(spill)
+        return len(spill)
 
     def free_shared(self, ids: Sequence[int]) -> None:
         """hier_pool.free_shared: lane-less release to the SHARED stack."""
@@ -183,6 +186,95 @@ def create_dp(dp: int, num_blocks: int, num_lanes: int,
     """One reference shard pool per DP shard — the host mirror of
     :func:`repro.core.hier_pool.create_dp` (ids shard-local)."""
     return [RefShardPool(num_blocks, num_lanes, ell) for _ in range(dp)]
+
+
+class RefClassedPool:
+    """Sequential spec of ONE shard's size-classed pool vector
+    (:mod:`repro.core.classed_pool`): an independent
+    :class:`RefShardPool` per class.  Classes never exchange blocks, so
+    the witness is exactly the per-class witnesses side by side —
+    every op takes the class index first and delegates; ids are
+    class-local AND shard-local, mirroring the device plane.
+
+    ``specs``: sequence of ``(num_blocks, num_lanes, ell)`` triples
+    (or anything exposing those attributes, e.g.
+    :class:`~repro.core.classed_pool.ClassSpec`).
+    """
+
+    def __init__(self, specs):
+        def triple(s):
+            if hasattr(s, "num_blocks"):
+                return (s.num_blocks, s.num_lanes, s.ell)
+            return tuple(s)[-3:] if len(tuple(s)) == 4 else tuple(s)
+        self.classes = [RefShardPool(*triple(s)) for s in specs]
+
+    # -- queries (summed over classes, like classed_pool) ---------------
+    def free_total(self) -> int:
+        return sum(c.free_total() for c in self.classes)
+
+    def num_live(self) -> int:
+        return sum(c.num_live() for c in self.classes)
+
+    # -- class-indexed ops ----------------------------------------------
+    def alloc(self, cls: int, want):
+        return self.classes[cls].alloc(want)
+
+    def alloc_n(self, cls: int, counts, max_per_lane: int):
+        return self.classes[cls].alloc_n(counts, max_per_lane)
+
+    def alloc_from_shared(self, cls: int, counts, max_per_lane: int):
+        return self.classes[cls].alloc_from_shared(counts, max_per_lane)
+
+    def addref(self, cls: int, ids) -> None:
+        self.classes[cls].addref(ids)
+
+    def free_n(self, cls: int, ids) -> int:
+        return self.classes[cls].free_n(ids)
+
+    def free_shared(self, cls: int, ids) -> None:
+        self.classes[cls].free_shared(ids)
+
+    # -- rebalance: all classes (the serve step's fused form) or one
+    # (the torn per-class windows the chaos plane injects) -------------
+    def rebalance_drain(self, cls: Optional[int] = None) -> None:
+        for c in self._sel(cls):
+            c.rebalance_drain()
+
+    def rebalance_refill(self, cls: Optional[int] = None) -> None:
+        for c in self._sel(cls):
+            c.rebalance_refill()
+
+    def rebalance(self, cls: Optional[int] = None) -> None:
+        self.rebalance_drain(cls)
+        self.rebalance_refill(cls)
+
+    def _sel(self, cls: Optional[int]):
+        return self.classes if cls is None else [self.classes[cls]]
+
+
+def create_classed_dp(dp: int, specs) -> List[RefClassedPool]:
+    """One reference classed pool per DP shard — the host mirror of
+    :func:`repro.core.classed_pool.create_dp`."""
+    return [RefClassedPool(specs) for _ in range(dp)]
+
+
+def conforms_classed(ref: RefClassedPool, pool, shard: int
+                     ) -> Optional[str]:
+    """Compare a reference classed shard against shard ``shard`` of a
+    jax :class:`~repro.core.classed_pool.ClassedPool` (class by class,
+    raw leaves).  Returns None on match, else a message naming the
+    diverging class."""
+    import numpy as np
+    for c, (rc, hp) in enumerate(zip(ref.classes, pool.classes)):
+        msg = conforms(rc,
+                       np.asarray(hp.shared.free_ids[shard]),
+                       np.asarray(hp.shared.top[shard]),
+                       np.asarray(hp.private_ids[shard]),
+                       np.asarray(hp.private_top[shard]),
+                       np.asarray(hp.shared.refcount[shard]))
+        if msg is not None:
+            return f"class {c}: {msg}"
+    return None
 
 
 def conforms(ref: RefShardPool, shared_free_ids, shared_top,

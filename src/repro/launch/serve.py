@@ -73,6 +73,12 @@ def main(argv=None):
     ap.add_argument("--repeat-frac", type=float, default=0.0,
                     help="fraction of requests repeating a previous full "
                          "prompt (the speculative fast path)")
+    ap.add_argument("--size-classes", type=int, default=1,
+                    choices=(1, 2),
+                    help="allocation-plane size classes (DESIGN.md "
+                         "§14): 1 = single coarse KV class (the "
+                         "pre-classed plane, bit-identical), 2 = add "
+                         "the fine bounded-state class")
     ap.add_argument("--mesh", choices=("auto", "off"), default="auto",
                     help="shard_map the allocation plane over a ('dp',) "
                          "device mesh when >= dp devices exist "
@@ -121,6 +127,7 @@ def main(argv=None):
             speculate=args.speculate, draft_len=args.draft_len,
             spec_gate=not args.no_spec_gate,
             mesh=("auto" if args.mesh == "auto" else None),
+            size_classes=args.size_classes,
             sched=SchedConfig(pin_pages=args.pin_pages,
                               page_budget=args.page_budget,
                               chunk_buckets=buckets),

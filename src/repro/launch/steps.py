@@ -19,7 +19,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import models
 from ..configs.base import ModelConfig, ShapeConfig
-from ..core import block_pool, hier_pool
 from ..models import transformer as tfm
 from ..optim import adamw
 from ..parallel import partition
@@ -111,18 +110,18 @@ def decode_state_shardings(cfg: ModelConfig, state_defs: tfm.DecodeState,
     enc_kv = None
     if state_defs.enc_kv is not None:
         enc_kv = jax.tree.map(kv_spec, state_defs.enc_kv)
+    # every pool leaf (any class, any depth) carries DP at axis 0
+    def pool_spec(sds):
+        return _ns(mesh, P(*([dpa] + [None] * (len(sds.shape) - 1))))
+
     return tfm.DecodeState(
         kv_pages=kv_pages, rings=rings, rec=rec,
         page_tables=_ns(mesh, P(dpa, None, None)),
         seq_lens=_ns(mesh, P(dpa, None)),
-        pool=hier_pool.HierPool(
-            shared=block_pool.BlockPool(
-                free_ids=_ns(mesh, P(dpa, None)),
-                top=_ns(mesh, P(dpa)),
-                refcount=_ns(mesh, P(dpa, None))),
-            private_ids=_ns(mesh, P(dpa, None, None)),
-            private_top=_ns(mesh, P(dpa, None))),
-        enc_kv=enc_kv)
+        pool=jax.tree.map(pool_spec, state_defs.pool),
+        enc_kv=enc_kv,
+        state_tables=(None if state_defs.state_tables is None
+                      else _ns(mesh, P(dpa, None, None))))
 
 
 # --------------------------------------------- serving dp-mesh partitioning
@@ -155,7 +154,8 @@ def serve_state_pspecs(state: tfm.DecodeState) -> tfm.DecodeState:
         page_tables=P("dp"),
         seq_lens=P("dp"),
         pool=jax.tree.map(lambda _: P("dp"), state.pool),
-        enc_kv=None if state.enc_kv is None else ax1(state.enc_kv))
+        enc_kv=None if state.enc_kv is None else ax1(state.enc_kv),
+        state_tables=None if state.state_tables is None else P("dp"))
 
 
 def serve_shardings(mesh: Mesh, pspecs):

@@ -13,16 +13,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import hier_pool
+from ..core import classed_pool
+from ..core.classed_pool import CLS_KV, ClassSpec
 from .transformer import DecodeState, decode_state_defs, _positions
 
 
 def empty_decode_state(cfg, dp: int, b_local: int, max_len: int,
-                       chunk: int | None = None) -> DecodeState:
-    """Concrete zero state; pages live in a per-shard two-level pool
-    with one private lane per slot (``chunk`` sizes the lane batch
-    ``ell`` — see :func:`repro.models.transformer.pool_ell`)."""
-    defs = decode_state_defs(cfg, dp, b_local, max_len, chunk=chunk)
+                       chunk: int | None = None,
+                       size_classes: int = 1) -> DecodeState:
+    """Concrete zero state; pages live in a per-shard size-classed
+    two-level pool vector with one private lane per slot per class
+    (``chunk`` sizes the KV lane batch ``ell`` — see
+    :func:`repro.models.transformer.pool_ell`; ``size_classes`` sets
+    the class vector — see :func:`~repro.models.transformer.
+    pool_class_specs`)."""
+    defs = decode_state_defs(cfg, dp, b_local, max_len, chunk=chunk,
+                             size_classes=size_classes)
 
     def zeros(sds):
         return jnp.zeros(sds.shape, sds.dtype)
@@ -30,14 +36,21 @@ def empty_decode_state(cfg, dp: int, b_local: int, max_len: int,
     kv_pages = jax.tree.map(zeros, defs.kv_pages)
     rings = jax.tree.map(zeros, defs.rings)
     rec = jax.tree.map(zeros, defs.rec)
-    pages_local = defs.pool.shared.free_ids.shape[1]
-    ell = defs.pool.private_ids.shape[2] // 3
-    pool = hier_pool.create_dp(dp, pages_local, b_local, ell)
+    specs = tuple(
+        ClassSpec(page_size=0,                    # granularity not stored
+                  num_blocks=hp.shared.free_ids.shape[1],
+                  num_lanes=hp.private_top.shape[1],
+                  ell=hp.private_ids.shape[2] // 3)
+        for hp in defs.pool.classes)
+    pool = classed_pool.create_dp(dp, specs)
     page_tables = jnp.full(defs.page_tables.shape, -1, jnp.int32)
     seq_lens = jnp.zeros(defs.seq_lens.shape, jnp.int32)
     enc_kv = jax.tree.map(zeros, defs.enc_kv) if defs.enc_kv is not None else None
+    state_tables = None
+    if defs.state_tables is not None:
+        state_tables = jnp.full(defs.state_tables.shape, -1, jnp.int32)
     return DecodeState(kv_pages, rings, rec, page_tables, seq_lens,
-                       pool, enc_kv)
+                       pool, enc_kv, state_tables)
 
 
 def empty_serve_arrays(dp: int, b_local: int):
@@ -83,8 +96,8 @@ def load_prefill(cfg, state: DecodeState, caches: Dict[str, Any],
 
     # --- page allocation: one batched shared-pool grant per shard
     counts = jnp.full((dp, b_local), n_pages, jnp.int32)
-    pool, ids = hier_pool.alloc_from_shared_dp(
-        state.pool, counts, max(n_pages, 1))
+    pool, ids = classed_pool.alloc_from_shared_dp(
+        state.pool, CLS_KV, counts, max(n_pages, 1))
     assert bool(jnp.all(ids[..., :n_pages] >= 0)), "prefill pool exhausted"
     tables = np.full((dp, b_local, max_pages), -1, np.int32)
     tables[:, :, :n_pages] = np.asarray(ids)[:, :, :n_pages]
@@ -162,4 +175,5 @@ def load_prefill(cfg, state: DecodeState, caches: Dict[str, Any],
         page_tables=jnp.asarray(tables),
         seq_lens=jnp.full((dp, b_local), prompt_len, jnp.int32),
         pool=pool,
-        enc_kv=enc_kv)
+        enc_kv=enc_kv,
+        state_tables=state.state_tables)

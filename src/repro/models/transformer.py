@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import base_kind, is_moe_kind
-from ..core import block_pool, hier_pool
+from ..core import block_pool, classed_pool, hier_pool
+from ..core.classed_pool import CLS_KV, ClassSpec
 from ..kernels.paged_attention.ops import paged_attention_chunk
 from ..kernels.verify_attention.ops import verify_attention
 from ..parallel.partition import constrain_batch
@@ -231,18 +232,28 @@ class DecodeState(NamedTuple):
     rec:         dict pos -> pytree of recurrent states [n_stack, DP, Bl, ...]
     page_tables: int32 [DP, Bl, max_pages]   (shared by all paged layers)
     seq_lens:    int32 [DP, Bl]
-    pool:        HierPool with leading-[DP] leaves — per-slot private
-                 lanes of capacity 3*ell over a per-shard shared pool
-                 (page ids shard-local; all mutation via hier_pool.*)
+    pool:        ClassedPool with leading-[DP] leaves per class — class
+                 CLS_KV (always present) backs the paged KV with
+                 per-slot private lanes of capacity 3*ell over a
+                 per-shard shared stack; a two-class config adds the
+                 fine CLS_STATE class accounting for bounded per-slot
+                 state (ring windows, recurrent state, encoder KV) at
+                 small-page granularity (ids shard-local AND
+                 class-local; all mutation via classed_pool.*)
     enc_kv:      optional (k, v) [n_enc_stack?, ...] cross-attn KV (encdec)
+    state_tables: optional int32 [DP, Bl, state_blocks_per_slot] — the
+                 CLS_STATE block grants backing each slot's bounded
+                 state (granted at admission, freed at release); None
+                 in a single-class config
     """
     kv_pages: Dict[str, Tuple[jax.Array, jax.Array]]
     rings: Dict[str, Tuple[jax.Array, jax.Array]]
     rec: Dict[str, Any]
     page_tables: jax.Array
     seq_lens: jax.Array
-    pool: hier_pool.HierPool
+    pool: classed_pool.ClassedPool
     enc_kv: Any
+    state_tables: Any = None
 
 
 def _positions(cfg) -> Dict[str, list]:
@@ -268,23 +279,100 @@ def pool_ell(cfg, chunk: Optional[int] = None) -> int:
     return max(-(-int(chunk) // cfg.page_size), 2)
 
 
+def state_page_tokens(cfg) -> int:
+    """Granularity (token-capacity units) of the fine CLS_STATE class —
+    a quarter KV page.  The class-boundary heuristic from the PAPERS.md
+    reallocation analyses: small enough that bounded state (ring
+    windows, recurrent blocks, encoder KV) stops rounding up to whole
+    KV pages, large enough that the class's lane/table overhead stays
+    negligible (DESIGN.md §14 routing table)."""
+    return max(1, cfg.page_size // 4)
+
+
+def state_blocks_per_slot(cfg, max_len: int) -> int:
+    """CLS_STATE blocks one slot's bounded state occupies, at
+    :func:`state_page_tokens` granularity.
+
+    Rings charge their window per ring layer, recurrent layers one
+    block each (fixed-size state), encoder KV its enc_len per decoder
+    layer.  This is the accounting plane for state that is physically
+    dense slot-indexed slabs: the grants are real allocator traffic
+    (conservation-checked, §4.2-proven per class) so admission and
+    occupancy meter bounded state at its own granularity instead of
+    rounding up to KV pages — the §10 over-allocation the size-classed
+    bench measures."""
+    psz_s = state_page_tokens(cfg)
+    blocks = 0
+    kinds = _positions(cfg)
+    W = min(cfg.window or max_len, max_len)
+    for j, _ in enumerate(cfg.pattern):
+        kind = kinds[f"pos{j}"]
+        if kind == "ring":
+            blocks += cfg.n_groups * -(-W // psz_s)
+        elif kind == "rec":
+            blocks += cfg.n_groups
+    for k in cfg.remainder:
+        bk = base_kind(k)
+        if bk == "local":
+            blocks += -(-W // psz_s)
+        elif bk not in ("global",):
+            blocks += 1
+    if cfg.arch_kind == "encdec":
+        stack = cfg.n_groups + len(cfg.remainder)
+        blocks += stack * -(-cfg.enc_len // psz_s)
+    return blocks
+
+
+def pool_class_specs(cfg, b_local: int, max_len: int,
+                     chunk: Optional[int] = None,
+                     size_classes: int = 1) -> Tuple[ClassSpec, ...]:
+    """The static class vector (DESIGN.md §14), sized per class.
+
+    Class 0 (CLS_KV) is the coarse paged-KV class: the pre-classed
+    single-pool sizing verbatim — worst-case live pages for every local
+    slot at max length PLUS fully-stocked lanes (3*ell per slot), the
+    §4.2 slack.  With ``size_classes >= 2``, class 1 (CLS_STATE) is the
+    fine bounded-state class with the same per-class slack rule at its
+    own granularity and demand (``state_blocks_per_slot``).
+    """
+    psz = cfg.page_size
+    max_pages = max(max_len // psz, 1)
+    ell0 = pool_ell(cfg, chunk)
+    specs = [ClassSpec(page_size=psz,
+                       num_blocks=b_local * max_pages + 3 * ell0 * b_local,
+                       num_lanes=b_local, ell=ell0)]
+    if size_classes >= 2:
+        sbs = state_blocks_per_slot(cfg, max_len)
+        ell1 = 2       # in-step demand is frees only; keep the floor
+        specs.append(ClassSpec(
+            page_size=state_page_tokens(cfg),
+            num_blocks=b_local * sbs + 3 * ell1 * b_local,
+            num_lanes=b_local, ell=ell1))
+    return tuple(specs)
+
+
 def decode_state_defs(cfg, dp: int, b_local: int, max_len: int,
-                      chunk: Optional[int] = None):
+                      chunk: Optional[int] = None,
+                      size_classes: int = 1):
     """ShapeDtypeStruct tree for the decode state (dry-run input).
 
     ``chunk`` is the serving engine's max tokens per step per sequence;
     it sizes the private-lane batch ``ell`` (see :func:`pool_ell`).
+    ``size_classes`` sets the allocation-plane class vector
+    (:func:`pool_class_specs`): 1 = the single coarse KV class
+    (bit-identical to the pre-classed plane), 2 adds the fine
+    bounded-state class and the ``state_tables`` register.
     """
     psz = cfg.page_size
     KH, hd = cfg.n_kv_heads, cfg.hd
     dt = cfg.jdtype
     ng = cfg.n_groups
     max_pages = max(max_len // psz, 1)
-    ell = pool_ell(cfg, chunk)
-    # per-shard page pool: enough for all local sequences at max length
-    # PLUS fully-stocked lanes (3*ell per slot) — so rebalance can keep
-    # every lane at >= ell free blocks even at peak global occupancy
-    pages_local = b_local * max_pages + 3 * ell * b_local
+    specs = pool_class_specs(cfg, b_local, max_len, chunk, size_classes)
+    # per-shard KV page pool: enough for all local sequences at max
+    # length PLUS fully-stocked lanes (3*ell per slot) — so rebalance
+    # can keep every lane at >= ell free blocks even at peak occupancy
+    pages_local = specs[CLS_KV].num_blocks
     kv_pages, rings, rec = {}, {}, {}
 
     def entry(pos, kind, stack):
@@ -323,13 +411,22 @@ def decode_state_defs(cfg, dp: int, b_local: int, max_len: int,
                cfg.enc_len, cfg.n_kv_heads, cfg.hd)
         enc_kv = (jax.ShapeDtypeStruct(shp, dt), jax.ShapeDtypeStruct(shp, dt))
 
-    pool = hier_pool.HierPool(
-        shared=block_pool.BlockPool(
-            free_ids=jax.ShapeDtypeStruct((dp, pages_local), jnp.int32),
-            top=jax.ShapeDtypeStruct((dp,), jnp.int32),
-            refcount=jax.ShapeDtypeStruct((dp, pages_local), jnp.int16)),
-        private_ids=jax.ShapeDtypeStruct((dp, b_local, 3 * ell), jnp.int32),
-        private_top=jax.ShapeDtypeStruct((dp, b_local), jnp.int32))
+    def class_def(s: ClassSpec):
+        return hier_pool.HierPool(
+            shared=block_pool.BlockPool(
+                free_ids=jax.ShapeDtypeStruct((dp, s.num_blocks), jnp.int32),
+                top=jax.ShapeDtypeStruct((dp,), jnp.int32),
+                refcount=jax.ShapeDtypeStruct((dp, s.num_blocks), jnp.int16)),
+            private_ids=jax.ShapeDtypeStruct(
+                (dp, s.num_lanes, 3 * s.ell), jnp.int32),
+            private_top=jax.ShapeDtypeStruct((dp, s.num_lanes), jnp.int32))
+
+    pool = classed_pool.ClassedPool(
+        classes=tuple(class_def(s) for s in specs))
+    state_tables = None
+    if size_classes >= 2:
+        sbs = max(state_blocks_per_slot(cfg, max_len), 1)
+        state_tables = jax.ShapeDtypeStruct((dp, b_local, sbs), jnp.int32)
 
     return DecodeState(
         kv_pages=kv_pages, rings=rings, rec=rec,
@@ -337,6 +434,7 @@ def decode_state_defs(cfg, dp: int, b_local: int, max_len: int,
         seq_lens=jax.ShapeDtypeStruct((dp, b_local), jnp.int32),
         pool=pool,
         enc_kv=enc_kv,
+        state_tables=state_tables,
     )
 
 
@@ -608,7 +706,8 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
         kmax = -(-T // psz)
         lens, pages_before, counts = block_pool.chunk_page_plan(
             base, lens, psz, maxp)
-        pool, got = hier_pool.alloc_n_or_shared_dp(state.pool, counts, kmax)
+        pool, got = classed_pool.alloc_n_or_shared_dp(
+            state.pool, CLS_KV, counts, kmax)
         lens = jnp.where(block_pool.granted_mask(got, counts), lens, 0)
         dp_i = jnp.arange(DP)[:, None, None]
         bl_i = jnp.arange(Bl)[None, :, None]
@@ -698,7 +797,8 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
         page_tables=state.page_tables,
         seq_lens=base + lens,
         pool=state.pool,
-        enc_kv=state.enc_kv)
+        enc_kv=state.enc_kv,
+        state_tables=state.state_tables)
 
     if "final_norm" in params:
         x = apply_norm(cfg, params["final_norm"], x)

@@ -31,7 +31,7 @@ from typing import Any, Dict, IO, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import NULL, hier_pool
+from ..core import NULL, classed_pool
 
 #: ``engine.step()`` phase boundaries, in execution order.  ``pre_tick``
 #: and ``post_admission`` fire every step; the rest only when the step
@@ -134,7 +134,7 @@ class ServingFailureInjector:
                     # leave the pool mid-rebalance: drain ran, refill
                     # did not — the torn window reconcile must handle
                     engine.state = engine.state._replace(
-                        pool=hier_pool.rebalance_drain_dp(engine.state.pool))
+                        pool=classed_pool.rebalance_drain_dp(engine.state.pool))
                 raise HostCrash(
                     f"injected host crash @ step {self.step}:{phase}"
                     + (" (torn rebalance)" if f.torn else ""))

@@ -88,13 +88,15 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import NULL, SimContext, WaitFreeAllocator, hier_pool
+from ..core import NULL, SimContext, WaitFreeAllocator, classed_pool, hier_pool
+from ..core.classed_pool import CLS_KV, CLS_STATE
 from ..launch.mesh import SERVE_DP_AXIS, make_dp_mesh
 from ..launch.steps import (serve_register_pspec, serve_shardings,
                             serve_state_pspecs)
 from ..models.decode_init import empty_decode_state, empty_serve_arrays
 from ..models.layers import logits_apply, logits_argmax_chunked
-from ..models.transformer import DecodeState, forward_decode_chunk
+from ..models.transformer import (DecodeState, forward_decode_chunk,
+                                  state_blocks_per_slot, state_page_tokens)
 from ..runtime.fault import StepWatchdog
 from .chaos import HostCrash, PoisonedRequest
 from .prefix_cache import (PinnedPrefixes, PrefixCache, SpeculationStore,
@@ -104,7 +106,7 @@ from .sampling import sample_lane, sample_tokens
 from .sched import Admission, AdmissionScheduler, SchedConfig
 from .telemetry import (CTR_ALLOC, CTR_DRAIN, CTR_FREED, CTR_MARGIN,
                         CTR_REFILL, CTR_ROLLBACK, CTR_SHARED_FREE,
-                        N_CTR, FlightRecorder, Telemetry)
+                        CTR_SPILL, N_CTR, FlightRecorder, Telemetry)
 from .trace import Tracer
 
 
@@ -138,17 +140,32 @@ class Request:
 
 
 def _release_slots(state: DecodeState, mask):
-    """Jit-able: release all pages of masked slots, zero their state.
+    """Jit-able: release all blocks of masked slots, zero their state.
 
-    mask: bool[DP, Bl].  One :func:`hier_pool.free_n` per shard — each
-    page loses one reference; pages still mapped by a prefix-sharing
-    sibling or pinned by the prefix cache stay live (release decrements
-    instead of frees), the rest return to the slot's lane / the shared
-    pool.
+    mask: bool[DP, Bl].  One :func:`hier_pool.free_n` per class per
+    shard — each page loses one reference; pages still mapped by a
+    prefix-sharing sibling or pinned by the prefix cache stay live
+    (release decrements instead of frees), the rest return to the
+    slot's lane / the shared pool.  In a two-class config the slot's
+    CLS_STATE grants (``state_tables`` row) release the same way.
+
+    Returns ``(state, spill)`` with spill int32[C, DP]: pages a full
+    lane spilled straight to the shared stack during the frees — the
+    term that keeps the §13 shared-free telescoping an equality
+    (metered via :func:`hier_pool.free_n_metered`).
     """
     dp, bl, maxp = state.page_tables.shape
+    C = len(state.pool.classes)
     to_free = jnp.where(mask[:, :, None], state.page_tables, NULL)
-    pool = hier_pool.free_n_dp(state.pool, to_free)
+    pool, spill_kv = classed_pool.free_n_metered_dp(state.pool, CLS_KV,
+                                                    to_free)
+    spills = [spill_kv] + [jnp.zeros_like(spill_kv)] * (C - 1)
+    if state.state_tables is not None and C > CLS_STATE:
+        st_free = jnp.where(mask[:, :, None], state.state_tables, NULL)
+        pool, spills[CLS_STATE] = classed_pool.free_n_metered_dp(
+            pool, CLS_STATE, st_free)
+        state = state._replace(state_tables=jnp.where(
+            mask[:, :, None], NULL, state.state_tables))
     page_tables = jnp.where(mask[:, :, None], NULL, state.page_tables)
     seq_lens = jnp.where(mask, 0, state.seq_lens)
 
@@ -162,24 +179,41 @@ def _release_slots(state: DecodeState, mask):
 
     rings = zero_masked(state.rings)
     rec = zero_masked(state.rec)
-    return state._replace(page_tables=page_tables, seq_lens=seq_lens,
-                          pool=pool, rings=rings, rec=rec)
+    state = state._replace(page_tables=page_tables, seq_lens=seq_lens,
+                           pool=pool, rings=rings, rec=rec)
+    return state, jnp.stack(spills)
+
+
+def _alloc_state_step(state: DecodeState, counts):
+    """Jit-able admission-time CLS_STATE grant: pull ``counts[d, b]``
+    fine blocks per masked slot from class 1's shared stack (bulk
+    admission, like prefill loading — off the serve step's hot path)
+    and write them into the slot's ``state_tables`` row.  §4.2 for this
+    class: lanes hold at most their 3*ell*L slack, so while admission
+    respects the class budget the shared stack covers every grant."""
+    kmax = state.state_tables.shape[2]
+    pool, ids = classed_pool.alloc_from_shared_dp(
+        state.pool, CLS_STATE, counts, kmax)
+    tables = jnp.where(counts[:, :, None] > 0, ids, state.state_tables)
+    return state._replace(pool=pool, state_tables=tables)
 
 
 # Packed per-step status (the step's single device->host transfer),
-# int32[T + 3 + N_CTR, DP, Bl] for a width-T step: rows [0, T) carry
-# each slot's emitted tokens this step in order (-1 padding — one row
-# per lane position, so a fully-accepted draft lane reports k + 1
-# tokens in the same single sync), then three bookkeeping rows
-# addressed relative to T:
+# int32[T + 3 + C*N_CTR, DP, Bl] for a width-T step over C size
+# classes: rows [0, T) carry each slot's emitted tokens this step in
+# order (-1 padding — one row per lane position, so a fully-accepted
+# draft lane reports k + 1 tokens in the same single sync), then three
+# bookkeeping rows addressed relative to T:
 STATUS_EMITTED = 0   # + T: emitted-token count this step
 STATUS_DONE = 1      # + T: 1 iff the slot finished (pages released)
-STATUS_PAGES = 2     # + T: pages-in-use on the slot's DP shard
-# followed by the N_CTR telemetry counter rows (telemetry.CTR_* order,
-# per-shard values broadcast over Bl like the PAGES row): allocator
-# events metered INSIDE the jit from pool free-level deltas the step
-# already computes, harvested through the same single sync and the same
-# single all_gather — the DESIGN.md §13 zero-extra-sync argument.
+STATUS_PAGES = 2     # + T: KV pages-in-use on the slot's DP shard
+# followed by C class-major blocks of the N_CTR telemetry counter rows
+# (telemetry.CTR_* order within a block, class c's block at offset
+# T + 3 + c*N_CTR; per-shard values broadcast over Bl like the PAGES
+# row): allocator events metered INSIDE the jit from pool free-level
+# deltas the step already computes, harvested through the same single
+# sync and the same single all_gather — the DESIGN.md §13
+# zero-extra-sync argument, unchanged by the class axis.
 
 
 def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
@@ -242,21 +276,28 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
     global view.
     """
     DP, Bl, T = prompt_toks.shape
+    C = len(state.pool.classes)
     gen_lane = prompt_toks.at[:, :, 0].set(last_tok)
     toks = jnp.where(is_prompt[..., None], prompt_toks, gen_lane)
     active = feed_lens > 0
     base = state.seq_lens
-    # telemetry counter block (DESIGN.md §13): allocator events are
-    # metered from per-shard pool free-level deltas between the step's
-    # existing phases — pure arithmetic on values the step already
-    # holds, no extra device work beyond a few scalar subtractions
-    free_in = hier_pool.free_per_shard(state.pool)           # int32[DP]
+    # telemetry counter block (DESIGN.md §13, class axis §14):
+    # allocator events are metered from per-class per-shard pool
+    # free-level deltas between the step's existing phases — pure
+    # arithmetic on values the step already holds, no extra device work
+    # beyond a few scalar subtractions per class
+    def free_all(pool):
+        return [classed_pool.free_per_shard(pool, c)      # C x int32[DP]
+                for c in range(C)]
+
+    free_in = free_all(state.pool)
 
     hidden, state = forward_decode_chunk(cfg, params, toks, state,
                                          feed_lens, active=active,
                                          verify=spec)
-    free_fwd = hier_pool.free_per_shard(state.pool)
-    ctr_alloc = free_in - free_fwd       # forward only allocates
+    free_fwd = free_all(state.pool)
+    # forward only allocates, and only in the KV class
+    ctr_alloc = [free_in[c] - free_fwd[c] for c in range(C)]
     idx = jnp.maximum(feed_lens - 1, 0)
     emit = emit & active
     if spec:
@@ -329,15 +370,18 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
         kidx = jnp.arange(maxp, dtype=jnp.int32)[None, None, :]
         roll = ((kidx >= keep_pages[..., None]) &
                 (kidx < have_pages[..., None]))
-        pool = hier_pool.free_n_dp(
-            state.pool, jnp.where(roll, state.page_tables, NULL))
+        pool, spill_roll = classed_pool.free_n_metered_dp(
+            state.pool, CLS_KV, jnp.where(roll, state.page_tables, NULL))
         state = state._replace(
             pool=pool,
             page_tables=jnp.where(roll, NULL, state.page_tables),
             seq_lens=base + n_keep)
         # rollback pages are refcount-1 by construction (granted this
-        # very step), so the free-level delta counts them exactly
-        ctr_roll = hier_pool.free_per_shard(state.pool) - free_fwd
+        # very step), so the free-level delta counts them exactly;
+        # rollback is KV-class traffic only
+        ctr_roll = [classed_pool.free_per_shard(state.pool, CLS_KV)
+                    - free_fwd[CLS_KV]]
+        ctr_roll += [jnp.zeros_like(ctr_roll[0]) for _ in range(C - 1)]
         out_count = out_count + n_emit
         seq_full = state.seq_lens >= max_len - 1
         done = active & ((out_count >= budget) | seq_full | hit_eos)
@@ -350,7 +394,9 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
                 [tok_rows, jnp.full((DP, Bl, T - Tv), -1, jnp.int32)],
                 axis=-1)
     else:
-        ctr_roll = jnp.zeros_like(free_in)    # no drafts, no rollback
+        # no drafts, no rollback
+        ctr_roll = [jnp.zeros_like(f) for f in free_in]
+        spill_roll = jnp.zeros_like(free_in[CLS_KV])
         h_last = jnp.take_along_axis(hidden, idx[..., None, None],
                                      axis=2)[:, :, 0]     # [DP, Bl, d]
         logits = logits_apply(cfg, params["embed"], h_last)
@@ -367,45 +413,64 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
         tok_rows = jnp.concatenate(
             [jnp.where(emit, nxt, -1)[..., None],
              jnp.full((DP, Bl, T - 1), -1, jnp.int32)], axis=-1)
-    state = _release_slots(state, done)
+    state, spill_rel = _release_slots(state, done)
     # everything freed since the forward pass actually returned free —
     # spec rollback plus finished-slot release (shared/pinned pages a
     # sibling still maps only decrement, and correctly don't count)
-    ctr_freed = hier_pool.free_per_shard(state.pool) - free_fwd
+    ctr_freed = [classed_pool.free_per_shard(state.pool, c) - free_fwd[c]
+                 for c in range(C)]
+    # pages a full lane spilled straight to the shared stack across
+    # ALL of this step's frees — the explicit term that keeps the §13
+    # shared-free telescoping an equality instead of an inequality:
+    # shared_top' - shared_top == spill - drain_net per step
+    ctr_spill = [spill_rel[c] + (spill_roll if c == CLS_KV else 0)
+                 for c in range(C)]
     # deamortized shared<->lane traffic: once per step, off the
-    # per-token path (the paper's run_delayed_step).  Phases run
-    # separately (== rebalance_dp by definition) so the counter block
-    # meters drain and refill traffic from the lane-stock deltas.
-    lane0 = jnp.sum(state.pool.private_top, axis=-1)
-    pool = hier_pool.rebalance_drain_dp(state.pool)
-    lane_drained = jnp.sum(pool.private_top, axis=-1)
-    pool = hier_pool.rebalance_refill_dp(pool)
+    # per-token path (the paper's run_delayed_step), fused over all
+    # classes.  Phases run separately (== rebalance_dp by definition)
+    # so the counter block meters per-class drain and refill traffic
+    # from the lane-stock deltas.
+    lane0 = [jnp.sum(state.pool.classes[c].private_top, axis=-1)
+             for c in range(C)]
+    pool = classed_pool.rebalance_drain_dp(state.pool)
+    lane_drained = [jnp.sum(pool.classes[c].private_top, axis=-1)
+                    for c in range(C)]
+    pool = classed_pool.rebalance_refill_dp(pool)
     state = state._replace(pool=pool)
-    ctr_drain = lane0 - lane_drained
-    ctr_refill = jnp.sum(pool.private_top, axis=-1) - lane_drained
+    ctr_drain = [lane0[c] - lane_drained[c] for c in range(C)]
+    ctr_refill = [jnp.sum(pool.classes[c].private_top, axis=-1)
+                  - lane_drained[c] for c in range(C)]
 
-    pages_local = state.pool.shared.free_ids.shape[1]
-    free_now = state.pool.shared.top + jnp.sum(state.pool.private_top, axis=1)
+    # the PAGES status row stays the coarse KV class — the scheduler's
+    # page budget and high-water pin eviction are KV-page quantities
+    kv = state.pool.classes[CLS_KV]
+    pages_local = kv.shared.free_ids.shape[1]
+    free_now = kv.shared.top + jnp.sum(kv.private_top, axis=1)
     pages_used = (pages_local - free_now).astype(jnp.int32)      # [DP]
-    # post-rebalance invariant gauges: the shared stack's free level
-    # (host min-accumulates the low-water mark) and the §4.2 never-dry
-    # margin min(private_top) - ell (>= 0 iff the invariant held)
-    ell = hier_pool.lane_ell(state.pool)
-    margin = jnp.min(state.pool.private_top, axis=-1) - ell
-    ctr = jnp.empty((N_CTR, DP), jnp.int32)
-    ctr = ctr.at[CTR_ALLOC].set(ctr_alloc)
-    ctr = ctr.at[CTR_FREED].set(ctr_freed)
-    ctr = ctr.at[CTR_ROLLBACK].set(ctr_roll)
-    ctr = ctr.at[CTR_DRAIN].set(ctr_drain)
-    ctr = ctr.at[CTR_REFILL].set(ctr_refill)
-    ctr = ctr.at[CTR_SHARED_FREE].set(state.pool.shared.top)
-    ctr = ctr.at[CTR_MARGIN].set(margin)
+    # per-class post-rebalance invariant gauges: each class's shared
+    # free level (host min-accumulates the low-water mark) and its
+    # §4.2 never-dry margin min(private_top) - ell (>= 0 iff held)
+    ctrs = []
+    for c in range(C):
+        hp = state.pool.classes[c]
+        margin = jnp.min(hp.private_top, axis=-1) - hier_pool.lane_ell(hp)
+        ctr = jnp.empty((N_CTR, DP), jnp.int32)
+        ctr = ctr.at[CTR_ALLOC].set(ctr_alloc[c])
+        ctr = ctr.at[CTR_FREED].set(ctr_freed[c])
+        ctr = ctr.at[CTR_ROLLBACK].set(ctr_roll[c])
+        ctr = ctr.at[CTR_DRAIN].set(ctr_drain[c])
+        ctr = ctr.at[CTR_REFILL].set(ctr_refill[c])
+        ctr = ctr.at[CTR_SPILL].set(ctr_spill[c])
+        ctr = ctr.at[CTR_SHARED_FREE].set(hp.shared.top)
+        ctr = ctr.at[CTR_MARGIN].set(margin)
+        ctrs.append(ctr)
+    ctr = jnp.concatenate(ctrs)                  # [C * N_CTR, DP]
     status = jnp.concatenate(
         [tok_rows.transpose(2, 0, 1),
          n_emit[None],
          done.astype(jnp.int32)[None],
          jnp.broadcast_to(pages_used[:, None], (DP, Bl))[None],
-         jnp.broadcast_to(ctr[:, :, None], (N_CTR, DP, Bl))])
+         jnp.broadcast_to(ctr[:, :, None], (C * N_CTR, DP, Bl))])
     if axis_name is not None:
         # the step's single collective: only the packed status row
         # crosses shards (DESIGN.md §9 one-sync argument)
@@ -423,6 +488,7 @@ class ServingEngine:
                  spec_gate: bool = True,
                  sched: Optional[SchedConfig] = None,
                  mesh="auto",
+                 size_classes: int = 1, degraded_pool_ok: bool = False,
                  journal=None, injector=None,
                  watchdog: Optional[StepWatchdog] = None,
                  clock=None, max_restarts: int = 0,
@@ -437,7 +503,8 @@ class ServingEngine:
         # view of telemetry.counters, so pre-§13 callers (and the
         # benches) read the same ledger the typed counters write.
         if telemetry is None:
-            telemetry = Telemetry(dp, tracer=tracer, flight=flight)
+            telemetry = Telemetry(dp, tracer=tracer, flight=flight,
+                                  n_classes=max(int(size_classes), 1))
         self.telemetry = telemetry
         self.tracer = telemetry.tracer
         if telemetry.flight is None:
@@ -463,7 +530,12 @@ class ServingEngine:
         self.mesh: Optional[Mesh] = mesh
         self._axis = SERVE_DP_AXIS if mesh is not None else None
         self.state = empty_decode_state(cfg, dp, b_local, max_len,
-                                        chunk=lane_tokens)
+                                        chunk=lane_tokens,
+                                        size_classes=size_classes)
+        self.n_classes = len(self.state.pool.classes)
+        assert self.telemetry.n_classes == self.n_classes, (
+            "telemetry n_classes must match the engine's size-class "
+            "vector (pass Telemetry(dp, n_classes=...))")
         self._pspecs = serve_state_pspecs(self.state)
         self._rspec = serve_register_pspec()
         if self.mesh is not None:
@@ -490,7 +562,33 @@ class ServingEngine:
         maxp = self.state.page_tables.shape[2]
         self.capacity = (min(max_len, maxp * cfg.page_size)
                          if self.state.kv_pages else max_len)
-        self.pages_local = self.state.pool.shared.free_ids.shape[1]
+        self.pages_local = classed_pool.pages_local(self.state.pool, CLS_KV)
+        # CLS_STATE blocks one slot's bounded state occupies (0 in a
+        # single-class config, and 0 for a fully-paged model even when
+        # the class exists): granted at admission, freed at release
+        self._state_blocks = (state_blocks_per_slot(cfg, max_len)
+                              if self.state.state_tables is not None else 0)
+        # plan-time §4.2 validation (DESIGN.md §14): every class must
+        # carry pool-wide slack 3*ell*L over its worst-case live blocks
+        # — hier_pool.create's own per-lane assert is NOT sufficient
+        # (a config can satisfy it and still run a lane dry between
+        # rebalances).  ``degraded_pool_ok`` documents the fallback:
+        # under-provisioned classes keep serving correctly through the
+        # synchronous alloc_n_or_shared shared-pool path, but the O(1)
+        # lane-local guarantee (and the never-dry margin gauge) is
+        # forfeit for that class.
+        max_live = [b_local * maxp] + [b_local * self._state_blocks] * (
+            self.n_classes - 1)
+        specs = tuple(
+            classed_pool.ClassSpec(
+                page_size=(cfg.page_size if c == CLS_KV
+                           else state_page_tokens(cfg)),
+                num_blocks=hp.shared.free_ids.shape[-1],
+                num_lanes=hp.private_top.shape[-1],
+                ell=hp.private_ids.shape[-1] // 3)
+            for c, hp in enumerate(self.state.pool.classes))
+        self.pool_provisioned = classed_pool.validate_specs(
+            specs, max_live, degraded_ok=degraded_pool_ok)
         self._fed: Dict[int, int] = {}       # host shadow of seq_lens
 
         # fused device-resident token-lane step, compiled once per lane
@@ -524,7 +622,14 @@ class ServingEngine:
             for sampler in (False, True) for spec in (False, True)}
         self._sampling_slots: set = set()
         self._release = wrap(_release_slots, in_specs=(S, R),
-                             out_specs=S, donate=(0,))
+                             out_specs=(S, P(None, "dp")), donate=(0,))
+        # admission-time CLS_STATE grant (two-class configs): a jitted
+        # bulk shared-pool pull, same off-hot-path shape as prefill
+        # loading and the share/pin steps
+        self._alloc_state = None
+        if self.state.state_tables is not None:
+            self._alloc_state = wrap(_alloc_state_step, in_specs=(S, R),
+                                     out_specs=S, donate=(0,))
 
         # prefix sharing: only sound when the whole decode state is
         # paged (ring / recurrent layers would need donor state at the
@@ -568,7 +673,8 @@ class ServingEngine:
         # the pre-scheduler engine admitted.
         self.sched_config = sched or SchedConfig()
         self.scheduler = AdmissionScheduler(
-            self.sched_config, n_shards=dp, page_budget=b_local * maxp)
+            self.sched_config, n_shards=dp, page_budget=b_local * maxp,
+            state_budget=b_local * self._state_blocks)
 
         # pinned prefixes: device pin table (rows of cache-owned page
         # ids per shard) + host LRU ledger; disabled unless the sched
@@ -640,7 +746,8 @@ class ServingEngine:
         self.flight.meta.update(
             dp=dp, b_local=b_local, page_size=int(cfg.page_size),
             pages_local=int(self.pages_local),
-            lane_ell=int(self.state.pool.private_ids.shape[-1]) // 3,
+            lane_ell=classed_pool.lane_ell(self.state.pool, CLS_KV),
+            size_classes=self.n_classes,
             speculate=self.speculate, arch=getattr(cfg, "name", "?"))
 
     @property
@@ -769,6 +876,13 @@ class ServingEngine:
         toks = min(max(toks, 1), self.capacity)
         return -(-toks // self.cfg.page_size)
 
+    def est_state_blocks(self, req: Request) -> int:
+        """Fine-class (CLS_STATE) block demand of a request: the fixed
+        per-slot bounded-state footprint (rings/recurrent/encoder KV
+        are sized by the model, not the request).  0 in a single-class
+        config — the scheduler's state dimension then never binds."""
+        return self._state_blocks
+
     def free_slot_shards(self) -> set:
         return {s // self.bl for s in self._free_slots}
 
@@ -811,6 +925,15 @@ class ServingEngine:
             shared_n = self._try_share(slot, match, len(toks))
         self.pending_tokens[slot] = toks[shared_n:]
         self._fed[slot] = shared_n
+        if self._alloc_state is not None and self._state_blocks > 0:
+            # grant the slot's bounded-state blocks from the fine class
+            # (CLS_STATE) in one bulk shared-pool pull — the class's
+            # §4.2 slack plus the scheduler's state-budget accounting
+            # guarantee the grant succeeds (DESIGN.md §14)
+            counts = np.zeros((self.dp, self.bl), np.int32)
+            counts[d, b] = self._state_blocks
+            self.state = self._alloc_state(self.state, jnp.asarray(counts))
+            self.telemetry.inc("state_blocks_granted", self._state_blocks)
         if self.prefix_cache is not None:
             self.prefix_cache.insert(slot, d, toks)
             self.prefix_cache.update_progress(slot, shared_n)
@@ -846,7 +969,7 @@ class ServingEngine:
         d, b = divmod(slot, self.bl)
         mask = np.zeros((self.dp, self.bl), bool)
         mask[d, b] = True
-        self.state = self._release(self.state, jnp.asarray(mask))
+        self.state, _ = self._release(self.state, jnp.asarray(mask))
         self.pending_tokens.pop(slot, None)
         self._fed.pop(slot, None)
         self._pinned_slots.discard(slot)
@@ -874,7 +997,7 @@ class ServingEngine:
         d, b = divmod(slot, self.bl)
         mask = np.zeros((self.dp, self.bl), bool)
         mask[d, b] = True
-        self.state = self._release(self.state, jnp.asarray(mask))
+        self.state, _ = self._release(self.state, jnp.asarray(mask))
         self.pending_tokens.pop(slot, None)
         self._fed.pop(slot, None)
         self._pinned_slots.discard(slot)
@@ -1435,8 +1558,13 @@ class ServingEngine:
         reconcile report."""
         assert not self.active, "adopt with active slots"
         dp, bl, maxp = self.state.page_tables.shape
-        pool, report = hier_pool.audit_and_reconcile(
-            dead_state.pool, keep_tables=None, pin_tables=pin_np)
+        C = len(dead_state.pool.classes)
+        # pins live only in the KV class; every other class reconciles
+        # against no keep rows (all grants belonged to requeued slots)
+        pins = None if pin_np is None else tuple(
+            [pin_np] + [None] * (C - 1))
+        pool, report = classed_pool.audit_and_reconcile(
+            dead_state.pool, keep_tables=None, pin_tables=pins)
 
         def zero(t):
             return jax.tree.map(jnp.zeros_like, t)
@@ -1446,6 +1574,9 @@ class ServingEngine:
             page_tables=jnp.full((dp, bl, maxp), NULL, jnp.int32),
             seq_lens=jnp.zeros((dp, bl), jnp.int32),
             rings=zero(dead_state.rings), rec=zero(dead_state.rec))
+        if dead_state.state_tables is not None:
+            state = state._replace(state_tables=jnp.full_like(
+                dead_state.state_tables, NULL))
         if self.mesh is not None:
             state = jax.device_put(
                 state, serve_shardings(self.mesh, self._pspecs))
@@ -1476,6 +1607,7 @@ class ServingEngine:
             "reconcile",
             reclaimed=int(report.get("reclaimed", 0)),
             resurrected=int(report.get("resurrected", 0)),
+            clamped=int(report.get("clamped", 0)),
             never_dry=bool(report.get("never_dry", True)),
             conserved=bool(report.get("conserved", True)))
         if self.flight.dump("audit_and_reconcile", {"report": report}):
@@ -1527,7 +1659,8 @@ class ServingEngine:
         pages are unreachable by definition — they leave the accounting
         with the shard).  The post-drain + flush_pins invariant every
         chaos run closes with."""
-        live = np.asarray(hier_pool.live_per_shard(self.state.pool))
+        live = sum(np.asarray(classed_pool.live_per_shard(self.state.pool, c))
+                   for c in range(self.n_classes))
         return all(int(live[s]) == 0 for s in range(self.dp)
                    if s not in self.lost_shards)
 
@@ -1609,11 +1742,19 @@ class ServingEngine:
         return step
 
     # ------------------------------------------------------------ metrics
+    def blocks_in_use(self, cls: int = CLS_KV) -> int:
+        """Blocks of one size class currently referenced across shards
+        (shared pages count once)."""
+        total = classed_pool.pages_local(self.state.pool, cls) * self.dp
+        return total - int(hier_pool.total_free(
+            classed_pool.cls_pool(self.state.pool, cls)))
+
     def pages_in_use(self) -> int:
-        """Physical pages currently referenced (shared pages count once;
-        includes cache-pinned pages — see :meth:`pinned_pages`)."""
-        total = self.pages_local * self.dp
-        return total - int(hier_pool.total_free(self.state.pool))
+        """Physical KV pages currently referenced (shared pages count
+        once; includes cache-pinned pages — see :meth:`pinned_pages`).
+        Coarse-class quantity; see :meth:`blocks_in_use` for the fine
+        classes."""
+        return self.blocks_in_use(CLS_KV)
 
     def page_occupancy(self) -> float:
         return self.pages_in_use() / (self.pages_local * self.dp)

@@ -61,8 +61,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import hier_pool
+from ..core import classed_pool
 from ..core.block_pool import NULL
+from ..core.classed_pool import CLS_KV
 
 
 # ------------------------------------------------------------- host trie
@@ -535,15 +536,15 @@ def _share_from_row(psz: int, state, dst_oh, src_row, n_tokens,
     # path; taking it from the slot's lane would eat into the lane's
     # never-dry stock and silently deny the slot's next chunk)
     want = dst_oh & (partial > 0) & donor_ok
-    pool, fresh = hier_pool.alloc_from_shared_dp(
-        state.pool, want.astype(jnp.int32), 1)
+    pool, fresh = classed_pool.alloc_from_shared_dp(
+        state.pool, CLS_KV, want.astype(jnp.int32), 1)
     fresh = fresh[..., 0]                                          # [DP, Bl]
     ok = donor_ok & ((partial == 0) | jnp.any(fresh >= 0))
 
     # register the extra references on the donor's full pages
     shared_ids = jnp.where((k < fp) & ok, src_row, NULL)
     ids_dp = jnp.where(shard_mask[:, None], shared_ids[None, :], NULL)
-    pool = hier_pool.addref_dp(pool, ids_dp)
+    pool = classed_pool.addref_dp(pool, CLS_KV, ids_dp)
 
     # dst table row: donor's full pages, then the fresh partial copy
     row = jnp.where(k[None, None, :] < fp, src_row[None, None, :],
@@ -603,7 +604,7 @@ def pin_prefix_step(pool, pin_tables, page_tables, pin_oh, src_oh,
     row = jnp.where(k < jnp.asarray(n_pages, jnp.int32), src_row, NULL)
     shard_mask = jnp.any(pin_oh, axis=1)                           # [DP]
     ids_dp = jnp.where(shard_mask[:, None], row[None, :], NULL)
-    pool = hier_pool.addref_dp(pool, ids_dp)
+    pool = classed_pool.addref_dp(pool, CLS_KV, ids_dp)
     pin_tables = jnp.where(pin_oh[..., None], row[None, None, :],
                            pin_tables)
     return pool, pin_tables
@@ -620,6 +621,6 @@ def unpin_step(pool, pin_tables, pin_oh):
     """
     DP = pin_tables.shape[0]
     ids = jnp.where(pin_oh[..., None], pin_tables, NULL)
-    pool = hier_pool.free_shared_dp(pool, ids.reshape(DP, -1))
+    pool = classed_pool.free_shared_dp(pool, CLS_KV, ids.reshape(DP, -1))
     pin_tables = jnp.where(pin_oh[..., None], NULL, pin_tables)
     return pool, pin_tables

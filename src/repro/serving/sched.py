@@ -96,6 +96,13 @@ class SchedConfig:
     #: admissible worst-case pages per shard (0 = the engine default,
     #: b_local * max_pages — the capacity the pool is provisioned for)
     page_budget: int = 0
+    #: admissible worst-case CLS_STATE blocks per shard in a size-
+    #: classed config (0 = the engine default, b_local *
+    #: state_blocks_per_slot — what class 1 is provisioned for).  The
+    #: second budget dimension of admission: a shard must have headroom
+    #: in BOTH classes, since the classes never exchange blocks
+    #: (DESIGN.md §14)
+    state_budget: int = 0
     preemption: bool = True
     max_preemptions_per_tick: int = 2
     #: pinned-prefix pages budget per shard (0 disables pinning)
@@ -136,7 +143,7 @@ class AdmissionScheduler:
     """
 
     def __init__(self, config: SchedConfig, n_shards: int,
-                 page_budget: int):
+                 page_budget: int, state_budget: int = 0):
         self.config = config
         self.classes = sorted(config.classes, key=lambda c: -c.priority)
         self.by_name = {c.name: c for c in self.classes}
@@ -147,8 +154,13 @@ class AdmissionScheduler:
                                          for c in self.classes}
         self.n_shards = n_shards
         self.page_budget = (config.page_budget or page_budget)
+        #: fine-class (CLS_STATE) block budget per shard; 0 when the
+        #: engine runs a single class — the dimension then never binds
+        self.state_budget = (config.state_budget or state_budget)
         self.committed = [0] * n_shards             # worst-case pages
-        self.est_of: Dict[int, Tuple[int, int]] = {}   # slot -> (shard, est)
+        self.committed_state = [0] * n_shards       # worst-case blocks
+        # slot -> (shard, est_pages, est_state_blocks)
+        self.est_of: Dict[int, Tuple[int, int, int]] = {}
         self._seq = itertools.count()
         #: shards lost to failure (engine.lose_shard): excluded from
         #: placement; their budget leaves ``plan_serving_for`` capacity
@@ -221,17 +233,25 @@ class AdmissionScheduler:
         self.parked = still
 
     # ------------------------------------------------------ accounting
-    def on_admitted(self, slot: int, shard: int, est: int) -> None:
+    def on_admitted(self, slot: int, shard: int, est: int,
+                    est_state: int = 0) -> None:
         self.committed[shard] += est
-        self.est_of[slot] = (shard, est)
+        self.committed_state[shard] += est_state
+        self.est_of[slot] = (shard, est, est_state)
 
     def on_released(self, slot: int) -> None:
         """Slot finished or was preempted: uncommit its worst case."""
-        shard, est = self.est_of.pop(slot)
+        shard, est, est_state = self.est_of.pop(slot)
         self.committed[shard] -= est
+        self.committed_state[shard] -= est_state
 
     def headroom(self, shard: int, pinned_on) -> int:
         return self.page_budget - self.committed[shard] - pinned_on(shard)
+
+    def state_headroom(self, shard: int) -> int:
+        """Fine-class admission headroom (no pinning in CLS_STATE —
+        bounded state dies with its request)."""
+        return self.state_budget - self.committed_state[shard]
 
     # ------------------------------------------------------------ tick
     def tick(self, engine) -> None:
@@ -253,12 +273,14 @@ class AdmissionScheduler:
                 return
             cls, req = head
             est = engine.est_pages(req)
-            match, shard, blocked = self._place(engine, req, est)
+            est_state = engine.est_state_blocks(req)
+            match, shard, blocked = self._place(engine, req, est,
+                                                est_state)
             if blocked is None:
                 self.queues[cls.name].popleft()
                 slot = engine.admit(req, match, shard)
                 req._seq = next(self._seq)
-                self.on_admitted(slot, slot // engine.bl, est)
+                self.on_admitted(slot, slot // engine.bl, est, est_state)
                 continue
             if blocked == "pages" and self._evict_pins_for(engine, est):
                 continue
@@ -381,7 +403,7 @@ class AdmissionScheduler:
             return bs[0]
         return bs[-1]
 
-    def _place(self, engine, req, est):
+    def _place(self, engine, req, est, est_state: int = 0):
         """(match, shard, blocked): a shard-local prefix match, an
         admissible shard holding a free slot, or why not.
 
@@ -399,7 +421,9 @@ class AdmissionScheduler:
         pinned = engine.pinned_pages_on
         fits = [s for s in sorted(slots)
                 if s not in self.dead_shards
-                and est <= self.headroom(s, pinned)]
+                and est <= self.headroom(s, pinned)
+                and (est_state <= 0
+                     or est_state <= self.state_headroom(s))]
         if not fits:
             return None, None, "pages"
         best = None                       # (n_tokens, shard, match)

@@ -58,18 +58,32 @@ CTR_FREED = 1        # pages returned free this step (release + rollback)
 CTR_ROLLBACK = 2     # spec whole-page rollback (subset of CTR_FREED)
 CTR_DRAIN = 3        # pages drained lane -> shared by this rebalance
 CTR_REFILL = 4       # pages refilled shared -> lane by this rebalance
+CTR_SPILL = 5        # released pages that overflowed a full lane stack
+#                      and landed on the SHARED stack (free_n_metered) —
+#                      the row that makes the shared-free telescoping
+#                      shared' - shared == drain - refill + spill EXACT
 # Gauges (host min-accumulates across steps):
-CTR_SHARED_FREE = 5  # shared free-stack size after the step (low-water)
-CTR_MARGIN = 6       # §4.2 never-dry margin min(private_top) - ell
-N_CTR = 7
+CTR_SHARED_FREE = 6  # shared free-stack size after the step (low-water)
+CTR_MARGIN = 7       # §4.2 never-dry margin min(private_top) - ell
+N_CTR = 8
 
 #: counter-block row names, index-aligned with the CTR_* constants
 CTR_NAMES = ("alloc_pages", "freed_pages", "spec_rollback_pages",
              "rebalance_drain_pages", "rebalance_refill_pages",
-             "shared_free", "never_dry_margin")
+             "spill_pages", "shared_free", "never_dry_margin")
 #: which rows accumulate by summation (the rest are min-gauges)
-CTR_SUM_ROWS = (CTR_ALLOC, CTR_FREED, CTR_ROLLBACK, CTR_DRAIN, CTR_REFILL)
+CTR_SUM_ROWS = (CTR_ALLOC, CTR_FREED, CTR_ROLLBACK, CTR_DRAIN, CTR_REFILL,
+                CTR_SPILL)
 CTR_MIN_ROWS = (CTR_SHARED_FREE, CTR_MARGIN)
+
+
+def ctr_key(row: int, cls: int = 0) -> str:
+    """Accumulator key for counter-block row ``row`` of size class
+    ``cls``.  Class 0 keeps the historical un-suffixed names (single-
+    class snapshots stay bit-identical); class c >= 1 suffixes ``_c<c>``
+    — the telemetry class axis of DESIGN.md §14."""
+    name = CTR_NAMES[row]
+    return name if cls == 0 else f"{name}_c{cls}"
 
 
 # -------------------------------------------------------- counter schema
@@ -124,6 +138,8 @@ COUNTER_SCHEMA: Dict[str, str] = {
     # prefix-cache mirrors
     "trie_hits": "prefix-trie lookups that found a donor",
     "trie_misses": "prefix-trie lookups that found nothing",
+    # size-classed allocation plane (DESIGN.md §14)
+    "state_blocks_granted": "bounded-state blocks granted at admission",
 }
 
 #: counters that keep a running max instead of a sum
@@ -157,17 +173,21 @@ class Telemetry:
     """
 
     def __init__(self, dp: int = 1, tracer=None,
-                 flight: Optional["FlightRecorder"] = None):
+                 flight: Optional["FlightRecorder"] = None,
+                 n_classes: int = 1):
         self.dp = int(dp)
+        self.n_classes = int(n_classes)
         self.counters: Dict = {name: 0 for name in COUNTER_SCHEMA}
         for h in HIST_SCHEMA:
             self.counters[h] = {}
-        # per-shard sums from the device counter block
-        self.shard = {CTR_NAMES[r]: np.zeros(self.dp, np.int64)
-                      for r in CTR_SUM_ROWS}
+        # per-shard sums from the device counter block, one set of rows
+        # per size class (class 0 keeps the historical key names)
+        self.shard = {ctr_key(r, c): np.zeros(self.dp, np.int64)
+                      for c in range(self.n_classes) for r in CTR_SUM_ROWS}
         # per-shard min-gauges (low-water marks); None until first step
         self.low: Dict[str, Optional[np.ndarray]] = {
-            CTR_NAMES[r]: None for r in CTR_MIN_ROWS}
+            ctr_key(r, c): None
+            for c in range(self.n_classes) for r in CTR_MIN_ROWS}
         self.last_block: Optional[np.ndarray] = None
         if tracer is None:
             from .trace import Tracer
@@ -195,28 +215,36 @@ class Telemetry:
 
     # ------------------------------------------------ device counter block
     def absorb_counter_block(self, block) -> None:
-        """Accumulate one step's int32[N_CTR, DP] counter block (already
-        host-side — sliced off the packed status after the step's one
-        sync)."""
+        """Accumulate one step's int32[n_classes*N_CTR, DP] counter
+        block (already host-side — sliced off the packed status after
+        the step's one sync).  Rows are class-major: class c's N_CTR
+        rows start at ``c * N_CTR``."""
         blk = np.asarray(block, np.int64)
-        assert blk.shape == (N_CTR, self.dp), blk.shape
-        for r in CTR_SUM_ROWS:
-            self.shard[CTR_NAMES[r]] += blk[r]
-        for r in CTR_MIN_ROWS:
-            name = CTR_NAMES[r]
-            cur = self.low[name]
-            self.low[name] = (blk[r].copy() if cur is None
-                              else np.minimum(cur, blk[r]))
+        assert blk.shape == (self.n_classes * N_CTR, self.dp), blk.shape
+        for c in range(self.n_classes):
+            base = c * N_CTR
+            for r in CTR_SUM_ROWS:
+                self.shard[ctr_key(r, c)] += blk[base + r]
+            for r in CTR_MIN_ROWS:
+                name = ctr_key(r, c)
+                cur = self.low[name]
+                self.low[name] = (blk[base + r].copy() if cur is None
+                                  else np.minimum(cur, blk[base + r]))
         self.last_block = blk
 
-    def never_dry_margin_min(self) -> Optional[int]:
+    def never_dry_margin_min(self, cls: Optional[int] = None
+                             ) -> Optional[int]:
         """Worst §4.2 margin seen on any shard at any step (>= 0 means
-        the never-dry invariant held with that much slack to spare)."""
-        m = self.low["never_dry_margin"]
-        return None if m is None else int(m.min())
+        the never-dry invariant held with that much slack to spare).
+        Default: min over ALL classes — the invariant is per class, so
+        the worst class bounds the pool vector; pass ``cls`` for one."""
+        classes = range(self.n_classes) if cls is None else (cls,)
+        vals = [self.low[ctr_key(CTR_MARGIN, c)] for c in classes]
+        vals = [v for v in vals if v is not None]
+        return None if not vals else int(min(v.min() for v in vals))
 
-    def shared_low_water(self) -> Optional[int]:
-        m = self.low["shared_free"]
+    def shared_low_water(self, cls: int = 0) -> Optional[int]:
+        m = self.low[ctr_key(CTR_SHARED_FREE, cls)]
         return None if m is None else int(m.min())
 
     # ------------------------------------------------------------ exports
@@ -257,18 +285,19 @@ class Telemetry:
             emit(h, f"{h} buckets", "counter",
                  [((("bucket", b),), c)
                   for b, c in sorted(self.counters[h].items())])
-        for r in CTR_SUM_ROWS:
-            name = CTR_NAMES[r]
-            emit(name, f"device counter block: {name}", "counter",
-                 [((("shard", s),), int(v))
-                  for s, v in enumerate(self.shard[name])])
-        for r in CTR_MIN_ROWS:
-            name = CTR_NAMES[r] + "_min"
-            vals = self.low[CTR_NAMES[r]]
-            if vals is not None:
-                emit(name, f"low-water gauge: {name}", "gauge",
+        for c in range(self.n_classes):
+            for r in CTR_SUM_ROWS:
+                name = ctr_key(r, c)
+                emit(name, f"device counter block: {name}", "counter",
                      [((("shard", s),), int(v))
-                      for s, v in enumerate(vals)])
+                      for s, v in enumerate(self.shard[name])])
+            for r in CTR_MIN_ROWS:
+                name = ctr_key(r, c) + "_min"
+                vals = self.low[ctr_key(r, c)]
+                if vals is not None:
+                    emit(name, f"low-water gauge: {name}", "gauge",
+                         [((("shard", s),), int(v))
+                          for s, v in enumerate(vals)])
         m = self.never_dry_margin_min()
         if m is not None:
             emit("never_dry_margin_min_all", "worst §4.2 margin, any "

@@ -52,8 +52,8 @@ def engine_setup():
 
 def _conserved(eng):
     total = eng.pages_local * eng.dp
-    free = int(hier_pool.total_free(eng.state.pool))
-    live = int(hier_pool.num_live(eng.state.pool))
+    free = int(hier_pool.total_free(eng.state.pool.classes[0]))
+    live = int(hier_pool.num_live(eng.state.pool.classes[0]))
     assert free + live == total, "pages lost or duplicated"
 
 

@@ -486,12 +486,13 @@ class TestEngineMeshStorms:
         pages_local = eng4.pages_local
 
         def invariants(eng):
-            free_s = np.asarray(hier_pool.free_per_shard(eng.state.pool))
-            live_s = np.asarray(hier_pool.live_per_shard(eng.state.pool))
+            kv = eng.state.pool.classes[0]
+            free_s = np.asarray(hier_pool.free_per_shard(kv))
+            live_s = np.asarray(hier_pool.live_per_shard(kv))
             assert np.all(free_s + live_s == pages_local), (
                 f"seed {seed}: per-shard conservation broken "
                 f"(free={free_s.tolist()} live={live_s.tolist()})")
-            tops = np.asarray(eng.state.pool.private_top)
+            tops = np.asarray(kv.private_top)
             assert tops.min() >= ell, (
                 f"seed {seed}: a lane ran dry (min={tops.min()}, "
                 f"ell={ell}) — §4.2 violated")

@@ -180,13 +180,13 @@ class TestEnginePrefixSharing:
         psz = cfg.page_size
         eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
                             chunk_size=16)
-        total = eng.state.pool.shared.free_ids.shape[1]
+        total = eng.state.pool.classes[0].shared.free_ids.shape[1]
         pa = list(range(2, 22))                          # 20 tokens
         ra = Request(0, prompt=list(pa), max_new_tokens=3)
         eng.submit(ra)
         eng.step(); eng.step()                           # prefill 16 + 4
         assert eng.pages_in_use() == 3                   # ceil(20/8)
-        _pool_invariants(eng.state.pool, total)
+        _pool_invariants(eng.state.pool.classes[0], total)
 
         pb = pa[:18] + [200, 201, 202, 203, 204, 205]    # lcp 18 = 2p + 2
         rb = Request(1, prompt=list(pb), max_new_tokens=3)
@@ -196,15 +196,15 @@ class TestEnginePrefixSharing:
         assert eng.stats["prefix_shared_tokens"] == 18
         # A: 3 pages; B: 2 shared (not recounted) + 1 COW = 4 total
         assert eng.pages_in_use() == 4
-        rc = np.asarray(eng.state.pool.shared.refcount)
+        rc = np.asarray(eng.state.pool.classes[0].shared.refcount)
         assert (rc == 2).sum() == 2 and (rc == 1).sum() == 2
-        _pool_invariants(eng.state.pool, total)
+        _pool_invariants(eng.state.pool.classes[0], total)
 
         eng.run(max_steps=50)                            # A finishes first
         assert ra.done and rb.done
         assert eng.pages_in_use() == 0 and eng.page_occupancy() == 0.0
-        assert int(hier_pool.num_live(eng.state.pool)) == 0
-        _pool_invariants(eng.state.pool, total)
+        assert int(hier_pool.num_live(eng.state.pool.classes[0])) == 0
+        _pool_invariants(eng.state.pool.classes[0], total)
 
     def test_cow_divergence_keeps_donor_intact(self, engine_setup):
         """The sharer's divergent tokens go to its private COW page; the

@@ -34,11 +34,12 @@ def engine_setup():
 
 def _conserved(eng):
     total = eng.pages_local * eng.dp
-    free = int(hier_pool.total_free(eng.state.pool))
-    live = int(hier_pool.num_live(eng.state.pool))
+    kv = eng.state.pool.classes[0]
+    free = int(hier_pool.total_free(kv))
+    live = int(hier_pool.num_live(kv))
     assert free + live == total, "pages lost or duplicated"
     # the low-water query agrees with the pool-wide free count
-    per_shard = np.asarray(hier_pool.free_per_shard(eng.state.pool))
+    per_shard = np.asarray(hier_pool.free_per_shard(kv))
     assert per_shard.shape == (eng.dp,) and per_shard.sum() == free
     return live
 
@@ -247,11 +248,11 @@ class TestPinnedPrefixes:
             assert eng.pages_in_use() == 2, "only the pin survives drain"
             live = _conserved(eng)
             assert live == 2
-            rc = np.asarray(eng.state.pool.shared.refcount[0])
+            rc = np.asarray(eng.state.pool.classes[0].shared.refcount[0])
             assert (rc == 1).sum() == 2 and (rc >= 2).sum() == 0
             # the pin row's own view agrees (cache-owner refcounts)
             shard_pool = jax.tree.map(lambda a: a[0],
-                                      eng.state.pool.shared)
+                                      eng.state.pool.classes[0].shared)
             row_rc = np.asarray(block_pool.refcounts_of(
                 shard_pool, eng.pin_tables[0].reshape(-1)))
             assert (row_rc == 1).sum() == 2
@@ -265,7 +266,7 @@ class TestPinnedPrefixes:
             assert eng.stats["pin_hit_tokens"] == 16
             assert eng.flush_pins() >= 1
             assert eng.page_occupancy() == 0.0
-            assert int(hier_pool.num_live(eng.state.pool)) == 0
+            assert int(hier_pool.num_live(eng.state.pool.classes[0])) == 0
 
     def test_pin_engages_for_single_token_requests(self, engine_setup):
         """Regression: a request that finishes on its prompt-completion

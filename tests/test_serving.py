@@ -92,10 +92,11 @@ def test_decode_step_chunk_matches_single_token(arch):
 
     np.testing.assert_allclose(outs1, outs2, atol=1e-5, rtol=1e-5)
     assert np.array_equal(np.asarray(s1.seq_lens), np.asarray(s2.seq_lens))
-    assert np.array_equal(np.asarray(s1.pool.private_top),
-                          np.asarray(s2.pool.private_top))
-    assert np.array_equal(np.asarray(s1.pool.shared.top),
-                          np.asarray(s2.pool.shared.top))
+    kv1, kv2 = s1.pool.classes[0], s2.pool.classes[0]
+    assert np.array_equal(np.asarray(kv1.private_top),
+                          np.asarray(kv2.private_top))
+    assert np.array_equal(np.asarray(kv1.shared.top),
+                          np.asarray(kv2.shared.top))
 
 
 def test_decode_step_loop_survives_lane_exhaustion(engine_setup):
@@ -105,7 +106,7 @@ def test_decode_step_loop_survives_lane_exhaustion(engine_setup):
     the page table and silently corrupt KV.  30 tokens = 4 pages at
     psz=8, twice the ell=2 lane stock."""
     cfg, params = engine_setup
-    from repro.core import hier_pool
+    from repro.core import classed_pool, hier_pool
     from repro.models.decode_init import empty_decode_state
     rng = np.random.RandomState(5)
     toks = rng.randint(1, 255, (1, 2, 30)).astype(np.int32)
@@ -119,15 +120,16 @@ def test_decode_step_loop_survives_lane_exhaustion(engine_setup):
         outs1.append(np.asarray(lg))
         lg, s2 = models.decode_step(cfg, params, jnp.asarray(toks[:, :, t]),
                                     s2)
-        s2 = s2._replace(pool=hier_pool.rebalance_dp(s2.pool))
+        s2 = s2._replace(pool=classed_pool.rebalance_dp(s2.pool))
         outs2.append(np.asarray(lg))
     np.testing.assert_allclose(np.stack(outs1), np.stack(outs2),
                                atol=1e-5, rtol=1e-5)
     # all written pages mapped, none through a clamped NULL entry
     assert np.all(np.asarray(s1.page_tables)[:, :, :4] >= 0)
-    total = s1.pool.shared.free_ids.shape[1]
-    free = int(hier_pool.total_free(s1.pool))
-    assert free + int(hier_pool.num_live(s1.pool)) == total
+    kv = s1.pool.classes[0]
+    total = kv.shared.free_ids.shape[1]
+    free = int(hier_pool.total_free(kv))
+    assert free + int(hier_pool.num_live(kv)) == total
 
 
 def test_decode_step_chunk_pool_denial_appends_nothing(engine_setup):
@@ -138,11 +140,12 @@ def test_decode_step_chunk_pool_denial_appends_nothing(engine_setup):
     from repro.models.decode_init import empty_decode_state
     state = empty_decode_state(cfg, 1, 1, 64)
     # drain the slot lanes AND the shared pool: a chunk must be denied
-    pool = state.pool._replace(
-        private_top=jnp.zeros_like(state.pool.private_top),
-        shared=state.pool.shared._replace(
-            top=jnp.zeros_like(state.pool.shared.top)))
-    state = state._replace(pool=pool)
+    kv = state.pool.classes[0]
+    kv = kv._replace(
+        private_top=jnp.zeros_like(kv.private_top),
+        shared=kv.shared._replace(top=jnp.zeros_like(kv.shared.top)))
+    state = state._replace(pool=state.pool._replace(
+        classes=(kv,) + state.pool.classes[1:]))
     toks = jnp.ones((1, 1, 8), jnp.int32)
     _, state, ok = models.decode_step_chunk(
         cfg, params, toks, state, jnp.full((1, 1), 8, jnp.int32))

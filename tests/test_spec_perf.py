@@ -335,7 +335,7 @@ class TestGatingFlipIdentity:
         eng = ServingEngine(cfg, params, dp=1, b_local=1, max_len=64,
                             speculate=True, draft_len=4)
         _pin_costs(eng, {1: 1.25, 2: 1.5, 3: 1.75, 4: 2.0})
-        ell = hier_pool.lane_ell(eng.state.pool)
+        ell = hier_pool.lane_ell(eng.state.pool.classes[0])
         key = eng.spec_store.key_of(prompt)
         eng.spec_store.record(key, tuple(prompt[len(key):])
                               + tuple(range(40, 60)))
@@ -347,10 +347,11 @@ class TestGatingFlipIdentity:
             if steps in flips:
                 eng.spec_store._accept[key] = flips[steps]
             eng.step()
-            free_s = np.asarray(hier_pool.free_per_shard(eng.state.pool))
-            live_s = np.asarray(hier_pool.live_per_shard(eng.state.pool))
+            kv = eng.state.pool.classes[0]
+            free_s = np.asarray(hier_pool.free_per_shard(kv))
+            live_s = np.asarray(hier_pool.live_per_shard(kv))
             assert np.all(free_s + live_s == eng.pages_local)
-            assert np.asarray(eng.state.pool.private_top).min() >= ell
+            assert np.asarray(kv.private_top).min() >= ell
             steps += 1
         assert r.done
         assert eng.page_occupancy() == 0.0

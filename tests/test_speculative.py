@@ -55,7 +55,7 @@ class TestSpeculativeIdentity:
 
         eng = ServingEngine(cfg, params, dp=2, b_local=2, max_len=64,
                             speculate=True, draft_len=4)
-        ell = hier_pool.lane_ell(eng.state.pool)
+        ell = hier_pool.lane_ell(eng.state.pool.classes[0])
         reqs = [Request(i, prompt=list(p), max_new_tokens=6)
                 for i, p in enumerate(prompts)]
         for r in reqs:
@@ -64,12 +64,13 @@ class TestSpeculativeIdentity:
             if eng.idle():
                 break
             eng.step()
-            free_s = np.asarray(hier_pool.free_per_shard(eng.state.pool))
-            live_s = np.asarray(hier_pool.live_per_shard(eng.state.pool))
+            kv = eng.state.pool.classes[0]
+            free_s = np.asarray(hier_pool.free_per_shard(kv))
+            live_s = np.asarray(hier_pool.live_per_shard(kv))
             assert np.all(free_s + live_s == eng.pages_local), (
                 f"per-shard conservation broken after a step "
                 f"(free={free_s.tolist()} live={live_s.tolist()})")
-            tops = np.asarray(eng.state.pool.private_top)
+            tops = np.asarray(kv.private_top)
             assert tops.min() >= ell, (
                 f"a lane ran dry after a verify/rollback step "
                 f"(min={tops.min()}, ell={ell}) — §4.2 violated")

@@ -25,8 +25,8 @@ from repro.serving import chaos
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.telemetry import (CTR_ALLOC, CTR_DRAIN, CTR_FREED,
                                      CTR_MARGIN, CTR_REFILL, CTR_ROLLBACK,
-                                     CTR_SHARED_FREE, N_CTR, FlightRecorder,
-                                     Telemetry, parse_prom)
+                                     CTR_SHARED_FREE, CTR_SPILL, N_CTR,
+                                     FlightRecorder, Telemetry, parse_prom)
 from repro.serving.trace import Tracer, validate_chrome
 
 
@@ -63,6 +63,8 @@ class Recount:
         self.observed = []          # matching int ctr blocks [N_CTR, DP]
         self.margins = []           # device-read min(private_top)-ell
         self.preempt_freed = 0      # pages released outside the step
+        self.host_freed = []        # per step: host-side free since prev
+        self._host_freed = False
         self._pending = None
         self._post_shared = None
         self._wrap_variants()
@@ -105,6 +107,7 @@ class Recount:
         def preempt(slot):
             # refcount-1 release outside the step's counter block
             self.preempt_freed += -(-eng._fed.get(slot, 0) // self.psz)
+            self._host_freed = True
             return orig(slot)
         eng.preempt = preempt
 
@@ -145,17 +148,20 @@ class Recount:
         self.expected.append({"alloc": alloc, "roll": roll,
                               "freed": freed})
         self.observed.append(ctr.astype(np.int64))
+        self.host_freed.append(self._host_freed)
+        self._host_freed = False
         # device-read invariant gauges (test-only sync): the §4.2
-        # margin and shared level the block must have reported
-        pool = eng.state.pool
-        ell = pool.private_ids.shape[-1] // 3
+        # margin and shared level the block must have reported (the
+        # KV class — these storms run single-class engines)
+        kv = eng.state.pool.classes[0]
+        ell = kv.private_ids.shape[-1] // 3
         self.margins.append(
-            np.asarray(jnp.min(pool.private_top, axis=-1)) - ell)
-        self._post_shared = np.asarray(pool.shared.top).copy()
+            np.asarray(jnp.min(kv.private_top, axis=-1)) - ell)
+        self._post_shared = np.asarray(kv.shared.top).copy()
 
     def check(self):
         assert self.expected, "no steps recorded"
-        ell = self.eng.state.pool.private_ids.shape[-1] // 3
+        ell = self.eng.state.pool.classes[0].private_ids.shape[-1] // 3
         for i, (exp, obs) in enumerate(zip(self.expected, self.observed)):
             np.testing.assert_array_equal(
                 obs[CTR_ALLOC], exp["alloc"],
@@ -176,16 +182,25 @@ class Recount:
             # drain/refill move whole batches of ell per lane
             assert (obs[CTR_DRAIN] % ell == 0).all()
             assert (obs[CTR_REFILL] % ell == 0).all()
-        # The shared free level moves by +drain -refill each step, plus
-        # a non-negative lane-overflow spill from in-step release
-        # (free_n spills past the 3*ell lane cap) — so step-over-step
-        # the gauge telescopes as an inequality that is tight in the
-        # common no-spill case, and the final level matches the device.
+        # The shared free level moves by +drain -refill +spill each
+        # step — the lane-cap overflow of every IN-STEP release is now
+        # metered in CTR_SPILL, so the telescoping is an exact identity,
+        # not the old drain/refill-only floor inequality.  Host-side
+        # frees between steps (preempt's separate jitted release) spill
+        # to shared OUTSIDE any counter block, so on steps following one
+        # the identity relaxes back to a (tighter-than-before) floor.
         for i in range(1, len(self.observed)):
             prev, obs = self.observed[i - 1], self.observed[i]
-            floor = prev[CTR_SHARED_FREE] + obs[CTR_DRAIN] - obs[CTR_REFILL]
-            assert (obs[CTR_SHARED_FREE] >= floor).all(), \
-                f"step {i}: shared-free fell below drain/refill floor"
+            floor = (prev[CTR_SHARED_FREE] + obs[CTR_DRAIN]
+                     - obs[CTR_REFILL] + obs[CTR_SPILL])
+            if self.host_freed[i]:
+                assert (obs[CTR_SHARED_FREE] >= floor).all(), \
+                    f"step {i}: shared-free fell below the spill floor"
+            else:
+                np.testing.assert_array_equal(
+                    obs[CTR_SHARED_FREE], floor,
+                    err_msg=f"step {i}: shared-free telescoping is not "
+                            f"exact (drain/refill/spill)")
         np.testing.assert_array_equal(
             self.observed[-1][CTR_SHARED_FREE], self._post_shared,
             err_msg="final shared-free gauge disagrees with device state")
@@ -225,6 +240,39 @@ def test_counter_block_exact_on_storm(engine_setup):
     assert all(r.done for r in reqs)
     rc.check()
     _alloc_freed_balance(rc)
+    assert eng.page_occupancy() == 0.0
+
+
+def test_counter_block_exact_under_forced_spill(engine_setup):
+    """Spill-forcing trace: a request that completes holding more pages
+    than a whole lane can hold (> 3*ell) MUST overflow the lane cap at
+    its in-step release — CTR_SPILL meters the overflow and the shared-
+    free telescoping stays an exact identity through it (the bug the
+    spill row fixes: unmetered spill made the gauge drift off the
+    drain/refill ledger)."""
+    cfg, params = engine_setup
+    rng = np.random.RandomState(8)
+    eng = ServingEngine(cfg, params, dp=1, b_local=2, max_len=64,
+                        prefix_sharing=False)
+    kv = eng.state.pool.classes[0]
+    ell = kv.private_ids.shape[-1] // 3
+    cap_tokens = 3 * ell * cfg.page_size
+    rc = Recount(eng)
+    # each request retires > 3*ell pages in one release: guaranteed
+    # lane-cap overflow no matter what the lane held beforehand
+    reqs = [Request(i, prompt=list(rng.randint(1, 255, cap_tokens + 2)),
+                    max_new_tokens=3) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=500)
+    assert all(r.done for r in reqs)
+    rc.check()
+    _alloc_freed_balance(rc)
+    spilled = int(sum(obs[CTR_SPILL].sum() for obs in rc.observed))
+    assert spilled > 0, "trace never forced a lane-cap spill"
+    np.testing.assert_array_equal(
+        eng.telemetry.shard["spill_pages"],
+        sum(obs[CTR_SPILL] for obs in rc.observed))
     assert eng.page_occupancy() == 0.0
 
 
