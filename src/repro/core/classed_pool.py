@@ -40,6 +40,12 @@ from .hier_pool import HierPool
 CLS_KV = 0
 #: class index of the fine bounded-state class in a two-class config.
 CLS_STATE = 1
+#: class index of the read-only shared expert-weight class in a
+#: three-class (expert-paged MoE) config.  Expert pages are never
+#: written after load: residency is managed host-side through the same
+#: addref/free_shared protocol pins use, with refcount = one ledger ref
+#: + one ref per active batch routed through the expert (DESIGN.md §15).
+CLS_EXPERT = 2
 
 
 class ClassSpec(NamedTuple):

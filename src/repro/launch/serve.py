@@ -74,11 +74,24 @@ def main(argv=None):
                     help="fraction of requests repeating a previous full "
                          "prompt (the speculative fast path)")
     ap.add_argument("--size-classes", type=int, default=1,
-                    choices=(1, 2),
+                    choices=(1, 2, 3),
                     help="allocation-plane size classes (DESIGN.md "
                          "§14): 1 = single coarse KV class (the "
                          "pre-classed plane, bit-identical), 2 = add "
-                         "the fine bounded-state class")
+                         "the fine bounded-state class, 3 = add the "
+                         "read-only expert-weight class (§15)")
+    ap.add_argument("--expert-paging", action="store_true",
+                    help="page MoE expert weights through the classed "
+                         "pool (CLS_EXPERT; DESIGN.md §15) — implies "
+                         "size-classes >= 3; no-op for dense models")
+    ap.add_argument("--expert-budget", type=int, default=0,
+                    help="resident expert pages per shard (0 = full "
+                         "residency; 3 pages per expert per MoE layer "
+                         "slot)")
+    ap.add_argument("--expert-frac", type=float, default=0.0,
+                    help="fraction of requests restricted to a random "
+                         "half of the experts (footprint skew the "
+                         "load-aware admission learns)")
     ap.add_argument("--mesh", choices=("auto", "off"), default="auto",
                     help="shard_map the allocation plane over a ('dp',) "
                          "device mesh when >= dp devices exist "
@@ -128,6 +141,8 @@ def main(argv=None):
             spec_gate=not args.no_spec_gate,
             mesh=("auto" if args.mesh == "auto" else None),
             size_classes=args.size_classes,
+            expert_paging=args.expert_paging,
+            expert_budget=(args.expert_budget or None),
             sched=SchedConfig(pin_pages=args.pin_pages,
                               page_budget=args.page_budget,
                               chunk_buckets=buckets),
@@ -156,9 +171,17 @@ def main(argv=None):
             prompt = hot + list(rng.randint(1, cfg.vocab - 1,
                                             rng.randint(4, 12)))
         prompts.append(prompt)
+        experts = None
+        if (cfg.moe is not None and args.expert_frac > 0
+                and rng.random_sample() < args.expert_frac):
+            E = cfg.moe.num_experts
+            k = max(cfg.moe.top_k, E // 2)
+            experts = tuple(
+                int(e) for e in rng.choice(E, size=k, replace=False))
         engine.submit(Request(rid, prompt=prompt,
                               max_new_tokens=args.max_new, slo=slo,
-                              deadline_s=args.deadline_s))
+                              deadline_s=args.deadline_s,
+                              experts=experts))
     t0 = time.time()
     crashes = 0
     while True:
@@ -201,7 +224,17 @@ def main(argv=None):
     occ = engine.shard_occupancy()
     print(f"shard occupancy: mean={occ['pages_mean_shard']} "
           f"peak={occ['pages_peak_shard']} pages per shard")
+    if engine.expert_paging:
+        hr = engine.telemetry.expert_hit_rate()
+        dropped = int(engine.telemetry.shard["moe_dropped_tokens"].sum())
+        print(f"expert paging: budget={engine.expert_budget} pages/shard "
+              f"hit_rate={'n/a' if hr is None else f'{hr:.2f}'} "
+              f"loads={s['expert_load_pages']} "
+              f"evictions={s['expert_evictions']} "
+              f"resident_peak={s['expert_pages_resident_peak']} "
+              f"dropped_tokens={dropped}")
     engine.flush_pins()
+    engine.flush_experts()
     if faults:
         print(f"[chaos] fired={injector.log} crashes={crashes} "
               f"shards_lost={sorted(engine.lost_shards)} "

@@ -121,7 +121,13 @@ def decode_state_shardings(cfg: ModelConfig, state_defs: tfm.DecodeState,
         pool=jax.tree.map(pool_spec, state_defs.pool),
         enc_kv=enc_kv,
         state_tables=(None if state_defs.state_tables is None
-                      else _ns(mesh, P(dpa, None, None))))
+                      else _ns(mesh, P(dpa, None, None))),
+        expert_pages=(None if state_defs.expert_pages is None
+                      else _ns(mesh, P(dpa, None, None))),
+        expert_tables=(None if state_defs.expert_tables is None
+                       else jax.tree.map(
+                           lambda s: _ns(mesh, P(None, dpa, None, None)),
+                           state_defs.expert_tables)))
 
 
 # --------------------------------------------- serving dp-mesh partitioning
@@ -155,7 +161,10 @@ def serve_state_pspecs(state: tfm.DecodeState) -> tfm.DecodeState:
         seq_lens=P("dp"),
         pool=jax.tree.map(lambda _: P("dp"), state.pool),
         enc_kv=None if state.enc_kv is None else ax1(state.enc_kv),
-        state_tables=None if state.state_tables is None else P("dp"))
+        state_tables=None if state.state_tables is None else P("dp"),
+        expert_pages=None if state.expert_pages is None else P("dp"),
+        expert_tables=(None if state.expert_tables is None
+                       else ax1(state.expert_tables)))
 
 
 def serve_shardings(mesh: Mesh, pspecs):

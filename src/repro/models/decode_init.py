@@ -20,15 +20,18 @@ from .transformer import DecodeState, decode_state_defs, _positions
 
 def empty_decode_state(cfg, dp: int, b_local: int, max_len: int,
                        chunk: int | None = None,
-                       size_classes: int = 1) -> DecodeState:
+                       size_classes: int = 1,
+                       expert_budget: int | None = None) -> DecodeState:
     """Concrete zero state; pages live in a per-shard size-classed
     two-level pool vector with one private lane per slot per class
     (``chunk`` sizes the KV lane batch ``ell`` — see
     :func:`repro.models.transformer.pool_ell`; ``size_classes`` sets
     the class vector — see :func:`~repro.models.transformer.
-    pool_class_specs`)."""
+    pool_class_specs`; ``expert_budget`` sizes the CLS_EXPERT class
+    when ``size_classes >= 3``)."""
     defs = decode_state_defs(cfg, dp, b_local, max_len, chunk=chunk,
-                             size_classes=size_classes)
+                             size_classes=size_classes,
+                             expert_budget=expert_budget)
 
     def zeros(sds):
         return jnp.zeros(sds.shape, sds.dtype)
@@ -49,8 +52,14 @@ def empty_decode_state(cfg, dp: int, b_local: int, max_len: int,
     state_tables = None
     if defs.state_tables is not None:
         state_tables = jnp.full(defs.state_tables.shape, -1, jnp.int32)
+    expert_pages = expert_tables = None
+    if defs.expert_pages is not None:
+        expert_pages = zeros(defs.expert_pages)
+        expert_tables = jax.tree.map(
+            lambda s: jnp.full(s.shape, -1, jnp.int32), defs.expert_tables)
     return DecodeState(kv_pages, rings, rec, page_tables, seq_lens,
-                       pool, enc_kv, state_tables)
+                       pool, enc_kv, state_tables, expert_pages,
+                       expert_tables)
 
 
 def empty_serve_arrays(dp: int, b_local: int):

@@ -91,7 +91,7 @@ def decode_step(cfg, params, tokens, state: DecodeState, active=None):
     DP, Bl = tokens.shape
     if active is None:
         active = jnp.ones((DP, Bl), bool)
-    x, state = forward_decode_chunk(
+    x, state, _ = forward_decode_chunk(
         cfg, params, tokens[:, :, None], state,
         active.astype(jnp.int32), active=active)
     logits = logits_apply(cfg, params["embed"], x[:, :, 0])
@@ -115,7 +115,7 @@ def decode_step_chunk(cfg, params, tokens, state: DecodeState, lens,
         active = jnp.ones(tokens.shape[:2], bool)
     asked = jnp.where(active, jnp.clip(lens.astype(jnp.int32), 0, T), 0)
     base = state.seq_lens
-    x, state = forward_decode_chunk(cfg, params, tokens, state, lens,
-                                    active=active)
+    x, state, _ = forward_decode_chunk(cfg, params, tokens, state, lens,
+                                       active=active)
     logits = logits_apply(cfg, params["embed"], x)
     return logits, state, state.seq_lens - base == asked

@@ -57,11 +57,20 @@ def _dispatch_indices(eids, E, C):
     return keep, dest, t_s, order
 
 
+#: router-logit fill for experts outside a row's admitted footprint.
+#: Large but FINITE: an all-masked row still softmaxes to finite
+#: (garbage) gates instead of NaN — its output is discarded anyway.
+MASK_NEG = -1e30
+
+
 def _dispatch_compute(params, x_flat, gates, eids, C):
-    """Sort-based dispatch for one token group (flat / decode path)."""
+    """Sort-based dispatch for one token group (flat / decode path).
+    Returns (out, (keep, t_s, e_s)) — the routing meta feeds the
+    capacity-drop / expert-touch meters."""
     N, d = x_flat.shape
     E = params["router"].shape[1]
     keep, dest, t_s, order = _dispatch_indices(eids, E, C)
+    e_s = eids.reshape(-1)[order]
     g_s = gates.reshape(-1)[order]
 
     buf = jnp.zeros((E * C, d), x_flat.dtype)
@@ -76,11 +85,24 @@ def _dispatch_compute(params, x_flat, gates, eids, C):
     gathered = jnp.where(keep[:, None], y[jnp.minimum(dest, E * C - 1)], 0.0)
     out = jnp.zeros((N, d), x_flat.dtype)
     out = out.at[t_s].add(gathered * g_s[:, None].astype(x_flat.dtype))
-    return out
+    return out, (keep, t_s, e_s)
 
 
-def moe_apply(cfg, params, x) -> jax.Array:
-    """x: [B, S, d] -> [B, S, d].
+def moe_apply(cfg, params, x, *, expert_mask=None, token_valid=None,
+              metered: bool = False):
+    """x: [B, S, d] -> [B, S, d] (or ``(out, dropped, routed)`` when
+    ``metered``: ``dropped`` int32[B] counts capacity-overflow-dropped
+    (token, expert) assignments of VALID tokens per row, ``routed``
+    int32[B, E] counts valid kept assignments per expert).
+
+    ``expert_mask`` (bool [B, E]) restricts each row's routing to its
+    admitted expert footprint (expert-paged serving, DESIGN.md §15):
+    out-of-footprint logits take :data:`MASK_NEG` BEFORE top_k, so a
+    footprint row never routes to a non-resident expert.  An all-True
+    mask selects exactly the unmasked logits — value-identical to no
+    mask.  ``token_valid`` (bool [B, S]) marks real token positions for
+    the meters (padding tokens route and occupy capacity exactly as
+    before, but never count as drops or touches).
 
     Train/prefill path: per-row sorted dispatch (vmapped scatter/gather —
     row-local, so sorts never cross shards) but **batched expert einsums
@@ -102,15 +124,30 @@ def moe_apply(cfg, params, x) -> jax.Array:
     logits = jax.lax.dot_general(
         x, params["router"].astype(x.dtype), (((2,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                   # [B,S,E]
+    if expert_mask is not None:
+        logits = jnp.where(expert_mask[:, None, :], logits,
+                           jnp.float32(MASK_NEG))
     gates, eids = jax.lax.top_k(logits, k)
     gates = jax.nn.softmax(gates, axis=-1)
 
+    valid = (jnp.ones((B, S), bool) if token_valid is None
+             else token_valid.astype(bool))
+
     if S == 1:
         C = _capacity(k, B, E, cf)
-        out = _dispatch_compute(
+        out, (keep, t_s, e_s) = _dispatch_compute(
             params, x.reshape(B, d), gates.reshape(B, k),
             eids.reshape(B, k), C)
-        return out.reshape(B, S, d)
+        out = out.reshape(B, S, d)
+        if not metered:
+            return out
+        # flat path: token index == row index (S == 1)
+        v_s = valid.reshape(B)[t_s]
+        dropped = jnp.zeros((B,), jnp.int32).at[t_s].add(
+            (v_s & ~keep).astype(jnp.int32))
+        routed = jnp.zeros((B, E), jnp.int32).at[t_s, e_s].add(
+            (v_s & keep).astype(jnp.int32))
+        return out, dropped, routed
 
     C = _capacity(k, S, E, cf)
 
@@ -118,7 +155,8 @@ def moe_apply(cfg, params, x) -> jax.Array:
         keep, dest, t_s, order = _dispatch_indices(er, E, C)
         buf = jnp.zeros((E * C, d), xr.dtype)
         buf = buf.at[dest].set(xr[t_s], mode="drop")
-        return buf.reshape(E, C, d), (keep, dest, t_s, order)
+        return buf.reshape(E, C, d), (keep, dest, t_s, order,
+                                      er.reshape(-1)[order])
 
     buf, meta = jax.vmap(row_scatter)(x, eids)       # [B, E, C, d]
     buf = constrain_batch(buf)
@@ -129,7 +167,7 @@ def moe_apply(cfg, params, x) -> jax.Array:
     y = constrain_batch(y.astype(x.dtype))
 
     def row_combine(yr, gr, m):
-        keep, dest, t_s, order = m
+        keep, dest, t_s, order, e_s = m
         g_s = gr.reshape(-1)[order]
         yf = yr.reshape(E * C, d)
         gathered = jnp.where(keep[:, None],
@@ -137,7 +175,20 @@ def moe_apply(cfg, params, x) -> jax.Array:
         out = jnp.zeros((S, d), yr.dtype)
         return out.at[t_s].add(gathered * g_s[:, None].astype(yr.dtype))
 
-    return jax.vmap(row_combine)(y, gates, meta)
+    out = jax.vmap(row_combine)(y, gates, meta)
+    if not metered:
+        return out
+
+    def row_meter(m, vr):
+        keep, dest, t_s, order, e_s = m
+        v_s = vr[t_s]
+        dropped = jnp.sum(v_s & ~keep).astype(jnp.int32)
+        routed = jnp.zeros((E,), jnp.int32).at[e_s].add(
+            (v_s & keep).astype(jnp.int32))
+        return dropped, routed
+
+    dropped, routed = jax.vmap(row_meter)(meta, valid)
+    return out, dropped, routed
 
 
 def aux_load_balance_loss(cfg, logits_mean_prob, fraction_assigned):

@@ -245,6 +245,16 @@ class DecodeState(NamedTuple):
                  CLS_STATE block grants backing each slot's bounded
                  state (granted at admission, freed at release); None
                  in a single-class config
+    expert_pages: optional [DP, NB2, d_model*d_ff] — CLS_EXPERT page
+                 payloads (expert-paged MoE, DESIGN.md §15): each page
+                 holds exactly one expert weight matrix, flat.  Written
+                 only by the host-side expert loader; the jitted step
+                 reads them via gathers (read-only shared pages).
+    expert_tables: optional dict pos -> int32 [stack, DP, E, EXPERT_PPE]
+                 — page ids of each MoE layer slot's experts (w_gate,
+                 w_up, w_down), NULL for non-resident.  Mutated only by
+                 the host-side ledger (load/evict); None when expert
+                 paging is off
     """
     kv_pages: Dict[str, Tuple[jax.Array, jax.Array]]
     rings: Dict[str, Tuple[jax.Array, jax.Array]]
@@ -254,6 +264,31 @@ class DecodeState(NamedTuple):
     pool: classed_pool.ClassedPool
     enc_kv: Any
     state_tables: Any = None
+    expert_pages: Any = None
+    expert_tables: Any = None
+
+
+#: pages per expert in the CLS_EXPERT class: one page per weight matrix
+#: (w_gate, w_up, w_down), each exactly d_model*d_ff elements flat.
+EXPERT_PPE = 3
+
+
+def moe_positions(cfg) -> Tuple[list, list]:
+    """(pattern MoE positions, remainder MoE positions) that carry an
+    expert FFN — the layer slots the expert page tables index."""
+    pat = [f"pos{j}" for j, k in enumerate(cfg.pattern)
+           if is_moe_kind(k) and base_kind(k) != "ssd" and cfg.d_ff]
+    rem = [f"rem{j}" for j, k in enumerate(cfg.remainder)
+           if is_moe_kind(k) and base_kind(k) != "ssd" and cfg.d_ff]
+    return pat, rem
+
+
+def expert_layer_slots(cfg) -> int:
+    """Total MoE layer slots = scanned groups x pattern MoE positions +
+    remainder MoE positions (each slot owns E experts x EXPERT_PPE
+    potential pages)."""
+    pat, rem = moe_positions(cfg)
+    return cfg.n_groups * len(pat) + len(rem)
 
 
 def _positions(cfg) -> Dict[str, list]:
@@ -325,15 +360,22 @@ def state_blocks_per_slot(cfg, max_len: int) -> int:
 
 def pool_class_specs(cfg, b_local: int, max_len: int,
                      chunk: Optional[int] = None,
-                     size_classes: int = 1) -> Tuple[ClassSpec, ...]:
-    """The static class vector (DESIGN.md §14), sized per class.
+                     size_classes: int = 1,
+                     expert_budget: Optional[int] = None
+                     ) -> Tuple[ClassSpec, ...]:
+    """The static class vector (DESIGN.md §14/§15), sized per class.
 
     Class 0 (CLS_KV) is the coarse paged-KV class: the pre-classed
     single-pool sizing verbatim — worst-case live pages for every local
     slot at max length PLUS fully-stocked lanes (3*ell per slot), the
     §4.2 slack.  With ``size_classes >= 2``, class 1 (CLS_STATE) is the
     fine bounded-state class with the same per-class slack rule at its
-    own granularity and demand (``state_blocks_per_slot``).
+    own granularity and demand (``state_blocks_per_slot``).  With
+    ``size_classes >= 3``, class 2 (CLS_EXPERT) is the read-only
+    expert-weight class: ``expert_budget`` pages of ``d_model * d_ff``
+    elements each (default: full residency — every expert of every MoE
+    layer slot), plus the same 3*ell slack so the per-class §4.2
+    argument holds verbatim.
     """
     psz = cfg.page_size
     max_pages = max(max_len // psz, 1)
@@ -348,12 +390,22 @@ def pool_class_specs(cfg, b_local: int, max_len: int,
             page_size=state_page_tokens(cfg),
             num_blocks=b_local * sbs + 3 * ell1 * b_local,
             num_lanes=b_local, ell=ell1))
+    if size_classes >= 3:
+        if expert_budget is None:
+            expert_budget = (expert_layer_slots(cfg)
+                             * cfg.moe.num_experts * EXPERT_PPE)
+        ell2 = 2       # loads/evictions are host-paced, not in-step
+        specs.append(ClassSpec(
+            page_size=cfg.d_model * cfg.d_ff,
+            num_blocks=int(expert_budget) + 3 * ell2 * b_local,
+            num_lanes=b_local, ell=ell2))
     return tuple(specs)
 
 
 def decode_state_defs(cfg, dp: int, b_local: int, max_len: int,
                       chunk: Optional[int] = None,
-                      size_classes: int = 1):
+                      size_classes: int = 1,
+                      expert_budget: Optional[int] = None):
     """ShapeDtypeStruct tree for the decode state (dry-run input).
 
     ``chunk`` is the serving engine's max tokens per step per sequence;
@@ -361,14 +413,17 @@ def decode_state_defs(cfg, dp: int, b_local: int, max_len: int,
     ``size_classes`` sets the allocation-plane class vector
     (:func:`pool_class_specs`): 1 = the single coarse KV class
     (bit-identical to the pre-classed plane), 2 adds the fine
-    bounded-state class and the ``state_tables`` register.
+    bounded-state class and the ``state_tables`` register, 3 adds the
+    read-only CLS_EXPERT class with its page payloads and per-MoE-layer
+    expert tables (``expert_budget`` pages; DESIGN.md §15).
     """
     psz = cfg.page_size
     KH, hd = cfg.n_kv_heads, cfg.hd
     dt = cfg.jdtype
     ng = cfg.n_groups
     max_pages = max(max_len // psz, 1)
-    specs = pool_class_specs(cfg, b_local, max_len, chunk, size_classes)
+    specs = pool_class_specs(cfg, b_local, max_len, chunk, size_classes,
+                             expert_budget)
     # per-shard KV page pool: enough for all local sequences at max
     # length PLUS fully-stocked lanes (3*ell per slot) — so rebalance
     # can keep every lane at >= ell free blocks even at peak occupancy
@@ -427,6 +482,20 @@ def decode_state_defs(cfg, dp: int, b_local: int, max_len: int,
     if size_classes >= 2:
         sbs = max(state_blocks_per_slot(cfg, max_len), 1)
         state_tables = jax.ShapeDtypeStruct((dp, b_local, sbs), jnp.int32)
+    expert_pages = expert_tables = None
+    if size_classes >= 3:
+        pe = cfg.d_model * cfg.d_ff
+        E = cfg.moe.num_experts
+        expert_pages = jax.ShapeDtypeStruct(
+            (dp, specs[2].num_blocks, pe), dt)
+        pat_moe, rem_moe = moe_positions(cfg)
+        expert_tables = {}
+        for pos in pat_moe:
+            expert_tables[pos] = jax.ShapeDtypeStruct(
+                (ng, dp, E, EXPERT_PPE), jnp.int32)
+        for pos in rem_moe:
+            expert_tables[pos] = jax.ShapeDtypeStruct(
+                (1, dp, E, EXPERT_PPE), jnp.int32)
 
     return DecodeState(
         kv_pages=kv_pages, rings=rings, rec=rec,
@@ -435,6 +504,8 @@ def decode_state_defs(cfg, dp: int, b_local: int, max_len: int,
         pool=pool,
         enc_kv=enc_kv,
         state_tables=state_tables,
+        expert_pages=expert_pages,
+        expert_tables=expert_tables,
     )
 
 
@@ -582,13 +653,23 @@ def _xattn_decode_chunk(cfg, lp, x, enc_kv_layer):
 
 def _mix_decode_chunk(cfg, lp, x, kind, st_kind, layer_state, state,
                       positions, tok_valid, base, lens, enc_kv_layer=None,
-                      verify=False):
+                      verify=False, expert_buf=None, expert_mask=None):
     """One layer over a chunk of up to T tokens per sequence.
 
     x: [DP, Bl, T, d].  Attention layers process the chunk in parallel
     (pages / ring written once, one chunk-attention call); recurrent
     layers scan the chunk sequentially with per-token state gating so
-    ragged tails stay inert.  Returns (x, new_layer_state).
+    ragged tails stay inert.  Returns (x, new_layer_state, moe_meta):
+    ``moe_meta`` is None for non-MoE layers, else ``(dropped [DP],
+    routed [DP, E])`` — capacity-dropped valid assignments per shard and
+    valid kept assignments per expert (the §15 meters).
+
+    ``expert_buf`` ([E, EXPERT_PPE, d*d_ff], shard-local, DP == 1) is
+    the prefetched CLS_EXPERT page gather for this layer's experts; when
+    given, the MoE FFN runs on weights reconstructed from it instead of
+    resident ``lp["ffn"]`` matrices — the SAME compute path on the same
+    values, so paged and resident serving are bit-identical.
+    ``expert_mask`` (bool [DP, Bl, E]) is the admitted expert footprint.
     """
     DP, Bl, T, d = x.shape
     kind = base_kind(kind)
@@ -657,23 +738,70 @@ def _mix_decode_chunk(cfg, lp, x, kind, st_kind, layer_state, state,
     if "xattn" in lp and enc_kv_layer is not None:
         x = _xattn_decode_chunk(cfg, lp, x, enc_kv_layer)
 
+    moe_meta = None
     if "ffn" in lp:
         h2 = apply_norm(cfg, lp["norm2"], x)
         h2f = h2.reshape(DP * Bl, T, d)
-        f = (moe_mod.moe_apply(cfg, lp["ffn"], h2f) if "router" in lp["ffn"]
-             else ffn_apply(cfg, lp["ffn"], h2f))
+        if "router" in lp["ffn"]:
+            E = cfg.moe.num_experts
+            eff = lp["ffn"]
+            if expert_buf is not None:
+                # paged experts: rebuild the stacked [E, ...] weight
+                # views from the gathered CLS_EXPERT pages and run the
+                # IDENTICAL dispatch path.  Non-resident experts gather
+                # page 0 (finite garbage) — the footprint mask keeps
+                # every valid token off them, and dropped/invalid rows
+                # contribute exactly 0 by the dispatch masking.
+                ff = cfg.d_ff
+                eff = {
+                    "router": lp["ffn"]["router"],
+                    "w_gate": expert_buf[:, 0].reshape(E, d, ff),
+                    "w_up": expert_buf[:, 1].reshape(E, d, ff),
+                    "w_down": expert_buf[:, 2].reshape(E, ff, d),
+                }
+            mask = (None if expert_mask is None
+                    else expert_mask.reshape(DP * Bl, E))
+            f, dropped, routed = moe_mod.moe_apply(
+                cfg, eff, h2f, expert_mask=mask,
+                token_valid=tok_valid.reshape(DP * Bl, T), metered=True)
+            moe_meta = (dropped.reshape(DP, Bl).sum(axis=1),
+                        routed.reshape(DP, Bl, E).sum(axis=1))
+        else:
+            f = ffn_apply(cfg, lp["ffn"], h2f)
         x = x + f.reshape(DP, Bl, T, d)
-    return x, new_state
+    return x, new_state, moe_meta
+
+
+def _gather_expert_pages(pages, tab):
+    """Gather one MoE layer slot's expert weights off the CLS_EXPERT
+    pages: pages [DP, NB2, pe] (DP == 1), tab int32 [DP, E, EXPERT_PPE]
+    -> [E, EXPERT_PPE, pe].  NULL entries clamp to page 0 — finite
+    garbage the footprint mask keeps every valid token away from."""
+    p = pages[0]
+    return p[jnp.clip(tab[0], 0, p.shape[0] - 1)]
 
 
 def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
-                         active=None, verify=False):
+                         active=None, verify=False, expert_mask=None):
     """Chunked decode/prefill: up to T tokens per sequence per call.
 
     tokens: int32 [DP, Bl, T]; lens: int32 [DP, Bl] — valid tokens per
     sequence this call (ragged tails are inert: not written to any
     cache, recurrent state gated per token).  Returns (hidden
-    [DP, Bl, T, d], new DecodeState) with seq_lens advanced by lens.
+    [DP, Bl, T, d], new DecodeState, fwd_meta) with seq_lens advanced
+    by lens; ``fwd_meta`` is a dict of int32[DP] MoE meters
+    (``moe_dropped``, ``expert_hit_pages``, ``expert_miss_pages``,
+    ``expert_prefetch_pages``) — all zeros for non-MoE configs.
+
+    ``expert_mask`` (bool [DP, Bl, E], optional) restricts each slot's
+    routing to its admitted expert footprint (applied at every MoE
+    router — paged OR resident, so the two modes stay token-identical).
+    When ``state.expert_tables`` is set (expert-paged serving), each
+    scan iteration g consumes the expert pages gathered during
+    iteration g-1 and issues the gather for group g+1's tables — the
+    prefetch has no data dependence on group g's FFN, so XLA overlaps
+    the page DMA with compute; routing for layer L+1 never waits on its
+    weight gather (DESIGN.md §15 prefetch window).
 
     Pages for the WHOLE chunk (up to ceil(T/psz) per sequence) come
     from each slot's private lane in one
@@ -725,18 +853,66 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
     st_kinds = _positions(cfg)
     has_x = cfg.arch_kind == "encdec"
 
+    paged_moe = bool(state.expert_tables)
+    if paged_moe:
+        # the paged FFN squeezes the shard axis to rebuild [E, ...]
+        # weights; under shard_map (or a dp=1 engine) DP is always 1
+        assert DP == 1, "expert paging requires shard-local DP == 1"
+    meters = {k: jnp.zeros((DP,), jnp.int32)
+              for k in ("moe_dropped", "expert_hit_pages",
+                        "expert_miss_pages", "expert_prefetch_pages")}
+
+    def absorb(meters, meta, tab):
+        """Fold one MoE layer's (dropped, routed) into the step meters;
+        ``tab`` (int32 [DP, E, EXPERT_PPE] or None) supplies residency:
+        an expert is resident iff all its pages are mapped."""
+        if meta is None:
+            return meters
+        dropped, routed = meta
+        meters = dict(meters)
+        meters["moe_dropped"] = meters["moe_dropped"] + dropped
+        if tab is not None:
+            res = (tab >= 0).all(axis=-1)                  # [DP, E]
+            touched = routed > 0
+            meters["expert_hit_pages"] = (
+                meters["expert_hit_pages"] + EXPERT_PPE * jnp.sum(
+                    touched & res, axis=-1, dtype=jnp.int32))
+            meters["expert_miss_pages"] = (
+                meters["expert_miss_pages"] + EXPERT_PPE * jnp.sum(
+                    touched & ~res, axis=-1, dtype=jnp.int32))
+        return meters
+
+    pat_moe, _rem_moe = moe_positions(cfg)
+    etab_pat = ({pos: state.expert_tables[pos] for pos in pat_moe}
+                if paged_moe else {})
+    # next-group tables: group g prefetches g+1's experts (wraps to 0)
+    etab_next = jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), etab_pat)
+    ebuf0 = {pos: _gather_expert_pages(state.expert_pages, tab[0])
+             for pos, tab in etab_pat.items()}
+
     def group_body(carry, xs):
-        x = carry
-        gparams, gstate, enc_kv_g = xs
+        x, ebuf, meters = carry
+        gparams, gstate, enc_kv_g, etab_g, etab_n = xs
         new_gstate = {}
         for j, kind in enumerate(cfg.pattern):
             pos = f"pos{j}"
-            x, ns = _mix_decode_chunk(
+            x, ns, meta = _mix_decode_chunk(
                 cfg, gparams[pos], x, kind, st_kinds[pos], gstate[pos],
                 state, positions, tok_valid, base, lens,
-                enc_kv_g if has_x else None, verify=verify)
+                enc_kv_g if has_x else None, verify=verify,
+                expert_buf=ebuf.get(pos), expert_mask=expert_mask)
             new_gstate[pos] = ns
-        return x, new_gstate
+            meters = absorb(meters, meta, etab_g.get(pos))
+        # prefetch the NEXT group's expert pages: independent of this
+        # group's FFN, so the gather DMA overlaps the compute above
+        new_ebuf = {}
+        for pos, tab_n in etab_n.items():
+            new_ebuf[pos] = _gather_expert_pages(state.expert_pages, tab_n)
+            meters = dict(meters)
+            meters["expert_prefetch_pages"] = (
+                meters["expert_prefetch_pages"] + jnp.sum(
+                    tab_n >= 0, axis=(1, 2), dtype=jnp.int32))
+        return (x, new_ebuf, meters), new_gstate
 
     if cfg.n_groups:
         gstates = {}
@@ -755,8 +931,9 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
                         state.enc_kv[1][:cfg.n_groups])
         else:
             enc_scan = (jnp.zeros((cfg.n_groups,)),) * 2  # placeholder
-        x, new_gstates = jax.lax.scan(
-            group_body, x, (params["groups"], gstates, enc_scan))
+        (x, _, meters), new_gstates = jax.lax.scan(
+            group_body, (x, ebuf0, meters),
+            (params["groups"], gstates, enc_scan, etab_pat, etab_next))
     else:
         new_gstates = {}
 
@@ -774,10 +951,17 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
         if has_x and state.enc_kv is not None:
             idx = cfg.n_groups * len(cfg.pattern) + j
             enc_l = (state.enc_kv[0][idx], state.enc_kv[1][idx])
-        x, ns = _mix_decode_chunk(cfg, lp, x, kind, st_kind, ls0, state,
-                                  positions, tok_valid, base, lens, enc_l,
-                                  verify=verify)
+        tab_r = ebuf_r = None
+        if paged_moe and pos in state.expert_tables:
+            tab_r = state.expert_tables[pos][0]
+            ebuf_r = _gather_expert_pages(state.expert_pages, tab_r)
+        x, ns, meta = _mix_decode_chunk(cfg, lp, x, kind, st_kind, ls0,
+                                        state, positions, tok_valid, base,
+                                        lens, enc_l, verify=verify,
+                                        expert_buf=ebuf_r,
+                                        expert_mask=expert_mask)
         new_rem_states[pos] = jax.tree.map(lambda a: a[None], ns)
+        meters = absorb(meters, meta, tab_r)
 
     kv_pages, rings, rec = {}, {}, {}
     for pos in state.kv_pages:
@@ -798,11 +982,13 @@ def forward_decode_chunk(cfg, params, tokens, state: DecodeState, lens,
         seq_lens=base + lens,
         pool=state.pool,
         enc_kv=state.enc_kv,
-        state_tables=state.state_tables)
+        state_tables=state.state_tables,
+        expert_pages=state.expert_pages,
+        expert_tables=state.expert_tables)
 
     if "final_norm" in params:
         x = apply_norm(cfg, params["final_norm"], x)
     elif cfg.norm == "ln_nonparam":
         from .layers import ln_nonparam
         x = ln_nonparam(x)
-    return x, state
+    return x, state, meters

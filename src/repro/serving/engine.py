@@ -80,7 +80,7 @@ import functools
 import itertools
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -89,24 +89,29 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import NULL, SimContext, WaitFreeAllocator, classed_pool, hier_pool
-from ..core.classed_pool import CLS_KV, CLS_STATE
+from ..core.classed_pool import CLS_EXPERT, CLS_KV, CLS_STATE
 from ..launch.mesh import SERVE_DP_AXIS, make_dp_mesh
 from ..launch.steps import (serve_register_pspec, serve_shardings,
                             serve_state_pspecs)
 from ..models.decode_init import empty_decode_state, empty_serve_arrays
 from ..models.layers import logits_apply, logits_argmax_chunked
-from ..models.transformer import (DecodeState, forward_decode_chunk,
-                                  state_blocks_per_slot, state_page_tokens)
+from ..models.transformer import (EXPERT_PPE, DecodeState, expert_layer_slots,
+                                  forward_decode_chunk, state_blocks_per_slot,
+                                  state_page_tokens)
 from ..runtime.fault import StepWatchdog
 from .chaos import HostCrash, PoisonedRequest
+from .expert_pages import (ExpertLedger, build_host_experts, expert_evict_step,
+                           expert_load_step, expert_ref_step,
+                           stub_expert_params)
 from .prefix_cache import (PinnedPrefixes, PrefixCache, SpeculationStore,
                            pin_id_of, pin_prefix_step, share_pinned_step,
                            share_prefix_step, unpin_step)
 from .sampling import sample_lane, sample_tokens
 from .sched import Admission, AdmissionScheduler, SchedConfig
-from .telemetry import (CTR_ALLOC, CTR_DRAIN, CTR_FREED, CTR_MARGIN,
-                        CTR_REFILL, CTR_ROLLBACK, CTR_SHARED_FREE,
-                        CTR_SPILL, N_CTR, FlightRecorder, Telemetry)
+from .telemetry import (CTR_ALLOC, CTR_DRAIN, CTR_EDROP, CTR_EHIT, CTR_EMISS,
+                        CTR_EPREF, CTR_FREED, CTR_MARGIN, CTR_REFILL,
+                        CTR_ROLLBACK, CTR_SHARED_FREE, CTR_SPILL, N_CTR,
+                        FlightRecorder, Telemetry)
 from .trace import Tracer
 
 
@@ -121,6 +126,11 @@ class Request:
     seed: int = 0
     # scheduling
     slo: str = "standard"
+    # admitted expert footprint (MoE serving, DESIGN.md §15): the
+    # experts this request may route to, enforced BEFORE top_k by the
+    # router mask in both resident and expert-paged engines (so the two
+    # are token-identical by construction).  None = all experts.
+    experts: Optional[Tuple[int, ...]] = None
     # deadline: relative seconds from submit (0 = none); the engine
     # stamps the absolute ``deadline_at`` at first submission so the
     # deadline survives preemption, crash requeue, and warm restart
@@ -218,7 +228,7 @@ STATUS_PAGES = 2     # + T: KV pages-in-use on the slot's DP shard
 
 def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
                 params, state, last_tok, out_count, budget, temps, topks,
-                seeds, prompt_toks, feed_lens, is_prompt, emit):
+                seeds, prompt_toks, feed_lens, is_prompt, emit, expert_mask):
     """One fully device-resident token-lane step (jitted per lane width
     T x the two static feature flags).
 
@@ -292,9 +302,17 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
 
     free_in = free_all(state.pool)
 
-    hidden, state = forward_decode_chunk(cfg, params, toks, state,
-                                         feed_lens, active=active,
-                                         verify=spec)
+    # ``expert_mask`` (bool[DP, Bl, E]) is a per-slot register like
+    # temps/seeds: each slot's admitted expert footprint, applied
+    # before top_k at every MoE layer.  All-True rows are bit-identical
+    # to no mask, so non-MoE and unrestricted slots pay nothing.  The
+    # forward's ``fwd_meta`` meters (capacity drops, expert page
+    # hit/miss/prefetch) ride the counter block below — same single
+    # sync, same single collective (DESIGN.md §15).
+    emask = expert_mask if cfg.moe is not None else None
+    hidden, state, fwd_meta = forward_decode_chunk(
+        cfg, params, toks, state, feed_lens, active=active, verify=spec,
+        expert_mask=emask)
     free_fwd = free_all(state.pool)
     # forward only allocates, and only in the KV class
     ctr_alloc = [free_in[c] - free_fwd[c] for c in range(C)]
@@ -451,6 +469,7 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
     # free level (host min-accumulates the low-water mark) and its
     # §4.2 never-dry margin min(private_top) - ell (>= 0 iff held)
     ctrs = []
+    zero_dp = jnp.zeros((DP,), jnp.int32)
     for c in range(C):
         hp = state.pool.classes[c]
         margin = jnp.min(hp.private_top, axis=-1) - hier_pool.lane_ell(hp)
@@ -463,6 +482,18 @@ def _serve_step(cfg, max_len, eos_id, use_sampler, spec, n_verify, axis_name,
         ctr = ctr.at[CTR_SPILL].set(ctr_spill[c])
         ctr = ctr.at[CTR_SHARED_FREE].set(hp.shared.top)
         ctr = ctr.at[CTR_MARGIN].set(margin)
+        # §15 expert-paging meters: page traffic rides the expert
+        # class's block (``_c2`` keys), capacity drops ride class 0 so
+        # resident-weight MoE engines meter them too
+        ctr = ctr.at[CTR_EHIT].set(
+            fwd_meta["expert_hit_pages"] if c == CLS_EXPERT else zero_dp)
+        ctr = ctr.at[CTR_EMISS].set(
+            fwd_meta["expert_miss_pages"] if c == CLS_EXPERT else zero_dp)
+        ctr = ctr.at[CTR_EPREF].set(
+            fwd_meta["expert_prefetch_pages"] if c == CLS_EXPERT
+            else zero_dp)
+        ctr = ctr.at[CTR_EDROP].set(
+            fwd_meta["moe_dropped"] if c == 0 else zero_dp)
         ctrs.append(ctr)
     ctr = jnp.concatenate(ctrs)                  # [C * N_CTR, DP]
     status = jnp.concatenate(
@@ -489,6 +520,8 @@ class ServingEngine:
                  sched: Optional[SchedConfig] = None,
                  mesh="auto",
                  size_classes: int = 1, degraded_pool_ok: bool = False,
+                 expert_paging: bool = False,
+                 expert_budget: Optional[int] = None,
                  journal=None, injector=None,
                  watchdog: Optional[StepWatchdog] = None,
                  clock=None, max_restarts: int = 0,
@@ -498,6 +531,21 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.dp, self.bl = dp, b_local
+        # expert-paged MoE serving (DESIGN.md §15): route expert FFN
+        # weights through the classed pool's third size class.  Gated
+        # on an actual MoE config with paged layer slots; the class
+        # vector widens to three BEFORE telemetry/pool construction so
+        # every downstream n_classes consumer (counter blocks, specs,
+        # max_live) sees the expert class.
+        self._elayer_n = expert_layer_slots(cfg)
+        self.expert_paging = bool(
+            (expert_paging or int(size_classes) > CLS_EXPERT)
+            and cfg.moe is not None and self._elayer_n > 0)
+        if self.expert_paging:
+            size_classes = max(int(size_classes), CLS_EXPERT + 1)
+        else:
+            # the expert class is meaningless without paged MoE slots
+            size_classes = min(int(size_classes), CLS_EXPERT)
         # observability plane (DESIGN.md §13): ONE facade every
         # subsystem emits through.  engine.stats stays a live property
         # view of telemetry.counters, so pre-§13 callers (and the
@@ -529,9 +577,27 @@ class ServingEngine:
             mesh = make_dp_mesh(dp)
         self.mesh: Optional[Mesh] = mesh
         self._axis = SERVE_DP_AXIS if mesh is not None else None
-        self.state = empty_decode_state(cfg, dp, b_local, max_len,
-                                        chunk=lane_tokens,
-                                        size_classes=size_classes)
+        # CLS_EXPERT page budget: the cache capacity the host ledger
+        # enforces per shard (full residency when unset — paging then
+        # costs nothing and misses only on first touch).  The pool
+        # itself is provisioned at budget + lane stock (pool_class_
+        # specs), so admission respecting the budget keeps every bulk
+        # grant inside the §4.2 slack.
+        self.expert_budget = 0
+        if self.expert_paging:
+            assert dp == 1 or self.mesh is not None, (
+                "expert paging needs shard-local DP == 1: run dp=1 or "
+                "give each shard its own device (mesh='auto')")
+            full = self._elayer_n * cfg.moe.num_experts * EXPERT_PPE
+            self.expert_budget = int(
+                expert_budget
+                or (sched.expert_budget if sched is not None else 0)
+                or full)
+        self.state = empty_decode_state(
+            cfg, dp, b_local, max_len, chunk=lane_tokens,
+            size_classes=size_classes,
+            expert_budget=(self.expert_budget if self.expert_paging
+                           else None))
         self.n_classes = len(self.state.pool.classes)
         assert self.telemetry.n_classes == self.n_classes, (
             "telemetry n_classes must match the engine's size-class "
@@ -548,12 +614,18 @@ class ServingEngine:
         self.temps = jnp.zeros((dp, b_local), jnp.float32)
         self.topks = jnp.zeros((dp, b_local), jnp.int32)
         self.seeds = jnp.zeros((dp, b_local), jnp.int32)
+        # per-slot admitted expert footprint (bool[DP, Bl, E]) — a
+        # register like temps/seeds, applied pre-top_k in the jitted
+        # step.  All-True (the reset value) is bit-identical to no mask,
+        # so non-MoE and unrestricted requests pay nothing.
+        E_reg = cfg.moe.num_experts if cfg.moe is not None else 1
+        self.expert_mask = jnp.ones((dp, b_local, E_reg), bool)
         if self.mesh is not None:
             reg_ns = NamedSharding(self.mesh, self._rspec)
             (self.last_tok, self.out_count, self.budget, self.temps,
-             self.topks, self.seeds) = jax.device_put(
+             self.topks, self.seeds, self.expert_mask) = jax.device_put(
                 (self.last_tok, self.out_count, self.budget, self.temps,
-                 self.topks, self.seeds), reg_ns)
+                 self.topks, self.seeds, self.expert_mask), reg_ns)
         self.greedy = greedy
         # sequences can never outgrow the page table (maxp * psz tokens,
         # < max_len when max_len is not a page multiple); done-detection
@@ -579,6 +651,11 @@ class ServingEngine:
         # forfeit for that class.
         max_live = [b_local * maxp] + [b_local * self._state_blocks] * (
             self.n_classes - 1)
+        if self.n_classes > CLS_EXPERT:
+            # worst-case live CLS_EXPERT pages == the admission budget
+            # (the host ledger never loads past it; DESIGN.md §15), so
+            # the class's §4.2 slack is exactly its lane stock
+            max_live[CLS_EXPERT] = self.expert_budget
         specs = tuple(
             classed_pool.ClassSpec(
                 page_size=(cfg.page_size if c == CLS_KV
@@ -616,7 +693,7 @@ class ServingEngine:
             (sampler, spec): wrap(
                 functools.partial(_serve_step, cfg, self.capacity, eos,
                                   sampler, spec, self._spec_T, self._axis),
-                in_specs=(P(), S) + (R,) * 10,
+                in_specs=(P(), S) + (R,) * 11,
                 out_specs=(S, R, R, P()),
                 donate=(1, 2, 3))
             for sampler in (False, True) for spec in (False, True)}
@@ -630,6 +707,42 @@ class ServingEngine:
         if self.state.state_tables is not None:
             self._alloc_state = wrap(_alloc_state_step, in_specs=(S, R),
                                      out_specs=S, donate=(0,))
+
+        # expert-paged weight plane (DESIGN.md §15): keep the full
+        # expert stacks on HOST, stub the device param leaves to [..,1,1]
+        # placeholders (the HBM the paging buys), and manage device
+        # residency through CLS_EXPERT pages + the host ledger.  Load /
+        # evict / refcount steps are admission-time traffic — jitted,
+        # but never inside _serve_step, so the one-sync/one-collective
+        # step shape is untouched.
+        self.expert_ledger: Optional[ExpertLedger] = None
+        self._host_experts = None
+        self._slot_experts: Dict[int, tuple] = {}
+        self._elayer_slots: List[Tuple[str, int]] = []
+        self._fp_masks: Dict[tuple, Any] = {}
+        if self.expert_paging:
+            self._host_experts = build_host_experts(cfg, params)
+            self.params = params = stub_expert_params(params)
+            self.expert_ledger = ExpertLedger(dp, self.expert_budget)
+            self._elayer_slots = [
+                (pos, g)
+                for pos in sorted(self.state.expert_tables)
+                for g in range(self.state.expert_tables[pos].shape[0])]
+            self._eload = {
+                pos: wrap(functools.partial(expert_load_step, pos),
+                          in_specs=(S, R, P(), P("dp"), P(), P()),
+                          out_specs=S, donate=(0,))
+                for pos in self.state.expert_tables}
+            self._eevict = {
+                pos: wrap(functools.partial(expert_evict_step, pos),
+                          in_specs=(S, P("dp"), P(), P()),
+                          out_specs=S, donate=(0,))
+                for pos in self.state.expert_tables}
+            self._eref = {
+                free: wrap(functools.partial(expert_ref_step, free),
+                           in_specs=(S, P(), P("dp")),
+                           out_specs=S, donate=(0,))
+                for free in (False, True)}
 
         # prefix sharing: only sound when the whole decode state is
         # paged (ring / recurrent layers would need donor state at the
@@ -748,6 +861,8 @@ class ServingEngine:
             pages_local=int(self.pages_local),
             lane_ell=classed_pool.lane_ell(self.state.pool, CLS_KV),
             size_classes=self.n_classes,
+            expert_paging=self.expert_paging,
+            expert_budget=self.expert_budget,
             speculate=self.speculate, arch=getattr(cfg, "name", "?"))
 
     @property
@@ -858,6 +973,17 @@ class ServingEngine:
         self._tr_begin("request", req.rid, slo=req.slo,
                        prompt_len=len(req.prompt))
         self.tracer.instant("submit", tid=req.rid, slo=req.slo)
+        if self.expert_paging:
+            # a footprint that cannot fit the expert budget even on an
+            # empty shard is unservable — typed rejection, not a wedge
+            need = (EXPERT_PPE * len(self._elayer_slots)
+                    * len(self._footprint_of(req)))
+            if need > self.expert_budget:
+                self.scheduler._count("rejected")
+                req.rejected = "too_large"
+                self._jrec("reject", rid=req.rid, reason="too_large")
+                self._trace_terminal(req, "too_large")
+                return Admission(False, "too_large")
         adm = self.scheduler.submit(req, self.est_pages(req))
         if not adm.accepted:
             self._jrec("reject", rid=req.rid, reason=adm.reason)
@@ -900,6 +1026,168 @@ class ServingEngine:
 
     def pinned_pages(self) -> int:
         return self.pins.total_pages() if self.pins is not None else 0
+
+    # ------------------------------------------- expert paging (§15)
+    def _footprint_of(self, req: Request) -> tuple:
+        """A request's admitted expert footprint (sorted, deduplicated;
+        all experts when unrestricted)."""
+        E = self.cfg.moe.num_experts
+        if req.experts is None:
+            return tuple(range(E))
+        return tuple(sorted({int(e) for e in req.experts
+                             if 0 <= int(e) < E}))
+
+    def _fp_entry(self, fp: tuple):
+        """(masks, row) for a footprint: the per-table bool[S, E] masks
+        the bulk ref step consumes and the bool[E] register row.
+        Cached — footprints repeat (that is the skew admission
+        learns)."""
+        ent = self._fp_masks.get(fp)
+        if ent is None:
+            E = self.cfg.moe.num_experts
+            row = np.zeros(E, bool)
+            row[list(fp)] = True
+            masks = {
+                pos: jnp.asarray(
+                    np.broadcast_to(row, (tab.shape[0], E)).copy())
+                for pos, tab in self.state.expert_tables.items()}
+            ent = self._fp_masks[fp] = (masks, row)
+        return ent
+
+    def est_expert_pages(self, req: Request, shard: int) -> int:
+        """Load-aware CLS_EXPERT page demand of a request ON A SHARD:
+        0 for every (layer slot, expert) already resident there,
+        EXPERT_PPE per cold one.  This is the per-shard skew signal the
+        scheduler's third admission dimension consumes."""
+        if self.expert_ledger is None:
+            return 0
+        led = self.expert_ledger
+        fp = self._footprint_of(req)
+        cold = sum(1 for pos, g in self._elayer_slots for e in fp
+                   if not led.resident(shard, pos, g, e))
+        return EXPERT_PPE * cold
+
+    def expert_headroom(self, shard: int) -> int:
+        """Admissible CLS_EXPERT pages on a shard: budget minus
+        resident pages, plus what LRU eviction of COLD experts (zero
+        active references) can reclaim.  Hot experts are working set,
+        not cache — they never count as reclaimable."""
+        if self.expert_ledger is None:
+            return 1 << 30
+        led = self.expert_ledger
+        return (self.expert_budget - led.pages_on(shard)
+                + led.evictable_pages(shard))
+
+    def expert_pages_resident(self, shard: int) -> int:
+        return (0 if self.expert_ledger is None
+                else self.expert_ledger.pages_on(shard))
+
+    def _load_expert(self, d: int, pos: str, g: int, e: int) -> None:
+        w = self._host_experts[pos][g, e]
+        counts = np.zeros((self.dp, self.bl), np.int32)
+        counts[d, 0] = EXPERT_PPE
+        oh = np.zeros(self.dp, bool)
+        oh[d] = True
+        self.state = self._eload[pos](
+            self.state, jnp.asarray(counts), jnp.asarray(w),
+            jnp.asarray(oh), jnp.int32(g), jnp.int32(e))
+        self.expert_ledger.add(d, pos, g, e)
+        self.telemetry.inc("expert_load_pages", EXPERT_PPE)
+
+    def _evict_expert(self, key) -> None:
+        d, pos, g, e = key
+        self.expert_ledger.remove(key)
+        oh = np.zeros(self.dp, bool)
+        oh[d] = True
+        self.state = self._eevict[pos](
+            self.state, jnp.asarray(oh), jnp.int32(g), jnp.int32(e))
+        self.telemetry.inc("expert_evictions")
+        self.telemetry.inc("expert_evict_pages", EXPERT_PPE)
+
+    def _admit_experts(self, slot: int, req: Request) -> None:
+        """Bind the slot's expert footprint: set the router-mask
+        register (both engines — token identity is by construction),
+        and in paged mode make every footprint expert resident (LRU
+        eviction for room; the scheduler's placement already verified
+        headroom) and take one batch reference per expert."""
+        if self.cfg.moe is None:
+            return
+        d, b = divmod(slot, self.bl)
+        fp = self._footprint_of(req)
+        masks, row = (self._fp_entry(fp) if self.expert_ledger is not None
+                      else (None, None))
+        if row is None:
+            E = self.cfg.moe.num_experts
+            row = np.zeros(E, bool)
+            row[list(fp)] = True
+        self.expert_mask = self.expert_mask.at[d, b].set(
+            jnp.asarray(row))
+        if self.expert_ledger is None:
+            return
+        led = self.expert_ledger
+        keys = [(d, pos, g, e) for pos, g in self._elayer_slots
+                for e in fp]
+        for key in keys:
+            if led.resident(*key):
+                led.touch(key)
+                self.telemetry.inc("expert_admit_hits")
+                continue
+            self.telemetry.inc("expert_admit_misses")
+            while (led.pages_on(d) + EXPERT_PPE > self.expert_budget):
+                victim = led.lru(d)
+                assert victim is not None, (
+                    "expert admission over budget with nothing "
+                    "evictable — scheduler headroom check violated")
+                self._evict_expert(victim)
+            self._load_expert(*key)
+        # ONE bulk addref over the whole footprint (admission-time
+        # traffic, off the serve step)
+        oh = np.zeros(self.dp, bool)
+        oh[d] = True
+        self.state = self._eref[False](self.state, masks,
+                                       jnp.asarray(oh))
+        for key in keys:
+            led.addref(key)
+        self._slot_experts[slot] = (d, fp)
+        peak = max(led.pages_on(s) for s in range(self.dp))
+        self.telemetry.set_max("expert_pages_resident_peak", peak)
+
+    def _release_experts(self, slot: int, device: bool = True) -> None:
+        """Drop the slot's expert references and reset its router-mask
+        row to all-True (BOTH modes — the reset keeps resident and
+        paged engines consistent, preserving token identity across a
+        slot's whole lifecycle).  ``device=False`` on shard loss: the
+        pages died with the shard, only host bookkeeping remains."""
+        if self.cfg.moe is None:
+            return
+        d, b = divmod(slot, self.bl)
+        self.expert_mask = self.expert_mask.at[d, b].set(True)
+        ent = self._slot_experts.pop(slot, None)
+        if ent is None or self.expert_ledger is None:
+            return
+        d, fp = ent
+        if device:
+            masks, _ = self._fp_entry(fp)
+            oh = np.zeros(self.dp, bool)
+            oh[d] = True
+            self.state = self._eref[True](self.state, masks,
+                                          jnp.asarray(oh))
+        for pos, g in self._elayer_slots:
+            for e in fp:
+                self.expert_ledger.deref((d, pos, g, e))
+
+    def flush_experts(self) -> int:
+        """Evict every COLD resident expert (drained-engine teardown /
+        leak audits — with active references nothing moves).  Returns
+        the number of experts evicted."""
+        if self.expert_ledger is None:
+            return 0
+        n = 0
+        for key in [k for k, ent in self.expert_ledger.entries.items()
+                    if ent["batch"] == 0]:
+            self._evict_expert(key)
+            n += 1
+        return n
 
     def admit(self, req: Request, match, shard: int) -> int:
         """Place a request on ``shard`` (mechanism only — the scheduler
@@ -945,6 +1233,7 @@ class ServingEngine:
         self.temps = self.temps.at[d, b].set(float(req.temperature))
         self.topks = self.topks.at[d, b].set(int(req.top_k))
         self.seeds = self.seeds.at[d, b].set(int(req.seed))
+        self._admit_experts(slot, req)
         if req.temperature > 0:
             self._sampling_slots.add(slot)
         self.telemetry.inc("admitted")
@@ -970,6 +1259,7 @@ class ServingEngine:
         mask = np.zeros((self.dp, self.bl), bool)
         mask[d, b] = True
         self.state, _ = self._release(self.state, jnp.asarray(mask))
+        self._release_experts(slot)
         self.pending_tokens.pop(slot, None)
         self._fed.pop(slot, None)
         self._pinned_slots.discard(slot)
@@ -998,6 +1288,7 @@ class ServingEngine:
         mask = np.zeros((self.dp, self.bl), bool)
         mask[d, b] = True
         self.state, _ = self._release(self.state, jnp.asarray(mask))
+        self._release_experts(slot)
         self.pending_tokens.pop(slot, None)
         self._fed.pop(slot, None)
         self._pinned_slots.discard(slot)
@@ -1045,6 +1336,7 @@ class ServingEngine:
             req = self.active.pop(slot)
             # host bookkeeping only: no device release — the shard that
             # owned the pages is gone
+            self._release_experts(slot, device=False)
             self.pending_tokens.pop(slot, None)
             self._fed.pop(slot, None)
             self._pinned_slots.discard(slot)
@@ -1061,6 +1353,8 @@ class ServingEngine:
             self._tr_end("active", req.rid)
             self._jrec("preempt", rid=req.rid)
             self.scheduler.requeue_front(req)
+        if self.expert_ledger is not None:
+            self.expert_ledger.drop_shard(shard)
         # retire the dead shard's slots from service entirely
         self._free_slots = deque(
             s for s in self._free_slots if s // self.bl != shard)
@@ -1354,7 +1648,7 @@ class ServingEngine:
             self.params, self.state, self.last_tok, self.out_count,
             self.budget, self.temps, self.topks, self.seeds,
             jnp.asarray(prompt_toks), jnp.asarray(feed_lens),
-            jnp.asarray(is_prompt), jnp.asarray(emit))
+            jnp.asarray(is_prompt), jnp.asarray(emit), self.expert_mask)
         self.telemetry.inc("steps")
         self.telemetry.observe_hist("chunk_hist", T)
         self._fire("dispatched")
@@ -1423,6 +1717,7 @@ class ServingEngine:
                 req.finished_at = now
                 self._latencies.append(now - req.submitted_at)
                 self.active.pop(slot)
+                self._release_experts(slot)
                 self.pending_tokens.pop(slot, None)
                 self._pinned_slots.discard(slot)
                 self._sampling_slots.discard(slot)
@@ -1577,6 +1872,17 @@ class ServingEngine:
         if dead_state.state_tables is not None:
             state = state._replace(state_tables=jnp.full_like(
                 dead_state.state_tables, NULL))
+        if dead_state.expert_tables is not None:
+            # the reconcile passed no keep/pin rows for CLS_EXPERT, so
+            # every expert page was reclaimed — NULL the tables, clear
+            # the host ledger, and let the next admissions reload
+            # (read-only weights re-materialize from the host store)
+            state = state._replace(expert_tables={
+                pos: jnp.full_like(tab, NULL)
+                for pos, tab in dead_state.expert_tables.items()})
+            if self.expert_ledger is not None:
+                self.expert_ledger.clear()
+            self._slot_experts.clear()
         if self.mesh is not None:
             state = jax.device_put(
                 state, serve_shardings(self.mesh, self._pspecs))
@@ -1586,15 +1892,16 @@ class ServingEngine:
         self.temps = jnp.zeros((self.dp, self.bl), jnp.float32)
         self.topks = jnp.zeros((self.dp, self.bl), jnp.int32)
         self.seeds = jnp.zeros((self.dp, self.bl), jnp.int32)
+        self.expert_mask = jnp.ones_like(self.expert_mask)
         if self.pin_tables is not None:
             self.pin_tables = (jnp.asarray(pin_np) if pin_np is not None
                                else jnp.full_like(self.pin_tables, NULL))
         if self.mesh is not None:
             reg_ns = NamedSharding(self.mesh, self._rspec)
             (self.last_tok, self.out_count, self.budget, self.temps,
-             self.topks, self.seeds) = jax.device_put(
+             self.topks, self.seeds, self.expert_mask) = jax.device_put(
                 (self.last_tok, self.out_count, self.budget, self.temps,
-                 self.topks, self.seeds), reg_ns)
+                 self.topks, self.seeds, self.expert_mask), reg_ns)
             if self.pin_tables is not None:
                 self.pin_tables = jax.device_put(self.pin_tables, reg_ns)
         self.pending_tokens.clear()
@@ -1627,6 +1934,10 @@ class ServingEngine:
         self.tracer.begin("recover", kind="inplace")
         for slot in list(self.active):
             req = self.active.pop(slot)
+            # host bookkeeping only — the device is mid-operation, so
+            # per-slot expert deref cannot be trusted; the reconcile
+            # below reclaims every expert page regardless
+            self._release_experts(slot, device=False)
             self.pending_tokens.pop(slot, None)
             self._fed.pop(slot, None)
             self._pinned_slots.discard(slot)

@@ -1,0 +1,266 @@
+"""Expert-paged MoE serving: the CLS_EXPERT plane (DESIGN.md §15).
+
+Expert FFN weights are read-only pages in the classed pool's third
+size class.  Residency is managed with the SAME addref/free_shared
+protocol pinned prefixes use (serving/prefix_cache.py): an expert is a
+read-only shared object whose refcount counts its owners —
+
+* **one cache-owned reference** held by the host :class:`ExpertLedger`
+  while the expert is resident (the pin analogue: the ledger's
+  reference keeps the pages off the free stacks between requests);
+* **one reference per active slot** whose admitted expert footprint
+  contains the expert (registered in bulk at admission by
+  :func:`expert_ref_step`, dropped host-side after the step's status
+  sync when the slot releases — never inside ``_serve_step``, which
+  stays one sync + one collective).
+
+Eviction (:func:`expert_evict_step`) is exactly ``unpin_step`` shaped:
+drop the cache's references, NULL the table row.  Pages some active
+slot still references only decrement — the conservation invariants of
+the refcount protocol carry over unchanged.  The ledger runs LRU over
+*cold* experts (zero batch references), mirroring
+:class:`~repro.serving.prefix_cache.PinnedPrefixes`.
+
+Weight layout: one expert = ``EXPERT_PPE`` pages (w_gate, w_up,
+w_down), each ``d_model * d_ff`` elements flat.  Loads pull the pages
+from the class's shared stack in one bulk
+:func:`~repro.core.classed_pool.alloc_from_shared_dp` grant —
+admission-time traffic, off the per-token hot path, covered by the
+class's §4.2 slack as long as admission respects the page budget
+(``ServingEngine.expert_headroom``).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import classed_pool
+from ..core.block_pool import NULL
+from ..core.classed_pool import CLS_EXPERT
+from ..models.transformer import EXPERT_PPE, moe_positions
+
+
+# ------------------------------------------------------------ host weights
+
+def build_host_experts(cfg, params) -> Dict[str, np.ndarray]:
+    """Host-side numpy copy of every MoE layer slot's expert weights,
+    keyed by expert-table position: ``pos -> float[S, E, EXPERT_PPE,
+    d_model*d_ff]`` (S = n_groups for pattern positions, 1 for
+    remainder).  This is the backing store expert pages load from —
+    kept on host exactly so the device copy can be paged."""
+    pat, rem = moe_positions(cfg)
+    pe = cfg.d_model * cfg.d_ff
+    E = cfg.moe.num_experts
+    out: Dict[str, np.ndarray] = {}
+    for pos in pat:
+        ffn = params["groups"][pos]["ffn"]
+        mats = [np.asarray(ffn[k]) for k in ("w_gate", "w_up", "w_down")]
+        G = mats[0].shape[0]
+        out[pos] = np.stack([m.reshape(G, E, pe) for m in mats], axis=2)
+    for pos in rem:
+        j = pos[len("rem"):]
+        ffn = params["rem"][f"pos{j}"]["ffn"]
+        mats = [np.asarray(ffn[k]) for k in ("w_gate", "w_up", "w_down")]
+        out[pos] = np.stack([m.reshape(E, pe) for m in mats], axis=1)[None]
+    return out
+
+
+def stub_expert_params(params):
+    """Replace every MoE position's expert-weight leaves with [.., 1, 1]
+    placeholders (leading stack dims kept so the group scan still
+    slices them).  The paged FFN reconstructs its weights from
+    CLS_EXPERT pages and never reads these leaves — keeping the dense
+    [E, d, f] stacks resident would forfeit the HBM the paging buys."""
+    def stub_ffn(ffn):
+        out = dict(ffn)
+        for k in ("w_gate", "w_up", "w_down"):
+            w = ffn[k]
+            out[k] = jnp.zeros(w.shape[:-2] + (1, 1), w.dtype)
+        return out
+
+    def stub_layers(layers):
+        out = dict(layers)
+        for pos, lp in layers.items():
+            if (isinstance(lp, dict) and isinstance(lp.get("ffn"), dict)
+                    and "router" in lp["ffn"]):
+                lp = dict(lp)
+                lp["ffn"] = stub_ffn(lp["ffn"])
+                out[pos] = lp
+        return out
+
+    new = dict(params)
+    if isinstance(params.get("groups"), dict):
+        new["groups"] = stub_layers(params["groups"])
+    if isinstance(params.get("rem"), dict):
+        new["rem"] = stub_layers(params["rem"])
+    return new
+
+
+# ------------------------------------------------------------ device steps
+
+def expert_load_step(pos, state, counts, w, shard_oh, g, e):
+    """Jit-able: load one expert's pages on one shard.
+
+    Pulls ``EXPERT_PPE`` pages from CLS_EXPERT's shared stack (bulk
+    grant, like prefill loading), writes the expert's flat weight pages
+    into them, and maps the ``(group g, expert e)`` row of ``pos``'s
+    expert table.  counts: int32[DP, Bl] (EXPERT_PPE at (shard, 0),
+    else 0); w: [EXPERT_PPE, page_elems] replicated; shard_oh:
+    bool[DP]; g/e: int32 scalars (dynamic — one compile per table
+    position, not per expert).  The caller (ExpertLedger-driven
+    admission) has verified budget headroom, so the grant cannot dry
+    the shared stack below its §4.2 slack (DESIGN.md §15).
+    """
+    pool, ids = classed_pool.alloc_from_shared_dp(
+        state.pool, CLS_EXPERT, counts, EXPERT_PPE)
+    pids = ids[:, 0, :]                                    # [DP, PPE]
+    pages = state.expert_pages                             # [DP, NB, pe]
+    nb = pages.shape[1]
+    tgt = jnp.where(shard_oh[:, None] & (pids >= 0), pids, nb)
+
+    def write(pg, t):                                      # [NB, pe], [PPE]
+        return pg.at[t].set(w.astype(pg.dtype), mode="drop")
+
+    pages = jax.vmap(write)(pages, tgt)
+    tab = state.expert_tables[pos]                         # [S, DP, E, PPE]
+    S, _, E, _ = tab.shape
+    sel = ((jnp.arange(S, dtype=jnp.int32)[:, None, None] == g)
+           & shard_oh[None, :, None]
+           & (jnp.arange(E, dtype=jnp.int32)[None, None, :] == e))
+    tab = jnp.where(sel[..., None], pids[None, :, None, :], tab)
+    tables = dict(state.expert_tables)
+    tables[pos] = tab
+    return state._replace(pool=pool, expert_pages=pages,
+                          expert_tables=tables)
+
+
+def expert_evict_step(pos, state, shard_oh, g, e):
+    """Jit-able eviction (the ``unpin_step`` analogue): drop the
+    cache-owned references on one expert's pages and NULL its table
+    row.  Pages an active slot still references only decrement
+    (``free_shared`` on a refcount >= 2 page); a page reaching zero
+    returns to the shard's shared stack."""
+    tab = state.expert_tables[pos]                         # [S, DP, E, PPE]
+    S, DP, E, _ = tab.shape
+    sel = ((jnp.arange(S, dtype=jnp.int32)[:, None, None] == g)
+           & shard_oh[None, :, None]
+           & (jnp.arange(E, dtype=jnp.int32)[None, None, :] == e))
+    ids = jnp.where(sel[..., None], tab, NULL)
+    pool = classed_pool.free_shared_dp(
+        state.pool, CLS_EXPERT, jnp.moveaxis(ids, 1, 0).reshape(DP, -1))
+    tab = jnp.where(sel[..., None], NULL, tab)
+    tables = dict(state.expert_tables)
+    tables[pos] = tab
+    return state._replace(pool=pool, expert_tables=tables)
+
+
+def expert_ref_step(free, state, masks, shard_oh):
+    """Jit-able bulk reference traffic for one slot's whole expert
+    footprint: addref (admission) or free_shared (release) every page
+    of every selected expert across every table position, in ONE call.
+
+    masks: dict pos -> bool[S, E] (the slot's footprint, broadcast over
+    groups); shard_oh: bool[DP].  ``free`` is static (two compiles).
+    NULL table entries pass through both paths as no-ops, so a
+    footprint larger than the resident set is harmless — but admission
+    loads every footprint expert first, so that never happens outside
+    fault paths."""
+    cols = []
+    for pos in sorted(state.expert_tables):
+        tab = state.expert_tables[pos]                     # [S, DP, E, PPE]
+        DP = tab.shape[1]
+        m = masks[pos][:, None, :] & shard_oh[None, :, None]  # [S, DP, E]
+        ids = jnp.where(m[..., None], tab, NULL)
+        cols.append(jnp.moveaxis(ids, 1, 0).reshape(DP, -1))
+    ids = jnp.concatenate(cols, axis=1)
+    op = classed_pool.free_shared_dp if free else classed_pool.addref_dp
+    pool = op(state.pool, CLS_EXPERT, ids)
+    return state._replace(pool=pool)
+
+
+# ------------------------------------------------------------- host ledger
+
+class ExpertLedger:
+    """Host-side ledger of CLS_EXPERT residency (the
+    :class:`~repro.serving.prefix_cache.PinnedPrefixes` analogue).
+
+    Pure bookkeeping — pages live behind the expert tables and the
+    pool refcounts; this class answers the policy questions admission
+    asks: is (shard, pos, group, expert) resident, how many pages does
+    the cache hold on shard d, how many of those are *evictable* (zero
+    batch references — no active slot routes through them), and who is
+    the LRU cold expert.  ``batch`` mirrors the per-slot references the
+    pool carries; an expert with ``batch > 0`` is never an eviction
+    candidate (its pages are live working set, not cache)."""
+
+    def __init__(self, n_shards: int, budget_pages: int):
+        self.n_shards = int(n_shards)
+        self.budget = int(budget_pages)
+        #: (shard, pos, g, e) -> {"batch": int, "used": clock}
+        self.entries: Dict[Tuple[int, str, int, int], dict] = {}
+        self._clock = itertools.count()
+
+    @staticmethod
+    def key(shard: int, pos: str, g: int, e: int):
+        return (int(shard), pos, int(g), int(e))
+
+    # -- queries --------------------------------------------------------
+    def resident(self, shard: int, pos: str, g: int, e: int) -> bool:
+        return self.key(shard, pos, g, e) in self.entries
+
+    def pages_on(self, shard: int) -> int:
+        return EXPERT_PPE * sum(1 for k in self.entries if k[0] == shard)
+
+    def evictable_pages(self, shard: int) -> int:
+        return EXPERT_PPE * sum(1 for k, e in self.entries.items()
+                                if k[0] == shard and e["batch"] == 0)
+
+    def lru(self, shard: int):
+        """LRU *cold* expert on a shard (None if every resident expert
+        has active batch references)."""
+        cands = [(e["used"], k) for k, e in self.entries.items()
+                 if k[0] == shard and e["batch"] == 0]
+        return min(cands)[1] if cands else None
+
+    def resident_count(self) -> int:
+        return len(self.entries)
+
+    # -- mutation -------------------------------------------------------
+    def add(self, shard: int, pos: str, g: int, e: int) -> None:
+        self.entries[self.key(shard, pos, g, e)] = {
+            "batch": 0, "used": next(self._clock)}
+
+    def remove(self, key) -> None:
+        ent = self.entries.pop(key)
+        assert ent["batch"] == 0, "evicting an expert with active refs"
+
+    def addref(self, key) -> None:
+        ent = self.entries[key]
+        ent["batch"] += 1
+        ent["used"] = next(self._clock)
+
+    def deref(self, key) -> None:
+        ent = self.entries.get(key)
+        if ent is not None and ent["batch"] > 0:
+            ent["batch"] -= 1
+
+    def touch(self, key) -> None:
+        if key in self.entries:
+            self.entries[key]["used"] = next(self._clock)
+
+    def drop_shard(self, shard: int) -> None:
+        """A dead shard's expert pages are unreachable — they leave the
+        ledger with the shard (engine.lose_shard)."""
+        for k in [k for k in self.entries if k[0] == shard]:
+            del self.entries[k]
+
+    def clear(self) -> None:
+        """Crash recovery: the pool reconcile reclaimed every
+        CLS_EXPERT page (no keep rows survive a recovery), so the
+        ledger starts empty and experts reload on the next admission."""
+        self.entries.clear()

@@ -103,6 +103,14 @@ class SchedConfig:
     #: in BOTH classes, since the classes never exchange blocks
     #: (DESIGN.md §14)
     state_budget: int = 0
+    #: admissible CLS_EXPERT pages per shard in an expert-paged config
+    #: (0 = the engine default, full residency).  The third budget
+    #: dimension — but load-aware, not worst-case-static: a request
+    #: whose expert footprint is already resident on a shard costs 0
+    #: pages there, a cold fan-out costs EXPERT_PPE pages per expert
+    #: per MoE layer slot, and the engine nets out what LRU eviction of
+    #: cold experts can reclaim (engine.expert_headroom; DESIGN.md §15)
+    expert_budget: int = 0
     preemption: bool = True
     max_preemptions_per_tick: int = 2
     #: pinned-prefix pages budget per shard (0 disables pinning)
@@ -172,8 +180,8 @@ class AdmissionScheduler:
         # preemptions are counted by the mechanism (engine.preempt /
         # engine.stats) — one ledger, not two that can drift
         self.stats = {"deferred": 0, "rejected": 0, "pins_evicted": 0,
-                      "defer_slots": 0, "defer_pages": 0, "shed": 0,
-                      "retried": 0}
+                      "defer_slots": 0, "defer_pages": 0,
+                      "defer_experts": 0, "shed": 0, "retried": 0}
         #: set by the engine: the §13 Telemetry facade; every counter
         #: below mirrors into its typed ``sched_*`` namespace
         self.telemetry = None
@@ -426,6 +434,21 @@ class AdmissionScheduler:
                      or est_state <= self.state_headroom(s))]
         if not fits:
             return None, None, "pages"
+        # load-aware expert admission (DESIGN.md §15): the cost of a
+        # request's expert footprint is per-shard — 0 where the experts
+        # are hot (resident), EXPERT_PPE pages per cold (pos, group,
+        # expert) slot — and headroom counts LRU-evictable cold experts
+        # as reclaimable.  Skew in the footprint mix is therefore what
+        # the scheduler learns: hot-expert traffic admits freely while
+        # cold fan-outs wait for (or migrate to) a shard with paging
+        # room, keeping every bulk load inside the class budget §4.2
+        # is provisioned for.
+        est_exp = getattr(engine, "est_expert_pages", None)
+        if est_exp is not None:
+            fits = [s for s in fits
+                    if est_exp(req, s) <= engine.expert_headroom(s)]
+            if not fits:
+                return None, None, "experts"
         best = None                       # (n_tokens, shard, match)
         for s in fits:
             m = engine.prefix_match(req, shard=s)

@@ -65,15 +65,27 @@ CTR_SPILL = 5        # released pages that overflowed a full lane stack
 # Gauges (host min-accumulates across steps):
 CTR_SHARED_FREE = 6  # shared free-stack size after the step (low-water)
 CTR_MARGIN = 7       # §4.2 never-dry margin min(private_top) - ell
-N_CTR = 8
+# Expert-paged MoE rows (DESIGN.md §15).  The rows exist in every
+# class's block (the block stays class-major rectangular); the engine
+# emits the page rows on the expert class (`_c2` keys) and the drop row
+# on class 0 (unsuffixed key) so non-paged MoE engines meter drops too:
+CTR_EHIT = 8         # expert pages routed-to AND resident this step
+CTR_EMISS = 9        # expert pages routed-to but NOT resident — the
+#                      admission contract makes this an invariant 0;
+#                      any nonzero is a residency bug detector
+CTR_EPREF = 10       # expert pages prefetched one layer ahead
+CTR_EDROP = 11       # MoE capacity-overflow dropped valid token slots
+N_CTR = 12
 
 #: counter-block row names, index-aligned with the CTR_* constants
 CTR_NAMES = ("alloc_pages", "freed_pages", "spec_rollback_pages",
              "rebalance_drain_pages", "rebalance_refill_pages",
-             "spill_pages", "shared_free", "never_dry_margin")
+             "spill_pages", "shared_free", "never_dry_margin",
+             "expert_hit_pages", "expert_miss_pages",
+             "expert_prefetch_pages", "moe_dropped_tokens")
 #: which rows accumulate by summation (the rest are min-gauges)
 CTR_SUM_ROWS = (CTR_ALLOC, CTR_FREED, CTR_ROLLBACK, CTR_DRAIN, CTR_REFILL,
-                CTR_SPILL)
+                CTR_SPILL, CTR_EHIT, CTR_EMISS, CTR_EPREF, CTR_EDROP)
 CTR_MIN_ROWS = (CTR_SHARED_FREE, CTR_MARGIN)
 
 
@@ -140,10 +152,19 @@ COUNTER_SCHEMA: Dict[str, str] = {
     "trie_misses": "prefix-trie lookups that found nothing",
     # size-classed allocation plane (DESIGN.md §14)
     "state_blocks_granted": "bounded-state blocks granted at admission",
+    # expert-paged MoE serving (DESIGN.md §15)
+    "expert_admit_hits": "footprint experts already resident at admission",
+    "expert_admit_misses": "footprint experts loaded cold at admission",
+    "expert_load_pages": "expert pages loaded into the pool (3/expert)",
+    "expert_evictions": "experts evicted from the ledger LRU",
+    "expert_evict_pages": "expert pages freed by ledger eviction",
+    "expert_pages_resident_peak": "peak expert pages resident (ledger)",
+    "sched_defer_experts": "deferrals blocked on the expert-page budget",
 }
 
 #: counters that keep a running max instead of a sum
-MAX_COUNTERS = ("alloc_steps_max", "pages_peak")
+MAX_COUNTERS = ("alloc_steps_max", "pages_peak",
+                "expert_pages_resident_peak")
 
 HIST_SCHEMA = ("chunk_hist", "accept_hist")
 
@@ -247,6 +268,15 @@ class Telemetry:
         m = self.low[ctr_key(CTR_SHARED_FREE, cls)]
         return None if m is None else int(m.min())
 
+    def expert_hit_rate(self) -> Optional[float]:
+        """Admission-time expert residency hit rate (None before any
+        MoE admission).  Derived from the host admission counters, not
+        the in-step CTR_EMISS row — that row is an invariant detector
+        (residency is guaranteed by admission, so it must stay 0)."""
+        h = self.counters["expert_admit_hits"]
+        m = self.counters["expert_admit_misses"]
+        return None if h + m == 0 else h / (h + m)
+
     # ------------------------------------------------------------ exports
     def snapshot(self) -> dict:
         """JSON-ready snapshot: scalar counters, histograms, per-shard
@@ -264,6 +294,7 @@ class Telemetry:
                           for k, v in self.low.items()},
             "never_dry_margin_min": self.never_dry_margin_min(),
             "shared_free_low_water": self.shared_low_water(),
+            "expert_hit_rate": self.expert_hit_rate(),
         }
 
     def render_prom(self, prefix: str = "repro") -> str:
@@ -302,6 +333,11 @@ class Telemetry:
         if m is not None:
             emit("never_dry_margin_min_all", "worst §4.2 margin, any "
                  "shard any step", "gauge", [((), m)])
+        r = self.expert_hit_rate()
+        if r is not None:
+            emit("expert_hit_rate", "fraction of footprint experts "
+                 "already resident at admission", "gauge",
+                 [((), round(r, 6))])
         return "\n".join(lines) + "\n"
 
 

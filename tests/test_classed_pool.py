@@ -49,9 +49,13 @@ from repro.serving.engine import Request, ServingEngine
 from repro.serving.telemetry import (CTR_ALLOC, CTR_FREED, N_CTR, ctr_key)
 
 DP = 2
-# two deliberately different classes: coarse (KV-like) and fine
+# three deliberately different classes: coarse (KV-like), fine
+# (bounded-state), and the read-only expert-weight class (§15) — the
+# storm drives all three, so every op mix, torn window, and crash/
+# reconcile below exercises the expert class too
 SPECS = (ClassSpec(page_size=8, num_blocks=48, num_lanes=3, ell=2),
-         ClassSpec(page_size=2, num_blocks=30, num_lanes=3, ell=2))
+         ClassSpec(page_size=2, num_blocks=30, num_lanes=3, ell=2),
+         ClassSpec(page_size=64, num_blocks=36, num_lanes=3, ell=2))
 LANES, KMAX = 3, 3
 
 
@@ -244,7 +248,7 @@ def test_classed_storm_conforms_and_linearizes(seed):
     # the class-resolved checkers accept the whole tagged history
     assert check_classed_batch_history(storm.history) == []
     by_cls = split_history_by_class(storm.history)
-    assert set(by_cls) <= {0, 1}
+    assert set(by_cls) <= {0, 1, 2}
 
 
 def test_classed_storm_crash_reconcile_then_conforms():
@@ -317,6 +321,11 @@ def test_checker_flags_cross_class_theft():
     h[1].meta["cls"] = 0
     assert check_cross_class_frees(h) == []
     assert check_classed_batch_history(h) == []
+    # the expert class (cls 2) is covered by the same pass: a KV grant
+    # freed through CLS_EXPERT's allocator is theft too
+    h[1].meta["cls"] = 2
+    errs = check_cross_class_frees(h)
+    assert errs and "cross-class theft" in errs[0]
 
 
 # ==================================================== serving identity
@@ -423,13 +432,13 @@ def test_validate_plan_catches_tight_config():
 
 def test_classed_validate_specs_names_failing_class():
     ok = classed_pool.validate_specs(
-        SPECS, max_live=[30, 12], degraded_ok=False)
-    assert ok == (True, True)
+        SPECS, max_live=[30, 12, 16], degraded_ok=False)
+    assert ok == (True, True, True)
     with pytest.raises(ValueError, match="class 1"):
-        classed_pool.validate_specs(SPECS, max_live=[30, 29])
-    flags = classed_pool.validate_specs(SPECS, max_live=[30, 29],
+        classed_pool.validate_specs(SPECS, max_live=[30, 29, 16])
+    flags = classed_pool.validate_specs(SPECS, max_live=[30, 29, 16],
                                         degraded_ok=True)
-    assert flags == (True, False)
+    assert flags == (True, False, True)
 
 
 def test_engine_validates_pool_plan(engine_setup):

@@ -554,6 +554,7 @@ def test_speculative_step_one_sync_one_collective(engine_setup):
         jnp.zeros((4, 2, eng._spec_T), jnp.int32),
         jnp.zeros((4, 2), jnp.int32),
         jnp.zeros((4, 2), bool), jnp.zeros((4, 2), bool),
+        eng.expert_mask,
     ).compile().as_text()
     n_gather = hlo.count("all-gather(") + hlo.count("all-gather-start(")
     n_other = sum(hlo.count(c) for c in

@@ -80,7 +80,8 @@ class Recount:
         eng = self.eng
 
         def wrapped(params, state, last_tok, out_count, budget, temps,
-                    topks, seeds, prompt_toks, feed_lens, is_prompt, emit):
+                    topks, seeds, prompt_toks, feed_lens, is_prompt, emit,
+                    expert_mask):
             self._pending = {
                 "feed": np.asarray(feed_lens).copy(),
                 "is_prompt": np.asarray(is_prompt).copy(),
@@ -88,7 +89,7 @@ class Recount:
             }
             return fn(params, state, last_tok, out_count, budget, temps,
                       topks, seeds, prompt_toks, feed_lens, is_prompt,
-                      emit)
+                      emit, expert_mask)
         return wrapped
 
     def _wrap_flight(self):
@@ -557,6 +558,7 @@ def test_one_collective_per_step_with_telemetry(engine_setup):
         jnp.zeros((4, 2, eng.chunk), jnp.int32),
         jnp.zeros((4, 2), jnp.int32),
         jnp.zeros((4, 2), bool), jnp.zeros((4, 2), bool),
+        eng.expert_mask,
     ).compile().as_text()
     n_gather = hlo.count("all-gather(") + hlo.count("all-gather-start(")
     n_other = sum(hlo.count(c) for c in
